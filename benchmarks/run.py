@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--large", action="store_true",
+                    help="include the 1e8-dimension χ instances (minutes)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table5,fig4,fig5,table3,table4,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import tables
+
+    benches = {
+        "table1": lambda: tables.table1_chi(large=args.large),
+        "table2": tables.table2_model_params,
+        "table5": lambda: tables.table5_chi(large=args.large),
+        "fig4": tables.fig4_scaling_model,
+        "fig5": tables.fig5_panel_speedup,
+        "table3": tables.table3_amortization,
+        "table4": tables.table4_fd_end_to_end,
+        "roofline": tables.roofline_table,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    rows = []
+    for name, fn in benches.items():
+        if name in only:
+            rows.extend(fn())
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) cell in an isolated
+subprocess (compile memory isolation), with resume from the JSONL cache."""
+import json, os, subprocess, sys, time
+
+CACHE = os.path.join(os.path.dirname(__file__), "_cache", "dryrun.jsonl")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+def done_keys():
+    keys = set()
+    if os.path.exists(CACHE):
+        for line in open(CACHE):
+            try:
+                r = json.loads(line)
+            except Exception:
+                continue
+            if r.get("status") in ("ok", "skip"):
+                keys.add((r["arch"], r["shape"], r.get("mesh", "")))
+    return keys
+
+def main():
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.configs import ARCHS, get_config
+    from repro.models.config import applicable_shapes
+    cells = []
+    for multi in (False, True):
+        mesh = "2x16x16" if multi else "16x16"
+        for arch in ARCHS:
+            for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                cells.append((arch, shape, mesh, multi))
+        for eig in ("exciton200", "hubbard16"):
+            for layout in ("stack", "panel", "pillar"):
+                cells.append((eig, f"fd_iter[{layout}" , mesh, multi, layout))
+    done = done_keys()
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    for cell in cells:
+        if len(cell) == 4:
+            arch, shape, mesh, multi = cell
+            if any(k[0] == arch and k[1] == shape and k[2] == mesh for k in done):
+                print(f"skip-cached {arch} {shape} {mesh}", flush=True)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                   "--shape", shape, "--out", CACHE]
+        else:
+            arch, shape_prefix, mesh, multi, layout = cell
+            if any(k[0] == arch and k[1].startswith(shape_prefix) and k[2] == mesh for k in done):
+                print(f"skip-cached {arch} {layout} {mesh}", flush=True)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--eigen", arch,
+                   "--layout", layout, "--out", CACHE]
+        if multi:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"RUN {' '.join(cmd[3:])}", flush=True)
+        r = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True, text=True,
+                           timeout=3000)
+        if r.returncode != 0:
+            print(f"FAIL ({time.time()-t0:.0f}s): {r.stdout[-1500:]}\n{r.stderr[-3000:]}", flush=True)
+            with open(CACHE, "a") as f:
+                rec = {"arch": arch, "shape": cell[1] if len(cell)==4 else f"fd_iter[{layout}]",
+                       "mesh": mesh, "status": "fail",
+                       "error": (r.stderr or r.stdout)[-800:]}
+                f.write(json.dumps(rec) + "\n")
+        else:
+            print(f"OK ({time.time()-t0:.0f}s)", flush=True)
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,295 @@
+"""Benchmark bodies — one function per paper table/figure.
+
+Each returns a list of CSV rows (name, us_per_call, derived) and prints a
+human-readable table. χ sweeps are cached in benchmarks/_cache/chi.json
+because the exact large-instance counts take minutes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+CACHE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "_cache")
+os.makedirs(CACHE_DIR, exist_ok=True)
+_CHI_CACHE = os.path.join(CACHE_DIR, "chi.json")
+
+PAPER_TABLE1 = {  # matrix -> {Np: (chi13, chi2)}
+    "Exciton,L=75": {2: (0.01, 0.01), 4: (0.05, 0.04), 8: (0.11, 0.09),
+                     16: (0.21, 0.20), 32: (0.42, 0.41), 64: (0.85, 0.83)},
+    "Exciton,L=200": {2: (0.00, 0.00), 4: (0.02, 0.01), 8: (0.04, 0.03),
+                      16: (0.08, 0.07), 32: (0.16, 0.15), 64: (0.32, 0.31)},
+    "Hubbard,14,7": {2: (0.54, 0.54), 4: (1.51, 1.02), 8: (2.52, 1.53),
+                     16: (3.37, 2.07), 32: (4.17, 2.65), 64: (5.58, 3.19)},
+    "Hubbard,16,8": {2: (0.53, 0.53), 4: (1.50, 1.01), 8: (2.50, 1.51),
+                     16: (3.37, 2.03), 32: (4.21, 2.61), 64: (5.67, 3.16)},
+}
+PAPER_TABLE5 = {
+    "SpinChainXXZ,24,12": {2: (0.52, 0.52), 4: (1.50, 1.01), 8: (2.51, 1.52),
+                           16: (3.40, 2.00), 32: (4.18, 2.49), 64: (5.15, 3.05)},
+    "TopIns,100": {2: (0.02, 0.02), 4: (0.08, 0.06), 8: (0.16, 0.14),
+                   16: (0.32, 0.30), 32: (0.64, 0.62), 64: (1.28, 1.26)},
+}
+
+
+def _family(label: str):
+    from repro.matrices import Exciton, Hubbard, SpinChainXXZ, TopIns
+
+    kind, *args = label.split(",")
+    if kind == "Exciton":
+        return Exciton(L=int(args[0].split("=")[-1]))
+    if kind == "Hubbard":
+        return Hubbard(int(args[0]), int(args[1]))
+    if kind == "SpinChainXXZ":
+        return SpinChainXXZ(int(args[0]), int(args[1]))
+    return TopIns(int(args[0]))
+
+
+def _chi_cached(label: str, Nps=(2, 4, 8, 16, 32, 64)) -> dict:
+    cache = {}
+    if os.path.exists(_CHI_CACHE):
+        cache = json.load(open(_CHI_CACHE))
+    key = label
+    if key in cache and all(str(n) in cache[key] for n in Nps):
+        return {int(k): tuple(v) for k, v in cache[key].items()}
+    from repro.core.metrics import chi_metrics
+
+    fam = _family(label)
+    out = {}
+    for n in Nps:
+        m = chi_metrics(fam, n)
+        out[n] = (m.chi1, m.chi2, m.chi3)
+    cache[key] = {str(k): list(v) for k, v in out.items()}
+    json.dump(cache, open(_CHI_CACHE, "w"))
+    return out
+
+
+def _chi_table(paper: dict, labels: list[str], title: str):
+    rows = []
+    print(f"\n=== {title} (exact χ from sparsity patterns vs published) ===")
+    print(f"{'matrix':24s} {'Np':>4s} {'chi13':>7s} {'paper':>7s} {'chi2':>7s} {'paper':>7s}")
+    worst = 0.0
+    t0 = time.perf_counter()
+    for label in labels:
+        chis = _chi_cached(label)
+        for n, (c1, c2, c3) in sorted(chis.items()):
+            p13, p2 = paper[label][n]
+            dev = max(abs(round(c1, 2) - p13), abs(round(c2, 2) - p2))
+            worst = max(worst, dev)
+            print(f"{label:24s} {n:4d} {c1:7.2f} {p13:7.2f} {c2:7.2f} {p2:7.2f}")
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append((title.replace(" ", "_"), us, f"max_dev={worst:.2f}"))
+    return rows
+
+
+def table1_chi(large: bool = False):
+    labels = ["Exciton,L=75", "Hubbard,14,7", "Hubbard,16,8"]
+    if large:
+        labels.insert(1, "Exciton,L=200")
+    return _chi_table(PAPER_TABLE1, labels, "Table 1 chi metrics")
+
+
+def table5_chi(large: bool = False):
+    labels = ["TopIns,100"]
+    if large:
+        labels.append("SpinChainXXZ,24,12")
+    return _chi_table(PAPER_TABLE5, labels, "Table 5 chi metrics (appendix)")
+
+
+def table2_model_params():
+    """Table 2/6: machine-model constants — verify the fitted regime the
+    paper reports (b_m/b_c ≈ 15–20, κ > 5 with irregular access higher)
+    and that the v5e target sits in the same regime (DESIGN.md §3)."""
+    from repro.core import perf_model as pm
+
+    rows = []
+    print("\n=== Table 2/6 machine models ===")
+    print(f"{'model':14s} {'b_m GB/s':>9s} {'b_c GB/s':>9s} {'b_m/b_c':>8s} {'kappa':>6s}")
+    fits = [("Exciton75", 53.3, 2.82, 7.30), ("Exciton200", 53.3, 3.10, 7.30),
+            ("Hubbard14", 53.3, 2.82, 10.0), ("Hubbard16", 53.3, 2.54, 10.0),
+            ("TopIns100", 53.3, 3.10, 8.28), ("SpinChain24", 53.3, 3.52, 12.2)]
+    for name, bm, bc, kappa in fits:
+        print(f"{name:14s} {bm:9.1f} {bc:9.2f} {bm/bc:8.1f} {kappa:6.1f}")
+        assert 10 < bm / bc < 22 and kappa > 5
+    v = pm.TPU_V5E
+    print(f"{'tpu-v5e':14s} {v.b_m/1e9:9.1f} {v.b_c/1e9:9.2f} "
+          f"{v.b_m/v.b_c:8.1f} {v.kappa:6.1f}  <- same trade-off regime")
+    rows.append(("table2_regime", 0.0,
+                 f"v5e_ratio={v.b_m/v.b_c:.1f} (paper cluster 15-20)"))
+    return rows
+
+
+def fig4_scaling_model():
+    """Fig. 4: inverse Chebyshev-iteration time vs N_p from Eq. 12 with the
+    paper's fitted machine constants (Table 2) and the exact χ values."""
+    from repro.core import perf_model as pm
+
+    setups = [
+        ("Exciton,L=75", 16, 7.30, 2.82e9, 64),
+        ("Hubbard,14,7", 8, 10.0, 2.82e9, 64),
+    ]
+    rows = []
+    print("\n=== Fig. 4 scaling model (Eq. 12, Meggie constants) ===")
+    print(f"{'matrix':16s} {'Np':>4s} {'T_model[s]':>11s} {'speedup':>8s} {'Pi':>6s} {'Pi_bound':>8s}")
+    for label, S_d, kappa, b_c, n_b in setups:
+        fam = _family(label)
+        m = pm.MachineModel("meggie-fit", b_m=53.3e9, b_c=b_c, kappa=kappa)
+        chis = _chi_cached(label)
+        nnzr = fam.build_csr().n_nzr if fam.D < 2_000_000 else 2 * 9.0
+        t1 = pm.cheb_iter_time(m, D=fam.D, N_p=1, n_b=n_b, chi=0.0,
+                               n_nzr=nnzr, S_d=S_d)
+        for n in (1, 2, 4, 8, 16, 32, 64):
+            chi = chis[n][0] if n > 1 else 0.0
+            t = pm.cheb_iter_time(m, D=fam.D, N_p=n, n_b=n_b, chi=chi,
+                                  n_nzr=nnzr, S_d=S_d)
+            eff = t1 / (n * t)
+            bound = pm.parallel_efficiency_bound(m, chis[n][2] if n > 1 else 0.0)
+            print(f"{label:16s} {n:4d} {t:11.4f} {t1/t:8.2f} {eff:6.2f} {bound:8.2f}")
+            if n == 64:
+                rows.append((f"fig4_{label}", t * 1e6, f"eff64={eff:.2f}"))
+    return rows
+
+
+def fig5_panel_speedup():
+    """Fig. 5: panel-layout speedup s(N_col) from Eq. 15 with exact χ."""
+    from repro.core import perf_model as pm
+
+    rows = []
+    print("\n=== Fig. 5 panel speedup (Eq. 15 asymptote + full Eq. 12) ===")
+    print(f"{'matrix':16s} {'P':>4s} {'Ncol':>5s} {'s_eq15':>7s} "
+          f"{'s_full':>7s} {'s_v5e':>7s} {'paper':>6s}")
+    paper_fig5 = {("Exciton,L=75", 32): 2.69, ("Hubbard,14,7", 32): 4.98}
+    for label, P in (("Exciton,L=75", 32), ("Hubbard,14,7", 32)):
+        chis = _chi_cached(label)
+        S_d = 16 if "Exciton" in label else 8
+        n_nzr = 9.0 if "Exciton" in label else 14.0
+        meg = pm.MachineModel("meggie-fit", b_m=53.3e9, b_c=2.82e9,
+                              kappa=7.3 if "Exciton" in label else 10.0)
+        for n_col in (1, 2, 4, 8, 16, 32):
+            n_row = P // n_col
+            chi_panel = chis[n_row][0] if n_row > 1 else 0.0
+            s_m = pm.panel_speedup(meg, chis[P][0], chi_panel)
+            s_f = pm.layout_speedup_full(meg, chi_P=chis[P][0],
+                                         chi_panel=chi_panel, n_nzr=n_nzr,
+                                         S_d=S_d, n_b_stack=64, n_col=n_col)
+            s_t = pm.layout_speedup_full(pm.TPU_V5E, chi_P=chis[P][0],
+                                         chi_panel=chi_panel, n_nzr=n_nzr,
+                                         S_d=S_d, n_b_stack=64, n_col=n_col)
+            pap = paper_fig5.get((label, P)) if n_col == P else None
+            print(f"{label:16s} {P:4d} {n_col:5d} {s_m:7.2f} {s_f:7.2f} "
+                  f"{s_t:7.2f} {pap if pap else '':>6}")
+            if n_col == P:
+                rows.append((f"fig5_{label}_pillar", 0.0,
+                             f"s_full={s_f:.2f} paper={pap}"))
+    return rows
+
+
+def table3_amortization():
+    """Table 3: speedup S(n) including redistribution cost (Eqs. 19-21)."""
+    from repro.core import perf_model as pm
+
+    rows = []
+    print("\n=== Table 3 amortization (model, exact χ) ===")
+    hdr = f"{'matrix':16s} {'Ncol':>5s} {'s':>6s} {'r':>6s} {'n*':>6s}" + \
+        "".join(f" S(n={n:d})" for n in (10, 20, 30, 50, 100))
+    print(hdr)
+    paper_vals = {  # (matrix, Ncol) -> paper (s, n*)
+        ("Hubbard,14,7", 32): (4.98, 2),
+        ("Exciton,L=75", 32): (2.69, 11),
+    }
+    for label, P, kappa in (("Exciton,L=75", 32, 7.3), ("Hubbard,14,7", 32, 10.0)):
+        chis = _chi_cached(label)
+        m = pm.MachineModel("meggie-fit", b_m=53.3e9, b_c=2.82e9, kappa=kappa)
+        for n_col in (2, 8, 32):
+            n_row = P // n_col
+            chi_panel = chis[n_row][0] if n_row > 1 else 0.0
+            s = pm.panel_speedup(m, chis[P][0], chi_panel)
+            r = pm.redistribution_factor(m, n_col, chi_panel)
+            n_star = pm.break_even_degree(s, r)
+            Ss = [pm.amortized_speedup(s, r, n) for n in (10, 20, 30, 50, 100)]
+            line = f"{label:16s} {n_col:5d} {s:6.2f} {r:6.1f} {n_star:6.1f}" + \
+                "".join(f" {x:7.2f}" for x in Ss)
+            print(line)
+            if (label, n_col) in paper_vals:
+                ps, pn = paper_vals[(label, n_col)]
+                rows.append((f"table3_{label}_pillar", 0.0,
+                             f"s={s:.2f}(paper {ps}) nstar={n_star:.0f}(paper {pn})"))
+    return rows
+
+
+def table4_fd_end_to_end():
+    """Table 4 (reduced scale): full FD solves with layout bookkeeping,
+    validated against dense eigh."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import FDConfig, FilterDiag, make_solver_mesh
+    from repro.matrices import Hubbard, SpinChainXXZ
+
+    rows = []
+    print("\n=== Table 4 FD end-to-end (reduced scale, CPU) ===")
+    print(f"{'matrix':22s} {'target':>8s} {'spmvs':>8s} {'conv':>5s} "
+          f"{'iters':>6s} {'redists':>8s} {'redist%':>8s} {'us/spmv':>9s}")
+    cases = [
+        (SpinChainXXZ(12, 6), "interior"),
+        (Hubbard(8, 4, U=4.0, ranpot=1.0), "interior"),
+    ]
+    for mat, kind in cases:
+        csr = mat.build_csr()
+        w = np.linalg.eigvalsh(csr.to_dense())
+        tau = float(w[len(w) // 2])
+        mesh = make_solver_mesh(1, 1)
+        cfg = FDConfig(n_target=4, n_search=16, target=tau, tol=1e-8,
+                       max_iters=25)
+        with mesh:
+            res = FilterDiag(csr, mesh, cfg).solve()
+        ok = all(np.abs(w - ev).min() < 1e-7 for ev in res.eigenvalues[: res.n_converged])
+        assert ok, "FD eigenvalues deviate from dense eigh"
+        us = res.wall_time / max(res.total_spmvs, 1) * 1e6
+        pct = 100 * res.redist_time / max(res.wall_time, 1e-9)
+        print(f"{mat.describe()[:22]:22s} {tau:8.3f} {res.total_spmvs:8d} "
+              f"{res.n_converged:5d} {res.iterations:6d} "
+              f"{res.redistributions:8d} {pct:7.1f}% {us:9.1f}")
+        rows.append((f"table4_{mat.name}", us,
+                     f"conv={res.n_converged} iters={res.iterations} "
+                     f"redists={res.redistributions}"))
+    return rows
+
+
+def roofline_table():
+    """§Roofline source: per-cell terms from the dry-run caches.
+
+    Rows marked ``*opt`` come from the §Perf-optimized build
+    (dryrun_opt.jsonl) and are shown next to their paper-faithful
+    baselines."""
+    path = os.path.join(CACHE_DIR, "dryrun.jsonl")
+    rows = []
+    if not os.path.exists(path):
+        print("\n(no dryrun cache yet — run benchmarks/sweep_dryrun.py)")
+        return rows
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") == "ok":
+            recs[(r["arch"], r["shape"], r["mesh"], "")] = r
+    opt_path = os.path.join(CACHE_DIR, "dryrun_opt.jsonl")
+    if os.path.exists(opt_path):
+        for line in open(opt_path):
+            r = json.loads(line)
+            if r.get("status") == "ok":
+                recs[(r["arch"], r["shape"], r["mesh"], "*opt")] = r
+    print("\n=== Roofline terms per dry-run cell (16x16 mesh) ===")
+    print(f"{'arch':22s} {'shape':28s} {'comp[ms]':>9s} {'mem[ms]':>9s} "
+          f"{'coll[ms]':>9s} {'dom':>6s} {'useful':>7s}")
+    for (arch, shape, mesh, tag), r in sorted(recs.items()):
+        if mesh != "16x16":
+            continue
+        print(f"{arch:22s} {shape + tag:28s} {r['t_compute_s']*1e3:9.1f} "
+              f"{r['t_memory_s']*1e3:9.1f} {r['t_collective_s']*1e3:9.1f} "
+              f"{r['dominant'][:6]:>6s} {r['useful_flops_ratio']:7.2f}")
+    n_ok = sum(1 for k in recs if not k[3])
+    n_opt = sum(1 for k in recs if k[3])
+    rows.append(("roofline_cells", 0.0, f"cells_ok={n_ok} optimized={n_opt}"))
+    return rows

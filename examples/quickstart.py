@@ -1,0 +1,43 @@
+"""Quickstart: filter diagonalization of a spin chain, validated vs eigh.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Computes 4 interior eigenpairs of the XXZ chain (D = 3432) with the plain
+stack layout (single device) and checks them against dense eigh.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import FDConfig, FilterDiag, make_solver_mesh
+from repro.matrices import SpinChainXXZ
+
+
+def main():
+    mat = SpinChainXXZ(n_sites=14, n_up=7)
+    csr = mat.build_csr()
+    print(f"matrix: {mat.describe()}  nnz/row={csr.n_nzr:.1f}")
+
+    w = np.linalg.eigvalsh(csr.to_dense())
+    tau = float(w[len(w) // 2])  # an *interior* target — the hard case
+    print(f"target tau = {tau:+.6f} (median of {len(w)} eigenvalues)")
+
+    mesh = make_solver_mesh(1, 1)
+    cfg = FDConfig(n_target=4, n_search=16, target=tau, tol=1e-9, max_iters=30)
+    with mesh:
+        res = FilterDiag(csr, mesh, cfg).solve(verbose=True)
+
+    print(f"\nconverged {res.n_converged} eigenpairs in {res.iterations} "
+          f"iterations ({res.total_spmvs} SpMVs)")
+    for ev, r in zip(res.eigenvalues[:4], res.residuals[:4]):
+        true = w[np.argmin(np.abs(w - ev))]
+        print(f"  lambda = {ev:+.12f}  (eigh {true:+.12f}, "
+              f"delta {abs(ev-true):.2e}, residual {r:.2e})")
+    assert all(np.abs(w - ev).min() < 1e-8 for ev in res.eigenvalues[:4])
+    print("OK — matches dense eigh")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving demo: prefill a batch of prompts, decode with ring
+caches (sliding-window + global layers on the hymba hybrid).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import (init_train_state, make_decode_step,
+                          make_prefill_step)
+from repro.optim import AdamWConfig
+
+
+def main():
+    cfg = get_smoke_config("hymba-1.5b")
+    print(f"serving {cfg.name}: window={cfg.sliding_window}, "
+          f"global layers={cfg.global_attn_layers}, ssm_state={cfg.ssm_state}")
+    params, _ = init_train_state(cfg, AdamWConfig(), jax.random.PRNGKey(0))
+    B, prompt_len, gen_len, max_len = 4, 24, 24, 64
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, prompt_len)), jnp.int32)
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    logits, state = prefill(params, {"tokens": prompts})
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [np.asarray(tok)]
+    import time
+
+    t0 = time.perf_counter()
+    for pos in range(prompt_len, prompt_len + gen_len):
+        logits, state = decode(params, state, tok, jnp.asarray(pos, jnp.int32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+    dt = time.perf_counter() - t0
+    gen = np.stack(out, axis=1)
+    print(f"generated {gen_len} tokens x {B} sequences in {dt:.2f}s "
+          f"({B*gen_len/dt:.0f} tok/s, ring caches crossed the "
+          f"{cfg.sliding_window}-token window {'' if prompt_len+gen_len > cfg.sliding_window else 'not '}boundary)")
+    for b in range(2):
+        print(f"  seq{b}: {gen[b][:12].tolist()} ...")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Sharded checkpointing with elastic restart."""
+from .checkpoint import CheckpointManager, restore, save
+
+__all__ = ["CheckpointManager", "save", "restore"]

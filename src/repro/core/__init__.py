@@ -1,0 +1,27 @@
+"""Core — the paper's contribution: two orthogonal layers of parallelism
+for block eigensolvers (layouts, χ metrics, distributed SpMV, Chebyshev
+filter, communication-avoiding orthogonalization, redistribution, the FD
+driver, and the analytic performance model)."""
+from .layouts import Layout, make_solver_mesh, panel, pillar, stack
+from .metrics import ChiMetrics, chi_bruteforce, chi_from_nvc, chi_metrics, chi_sweep
+from .spmv import DistEll, Partition, build_dist_ell, make_fused_cheb_step, make_spmv
+from .chebyshev import chebyshev_filter, kpm_moments, scale_params
+from .filters import FilterPoly, build_filter, degree_for, jackson_damping, window_coeffs
+from .orthogonalize import make_gram, make_svqb, make_tsqr
+from .redistribute import make_redistribute, redistribution_volume
+from .lanczos import lanczos_interval
+from .filter_diag import FDConfig, FDResult, FilterDiag
+from . import perf_model
+
+__all__ = [
+    "Layout", "make_solver_mesh", "panel", "pillar", "stack",
+    "ChiMetrics", "chi_bruteforce", "chi_from_nvc", "chi_metrics", "chi_sweep",
+    "DistEll", "Partition", "build_dist_ell", "make_fused_cheb_step", "make_spmv",
+    "chebyshev_filter", "kpm_moments", "scale_params",
+    "FilterPoly", "build_filter", "degree_for", "jackson_damping", "window_coeffs",
+    "make_gram", "make_svqb", "make_tsqr",
+    "make_redistribute", "redistribution_volume",
+    "lanczos_interval",
+    "FDConfig", "FDResult", "FilterDiag",
+    "perf_model",
+]

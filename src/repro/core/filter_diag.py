@@ -1,0 +1,271 @@
+"""Filter diagonalization driver — paper Algorithm 1.
+
+Orchestrates the two orthogonal layers of parallelism:
+
+  stack layout : orthogonalization (TSQR), Ritz extraction, convergence
+  panel layout : Chebyshev polynomial filter (bulk of all SpMVs)
+  steps 7 / 9  : explicit redistribution between the two layouts
+
+The driver is layout-generic: with ``n_col = 1`` it degenerates to the
+classic single-layer stack algorithm (the paper's baseline); with
+``n_col = P`` the filter runs in the pillar layout (comm-free SpMV).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import Mesh
+
+from . import filters
+from .chebyshev import chebyshev_filter, scale_params
+from .lanczos import lanczos_interval
+from .layouts import Layout, panel, stack
+from .orthogonalize import make_gram, make_svqb, make_tsqr
+from .redistribute import make_redistribute
+from .spmv import DistEll, Partition, build_dist_ell, make_spmv
+
+__all__ = ["FDConfig", "FDResult", "FilterDiag"]
+
+
+@dataclasses.dataclass
+class FDConfig:
+    n_target: int = 10          # N_t requested eigenpairs
+    n_search: int = 40          # N_s search vectors (N_s >> N_t)
+    target: float = 0.0         # τ
+    tol: float = 1e-10          # residual convergence threshold (paper)
+    max_iters: int = 50
+    lanczos_steps: int = 30
+    search_expand: float = 1.5  # search-interval growth factor
+    degree_cap: int = 200_000
+    sharpness: float = 6.0
+    ortho: str = "tsqr"         # or "svqb"
+    redist_impl: str = "explicit"  # or "gspmd"
+    dtype: str = "float64"
+    seed: int = 7
+
+
+@dataclasses.dataclass
+class FDResult:
+    eigenvalues: np.ndarray
+    residuals: np.ndarray
+    n_converged: int
+    iterations: int
+    total_spmvs: int
+    redistributions: int
+    wall_time: float
+    redist_time: float
+    history: list
+
+
+class FilterDiag:
+    """Filter diagonalization on a (row x col) solver mesh.
+
+    ``matrix`` may be a MatrixFamily, a CSR, or a pre-built pair of
+    DistEll operators via ``from_operators``.
+    """
+
+    def __init__(self, matrix, mesh: Mesh, cfg: FDConfig,
+                 panel_layout: Layout | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.panel_layout = panel_layout or panel(mesh)
+        # stack shards D over all axes, panel-row axes slowest ("matching")
+        self.stack_layout = Layout(
+            "stack", self.panel_layout.dist_axes + self.panel_layout.bundle_axes, ()
+        )
+        self.P_total = self.stack_layout.n_row(mesh)
+        self.N_row = self.panel_layout.n_row(mesh)
+        self.N_col = self.panel_layout.n_col(mesh)
+        if cfg.n_search % max(self.N_col, 1):
+            raise ValueError("n_search must be divisible by N_col")
+        dt = jnp.dtype(cfg.dtype)
+        if getattr(matrix, "is_complex", False) and not jnp.issubdtype(dt, jnp.complexfloating):
+            dt = jnp.dtype("complex128" if dt == jnp.float64 else "complex64")
+        self.dtype = dt
+        D = matrix.shape[0] if hasattr(matrix, "shape") else matrix.D
+        self.D = D
+        # one padded extent for both layouts
+        self.D_pad = -(-D // self.P_total) * self.P_total
+        self.ell_stack = build_dist_ell(matrix, self.P_total, dtype=dt, d_pad=self.D_pad)
+        if self.N_col > 1:
+            self.ell_panel = build_dist_ell(matrix, self.N_row, dtype=dt, d_pad=self.D_pad)
+        else:
+            self.ell_panel = self.ell_stack
+        self._build_fns(matrix)
+
+    # ------------------------------------------------------------------
+    def _build_fns(self, matrix):
+        mesh, cfg = self.mesh, self.cfg
+        self.spmv_stack = make_spmv(mesh, self.stack_layout, self.ell_stack)
+        self.spmv_panel = (
+            make_spmv(mesh, self.panel_layout, self.ell_panel)
+            if self.N_col > 1 else self.spmv_stack
+        )
+        if cfg.ortho == "tsqr":
+            self._tsqr = make_tsqr(mesh, self.stack_layout)
+            self.orthogonalize = jax.jit(lambda V: self._tsqr(V)[0])
+        else:
+            self.orthogonalize = jax.jit(make_svqb(mesh, self.stack_layout))
+        self.gram = make_gram(mesh, self.stack_layout)
+        self.to_panel, self.to_stack = make_redistribute(
+            mesh, self.stack_layout, self.panel_layout, impl=cfg.redist_impl
+        )
+        self.to_panel = jax.jit(self.to_panel)
+        self.to_stack = jax.jit(self.to_stack)
+
+        def ritz(V):
+            AV = self.spmv_stack(V)
+            H = self.gram(V, AV)  # [Ns, Ns] replicated
+            H = 0.5 * (H + jnp.conj(H.T))
+            theta, Y = jnp.linalg.eigh(H)
+            # residual norms: || AV y - θ V y ||
+            AVY = AV @ Y.astype(AV.dtype)
+            VY = V @ Y.astype(V.dtype)
+            Rm = AVY - VY * theta[None, :].astype(VY.dtype)
+            res = jnp.sqrt(jnp.sum(jnp.abs(Rm) ** 2, axis=0))
+            return theta, Y, res, VY
+
+        self.ritz = jax.jit(ritz)
+        self._cheb_cache: dict[int, Callable] = {}
+
+    def _cheb(self, degree: int):
+        if degree not in self._cheb_cache:
+            spmv = self.spmv_panel
+
+            def run(V, mu, alpha, beta):
+                return chebyshev_filter(spmv, mu, alpha, beta, V)
+
+            self._cheb_cache[degree] = jax.jit(run)
+        return self._cheb_cache[degree]
+
+    # ------------------------------------------------------------------
+    def random_search_vectors(self, key) -> jax.Array:
+        cfg = self.cfg
+        V = jax.random.normal(key, (self.D_pad, cfg.n_search)).astype(self.dtype)
+        V = V * (jnp.arange(self.D_pad)[:, None] < self.D)
+        return jax.device_put(V, self.stack_layout.vec_sharding(self.mesh))
+
+    def _intervals(self, theta, res, lam):
+        """Adaptive target & search intervals from the current Ritz data.
+
+        Intervals are bounding boxes of the closest Ritz values rather than
+        symmetric windows around τ: for extremal targets (τ outside the
+        spectrum) a τ-centered window would keep covering ≫ N_s eigenvalues
+        and FD would stall — the paper's Fig. 2 (right column) failure.
+        """
+        cfg = self.cfg
+        d = np.abs(theta - cfg.target)
+        order = np.argsort(d)
+        spec_w = lam[1] - lam[0]
+        sel_t = theta[order[: min(cfg.n_target, len(order))]]
+        # anchor on τ (clipped into the spectrum): with random start vectors
+        # the Ritz values cluster in the spectral bulk, and a pure bounding
+        # box would lock the filter onto the wrong region
+        tau_c = float(np.clip(cfg.target, lam[0], lam[1]))
+        lo = min(float(sel_t.min()), tau_c)
+        hi = max(float(sel_t.max()), tau_c)
+        pad_t = max(1e-8 * spec_w, 0.05 * (hi - lo))
+        target = (lo - pad_t, hi + pad_t)
+        n_s = min(int(0.75 * cfg.n_search), len(order))
+        sel_s = theta[order[:n_s]]
+        s_lo = min(float(sel_s.min()), target[0])
+        s_hi = max(float(sel_s.max()), target[1])
+        mid = 0.5 * (s_lo + s_hi)
+        half = max(0.5 * (s_hi - s_lo),
+                   cfg.search_expand * 0.5 * (target[1] - target[0]))
+        # pad outward so wanted states sit on the filter plateau, not on the
+        # Jackson transition slope (slope width ~ pi/n of the mapped axis)
+        pad_s = 0.15 * half
+        lo_s = max(mid - half - pad_s, lam[0])
+        hi_s = min(mid + half + pad_s, lam[1])
+        # extremal targets: widen the outward side by ~the transition width
+        # (0.75 of the inner span) so edge states sit on the filter plateau
+        # instead of the Jackson slope — without collapsing the degree the
+        # way fully opening the window to the inclusion bound would
+        if cfg.target <= float(theta.min()):
+            lo_s = max(lam[0], target[0] - 0.75 * (hi_s - target[0]))
+        if cfg.target >= float(theta.max()):
+            hi_s = min(lam[1], target[1] + 0.75 * (target[1] - lo_s))
+        search = (lo_s, hi_s)
+        return target, search
+
+    # ------------------------------------------------------------------
+    def solve(self, key=None, verbose: bool = False) -> FDResult:
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+        k0, k1 = jax.random.split(key)
+        t_start = time.perf_counter()
+        lam = lanczos_interval(
+            self.spmv_stack, self.D, self.D_pad, self.dtype, k0, cfg.lanczos_steps
+        )
+        alpha, beta = scale_params(*lam)
+        V = self.random_search_vectors(k1)
+        total_spmvs = cfg.lanczos_steps
+        redists = 0
+        redist_time = 0.0
+        history = []
+        for it in range(cfg.max_iters):
+            V = self.orthogonalize(V)
+            theta, Y, res, VY = self.ritz(V)
+            total_spmvs += cfg.n_search
+            theta_h = np.asarray(theta)
+            res_h = np.asarray(res)
+            target, search = self._intervals(theta_h, res_h, lam)
+            in_t = (theta_h >= target[0]) & (theta_h <= target[1])
+            conv = in_t & (res_h <= cfg.tol)
+            history.append(
+                dict(iter=it, n_conv=int(conv.sum()), search=search,
+                     best_res=float(res_h[in_t].min()) if in_t.any() else float("nan"))
+            )
+            if verbose:
+                print(f"[fd] it={it:3d} conv={int(conv.sum()):4d}/{cfg.n_target} "
+                      f"search=({search[0]:+.4e},{search[1]:+.4e}) "
+                      f"best_res={history[-1]['best_res']:.2e}")
+            if conv.sum() >= cfg.n_target:
+                order = np.argsort(np.abs(theta_h - cfg.target))
+                sel = order[conv[order]][: max(cfg.n_target, int(conv.sum()))]
+                return FDResult(
+                    eigenvalues=theta_h[sel], residuals=res_h[sel],
+                    n_converged=int(conv.sum()), iterations=it,
+                    total_spmvs=total_spmvs, redistributions=redists,
+                    wall_time=time.perf_counter() - t_start,
+                    redist_time=redist_time, history=history,
+                )
+            poly = filters.build_filter(
+                search, lam, sharpness=cfg.sharpness,
+                n_max=cfg.degree_cap,
+            )
+            mu = jnp.asarray(poly.mu)
+            # start the filter from the Ritz basis (better conditioning)
+            V = VY
+            t0 = time.perf_counter()
+            if self.N_col > 1:
+                V = self.to_panel(V)
+                jax.block_until_ready(V)
+                redists += 1
+                redist_time += time.perf_counter() - t0
+            V = self._cheb(poly.degree)(V, mu, alpha, beta)
+            total_spmvs += poly.degree * cfg.n_search
+            t0 = time.perf_counter()
+            if self.N_col > 1:
+                V = self.to_stack(V)
+                jax.block_until_ready(V)
+                redists += 1
+                redist_time += time.perf_counter() - t0
+        # not converged within max_iters — report best effort
+        theta, Y, res, VY = self.ritz(self.orthogonalize(V))
+        theta_h, res_h = np.asarray(theta), np.asarray(res)
+        order = np.argsort(np.abs(theta_h - cfg.target))[: cfg.n_target]
+        return FDResult(
+            eigenvalues=theta_h[order], residuals=res_h[order],
+            n_converged=int((res_h[order] <= cfg.tol).sum()),
+            iterations=cfg.max_iters, total_spmvs=total_spmvs,
+            redistributions=redists, wall_time=time.perf_counter() - t_start,
+            redist_time=redist_time, history=history,
+        )

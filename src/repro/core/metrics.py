@@ -1,0 +1,92 @@
+"""Communication metrics χ₁, χ₂, χ₃ (paper Eqs. 8–10).
+
+Computed directly from the matrix sparsity pattern, prior to running any
+code. All metrics are zero for N_p = 1. The metrics depend only on the row
+partition (uniform by default, Eq. 1).
+
+    χ₁ = max_p  n_vc(p) / n_vm(p)          (remote / local accesses)
+    χ₂ = Σ_p    n_vc(p) / D                (aggregate comm volume / D)
+    χ₃ = N_p · max_p n_vc(p) / D           (parallel-efficiency bound)
+
+Equivalences (paper §3.1): χ₁ ≈ χ₃ since n_vm ≈ D/N_p; χ₂ ≈ χ₃ unless the
+communication volume is imbalanced — ``imbalance`` > 2…3 signals that the
+partition should be re-balanced (``balance='commvol'`` in the partitioner).
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from ..matrices.families import MatrixFamily
+from ..matrices.sparse import CSR, uniform_partition
+
+__all__ = ["ChiMetrics", "chi_metrics", "chi_from_nvc", "chi_bruteforce", "chi_sweep"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChiMetrics:
+    N_p: int
+    D: int
+    chi1: float
+    chi2: float
+    chi3: float
+    n_vc: np.ndarray  # per-process distinct remote columns
+    n_vm: np.ndarray  # per-process local vector entries
+
+    @property
+    def imbalance(self) -> float:
+        """χ₃/χ₂ — above ~2–3 indicates severe comm-volume imbalance."""
+        return self.chi3 / self.chi2 if self.chi2 > 0 else 1.0
+
+    def efficiency_bound(self, bc_over_bm: float) -> float:
+        """Π ≲ min{1, χ₃⁻¹ · b_c/b_m}  (Eq. 11)."""
+        if self.chi3 == 0:
+            return 1.0
+        return min(1.0, bc_over_bm / self.chi3)
+
+    def row(self) -> str:
+        return f"{self.N_p:4d}  chi1,3={self.chi1:6.2f}  chi2={self.chi2:6.2f}"
+
+
+def chi_from_nvc(n_vc: np.ndarray, n_vm: np.ndarray, D: int) -> ChiMetrics:
+    n_vc = np.asarray(n_vc, dtype=np.int64)
+    n_vm = np.asarray(n_vm, dtype=np.int64)
+    P = len(n_vc)
+    if P == 1:
+        return ChiMetrics(1, D, 0.0, 0.0, 0.0, n_vc * 0, n_vm)
+    return ChiMetrics(
+        N_p=P,
+        D=D,
+        chi1=float((n_vc / np.maximum(n_vm, 1)).max()),
+        chi2=float(n_vc.sum() / D),
+        chi3=float(P * n_vc.max() / D),
+        n_vc=n_vc,
+        n_vm=n_vm,
+    )
+
+
+def chi_metrics(matrix: MatrixFamily, N_p: int, boundaries: np.ndarray | None = None) -> ChiMetrics:
+    """Exact χ metrics for a matrix family at N_p processes."""
+    if boundaries is None:
+        boundaries = uniform_partition(matrix.D, N_p)
+    n_vc = matrix.n_vc(boundaries)
+    return chi_from_nvc(n_vc, matrix.n_vm(boundaries), matrix.D)
+
+
+def chi_bruteforce(csr: CSR, N_p: int, boundaries: np.ndarray | None = None) -> ChiMetrics:
+    """Reference χ computation from an explicit CSR pattern (tests)."""
+    D = csr.shape[0]
+    if boundaries is None:
+        boundaries = uniform_partition(D, N_p)
+    n_vc = np.zeros(N_p, dtype=np.int64)
+    for p in range(N_p):
+        a, b = int(boundaries[p]), int(boundaries[p + 1])
+        lo, hi = int(csr.indptr[a]), int(csr.indptr[b])
+        cols = csr.indices[lo:hi]
+        n_vc[p] = np.unique(cols[(cols < a) | (cols >= b)]).size
+    return chi_from_nvc(n_vc, np.diff(np.asarray(boundaries, dtype=np.int64)), D)
+
+
+def chi_sweep(matrix: MatrixFamily, Nps=(2, 4, 8, 16, 32, 64)) -> dict[int, ChiMetrics]:
+    """Table-1-style sweep over process counts."""
+    return {Np: chi_metrics(matrix, Np) for Np in Nps}

@@ -1,0 +1,279 @@
+"""Distributed sparse matrix–(multiple)-vector multiplication engine.
+
+Host side (`Partition`, `CommPlan`, `build_dist_ell`): given a matrix
+family (or CSR) and the number of row shards P, build
+
+  * equal row blocks  R = ceil(D/P)  (the paper's "nearly equidistant"
+    row indices; the tail block is zero-padded),
+  * per-shard ELL blocks with *remapped* columns: local columns map to
+    [0, R), remote columns map into a halo region [R, R + P*L),
+  * a communication plan: for every (sender q -> receiver p) pair the
+    sorted list of local entries q must ship to p, padded to the max
+    pair volume L.
+
+Device side (`make_spmv`): a ``shard_map`` function executing the paper's
+distributed SpMV: gather send slots -> single ``all_to_all`` over the
+horizontal (``row``) mesh axes -> local ELL contraction against
+``[x_local ‖ halo]``. The all_to_all moves exactly ``P * L * n_b * S_d``
+bytes — L is the padded max of the paper's n_vc counts, so the measured
+(HLO) collective volume equals the χ-metric prediction up to the
+imbalance factor χ₃/χ₂ (see EXPERIMENTS §Dry-run).
+
+The vertical (``col``) mesh axes shard the vector bundle; no SpMV
+communication crosses them (the paper's central point).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..matrices.families import MatrixFamily
+from ..matrices.sparse import CSR, csr_to_ell
+from .layouts import Layout
+
+__all__ = ["Partition", "DistEll", "build_dist_ell", "make_spmv", "make_fused_cheb_step"]
+
+
+# --------------------------------------------------------------------------
+# host side
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Equal-block row partition: block p owns rows [p*R, min((p+1)*R, D)).
+
+    ``d_pad`` (a multiple of P, >= D) fixes the padded global extent so that
+    stack- and panel-layout engines over the same vectors agree on shapes;
+    defaults to ceil(D/P)*P.
+    """
+
+    D: int
+    P: int
+    d_pad: int | None = None
+
+    @property
+    def D_pad(self) -> int:
+        if self.d_pad is not None:
+            assert self.d_pad % self.P == 0 and self.d_pad >= self.D
+            return self.d_pad
+        return (-(-self.D // self.P)) * self.P
+
+    @property
+    def R(self) -> int:
+        return self.D_pad // self.P
+
+    def boundaries(self) -> np.ndarray:
+        return np.minimum(np.arange(self.P + 1, dtype=np.int64) * self.R, self.D)
+
+    def owner(self, cols: np.ndarray) -> np.ndarray:
+        return np.minimum(cols // self.R, self.P - 1)
+
+
+@dataclasses.dataclass
+class DistEll:
+    """Pytree of device arrays for the distributed ELL SpMV.
+
+    All arrays carry a leading P axis that is sharded over the horizontal
+    mesh axes inside ``make_spmv``.
+    """
+
+    cols: jax.Array  # [P, R, W] int32, remapped columns
+    vals: jax.Array  # [P, R, W] matrix dtype
+    send_idx: jax.Array  # [P, P, L] int32 local row indices to ship
+    R: int = dataclasses.field(metadata=dict(static=True))
+    L: int = dataclasses.field(metadata=dict(static=True))
+    P: int = dataclasses.field(metadata=dict(static=True))
+    D: int = dataclasses.field(metadata=dict(static=True))
+    n_vc: np.ndarray | None = None  # exact per-shard remote counts (diagnostics)
+
+    @property
+    def comm_bytes_per_spmv(self) -> int:
+        """all_to_all payload per vector column, summed over shards."""
+        return self.P * self.P * self.L * self.vals.dtype.itemsize
+
+
+def _pattern_chunks(matrix, rows):
+    r, c, v = matrix.row_entries(rows)
+    return r, c, v
+
+
+def build_dist_ell(
+    matrix: MatrixFamily | CSR,
+    P_row: int,
+    dtype=None,
+    d_pad: int | None = None,
+) -> DistEll:
+    """Build per-shard ELL blocks + comm plan for P_row horizontal shards."""
+    if isinstance(matrix, CSR):
+        D = matrix.shape[0]
+        get_rows = lambda a, b: _csr_rows(matrix, a, b)
+    else:
+        D = matrix.D
+        get_rows = lambda a, b: matrix.row_entries(np.arange(a, b, dtype=np.int64))
+    part = Partition(D, P_row, d_pad)
+    R = part.R
+    per_shard = []
+    for p in range(P_row):
+        a, b = int(p * R), int(min(max((p + 1) * R, 0), D))
+        a = min(a, D)
+        rows, cols, vals = get_rows(a, b)
+        per_shard.append((a, b, rows, cols, vals))
+
+    # remote needs per (receiver p, owner q)
+    need: list[dict[int, np.ndarray]] = []
+    for p, (a, b, rows, cols, vals) in enumerate(per_shard):
+        remote = np.unique(cols[(cols < a) | (cols >= b)])
+        owners = part.owner(remote)
+        need.append({int(q): remote[owners == q] for q in np.unique(owners)})
+    L = max((len(v) for d in need for v in d.values()), default=0)
+    L = max(L, 1)  # keep shapes non-degenerate
+
+    send_idx = np.zeros((P_row, P_row, L), dtype=np.int32)
+    for p, d in enumerate(need):
+        for q, glob in d.items():
+            send_idx[q, p, : len(glob)] = (glob - q * R).astype(np.int32)
+
+    # local ELL with remapped columns
+    W = 0
+    shard_ell = []
+    for p, (a, b, rows, cols, vals) in enumerate(per_shard):
+        local = (cols >= a) & (cols < b)
+        newcols = np.empty_like(cols)
+        newcols[local] = cols[local] - a
+        rem = ~local
+        if rem.any():
+            rc = cols[rem]
+            q = part.owner(rc)
+            # slot of each remote col within need[p][q] (sorted): searchsorted
+            slot = np.empty(len(rc), dtype=np.int64)
+            for qq in np.unique(q):
+                m = q == qq
+                slot[m] = np.searchsorted(need[p][int(qq)], rc[m])
+            newcols[rem] = R + q * L + slot
+        # rows relative to block start, build padded ELL
+        rel = rows - a
+        order = np.lexsort((newcols, rel))
+        rel, newcols, vals = rel[order], newcols[order], vals[order]
+        counts = np.bincount(rel, minlength=R)
+        W = max(W, int(counts.max()) if len(counts) else 0)
+        shard_ell.append((rel, newcols, vals, counts))
+
+    vdtype = np.dtype(dtype) if dtype is not None else shard_ell[0][2].dtype
+    cols_arr = np.zeros((P_row, R, W), dtype=np.int32)
+    vals_arr = np.zeros((P_row, R, W), dtype=vdtype)
+    for p, (rel, newcols, vals, counts) in enumerate(shard_ell):
+        slot = np.arange(len(rel)) - np.repeat(np.cumsum(counts) - counts, counts)
+        cols_arr[p, rel, slot] = newcols
+        vals_arr[p, rel, slot] = vals.astype(vdtype)
+
+    n_vc = np.array([sum(len(v) for v in d.values()) for d in need], dtype=np.int64)
+    return DistEll(
+        cols=jnp.asarray(cols_arr),
+        vals=jnp.asarray(vals_arr),
+        send_idx=jnp.asarray(send_idx),
+        R=R,
+        L=L,
+        P=P_row,
+        D=D,
+        n_vc=n_vc,
+    )
+
+
+def _csr_rows(csr: CSR, a: int, b: int):
+    lo, hi = int(csr.indptr[a]), int(csr.indptr[b])
+    counts = np.diff(csr.indptr[a : b + 1])
+    rows = np.repeat(np.arange(a, b, dtype=np.int64), counts)
+    return rows, csr.indices[lo:hi].astype(np.int64), csr.data[lo:hi]
+
+
+# --------------------------------------------------------------------------
+# device side
+# --------------------------------------------------------------------------
+
+
+def _local_spmv(cols, vals, send_idx, x, dist_axes, P_row, L, use_kernel=False):
+    """Per-device body: halo exchange + ELL contraction. x: [R, nb] local."""
+    R, W = cols.shape
+    nb = x.shape[1]
+    if P_row > 1:
+        send = jnp.take(x, send_idx, axis=0)  # [P, L, nb]
+        halo = lax.all_to_all(send, dist_axes, split_axis=0, concat_axis=0, tiled=False)
+        xfull = jnp.concatenate([x, halo.reshape(P_row * L, nb)], axis=0)
+    else:
+        xfull = x
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        return kops.ell_spmv(cols, vals, xfull)
+    # W-step accumulation: no [R, W, nb] temporary materialized after fusion
+    def body(acc, cw):
+        c, v = cw
+        return acc + v[:, None] * jnp.take(xfull, c, axis=0), None
+
+    acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals.dtype, x.dtype))
+    acc, _ = lax.scan(body, acc0, (cols.T, vals.T))
+    return acc
+
+
+def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False):
+    """Return spmv(x) on the global padded array X [D_pad, N_s'] where the
+    layout's dist axes shard D and bundle axes shard N_s."""
+    dist = layout.dist_axes
+    vec_spec = layout.vec_pspec()
+    plan_spec = P(dist if dist else None, None, None)
+
+    def local_fn(cols, vals, send_idx, x):
+        # cols/vals [1, R, W]; send_idx [1, P, L]; x [R, nb_loc]
+        return _local_spmv(
+            cols[0], vals[0], send_idx[0], x, dist, ell.P, ell.L, use_kernel
+        )
+
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(plan_spec, plan_spec, plan_spec, vec_spec),
+        out_specs=vec_spec,
+        check_rep=False,
+    )
+
+    def spmv(x):
+        return fn(ell.cols, ell.vals, ell.send_idx, x)
+
+    return spmv
+
+
+def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False):
+    """w2' = 2a (A w1) + 2b w1 - w2 — the paper's fused SpMV+axpy kernel
+    (Alg. 2 step 7), computed in one shard_map body so XLA (or the Pallas
+    kernel) fuses the axpy with the contraction (κ = 5, not 6)."""
+    dist = layout.dist_axes
+    vec_spec = layout.vec_pspec()
+    plan_spec = P(dist if dist else None, None, None)
+
+    def local_fn(cols, vals, send_idx, w1, w2, a, b):
+        y = _local_spmv(cols[0], vals[0], send_idx[0], w1, dist, ell.P, ell.L, use_kernel)
+        return 2.0 * a * y + 2.0 * b * w1 - w2
+
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(plan_spec, plan_spec, plan_spec, vec_spec, vec_spec, P(), P()),
+        out_specs=vec_spec,
+        check_rep=False,
+    )
+
+    def step(w1, w2, alpha, beta):
+        rdt = jnp.zeros((), dtype=w1.dtype).real.dtype  # real part dtype (complex-safe)
+        a = jnp.asarray(alpha, dtype=rdt)
+        b = jnp.asarray(beta, dtype=rdt)
+        return fn(ell.cols, ell.vals, ell.send_idx, w1, w2, a, b)
+
+    return step

@@ -1,0 +1,4 @@
+"""Deterministic, restartable synthetic-token data pipeline."""
+from .pipeline import DataConfig, TokenPipeline
+
+__all__ = ["DataConfig", "TokenPipeline"]

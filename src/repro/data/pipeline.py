@@ -1,0 +1,70 @@
+"""Data pipeline: deterministic, shardable, restartable.
+
+A counter-based (stateless) generator: batch ``i`` is a pure function of
+(seed, i), so (a) every host can produce exactly its own shard without
+coordination, (b) restart-from-checkpoint replays nothing and skips
+nothing (the pipeline state is just the step counter in the checkpoint
+manifest's ``extra``), (c) elastic restarts re-partition cleanly.
+
+Synthetic corpus: a Zipf-ish unigram mixture with injected n-gram
+structure so the LM loss actually decreases (used by examples/train_lm.py
+and the integration tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    zipf_a: float = 1.2
+    ngram: int = 3  # injected structure length
+
+
+class TokenPipeline:
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig = DataConfig()):
+        self.cfg = cfg
+        self.dcfg = dcfg
+        rng = np.random.default_rng(dcfg.seed)
+        V = max(cfg.vocab, 2)
+        ranks = np.arange(1, V + 1)
+        p = ranks ** (-dcfg.zipf_a)
+        self.unigram = p / p.sum()
+        # deterministic "grammar": token t is often followed by succ[t]
+        self.succ = rng.permutation(V)
+
+    def batch(self, index: int, batch: int, seq: int) -> dict:
+        """Batch ``index`` (pure function of (seed, index))."""
+        cfg = self.cfg
+        rng = np.random.default_rng((self.dcfg.seed, index))
+        if cfg.family == "audio":
+            feats = rng.standard_normal((batch, seq, cfg.frontend_dim)).astype(np.float32)
+            mask = rng.random((batch, seq)) < 0.08
+            labels = rng.integers(0, cfg.vocab, (batch, seq))
+            return {"features": jnp.asarray(feats, jnp.dtype(cfg.dtype)),
+                    "mask": jnp.asarray(mask),
+                    "labels": jnp.asarray(labels, jnp.int32)}
+        toks = rng.choice(len(self.unigram), size=(batch, seq), p=self.unigram)
+        follow = rng.random((batch, seq)) < 0.6
+        for k in range(1, self.dcfg.ngram):
+            toks[:, k::self.dcfg.ngram] = np.where(
+                follow[:, k::self.dcfg.ngram],
+                self.succ[toks[:, k - 1::self.dcfg.ngram][:, : toks[:, k::self.dcfg.ngram].shape[1]]],
+                toks[:, k::self.dcfg.ngram],
+            )
+        labels = np.roll(toks, -1, axis=1)
+        labels[:, -1] = -1  # no target for the final position
+        if cfg.family == "vlm":
+            npfx = min(cfg.n_prefix_embeds, max(seq // 8, 1))
+            patches = rng.standard_normal((batch, npfx, cfg.frontend_dim)).astype(np.float32)
+            return {"tokens": jnp.asarray(toks[:, : seq - npfx], jnp.int32),
+                    "patches": jnp.asarray(patches, jnp.dtype(cfg.dtype)),
+                    "labels": jnp.asarray(labels[:, : seq - npfx], jnp.int32)}
+        return {"tokens": jnp.asarray(toks, jnp.int32),
+                "labels": jnp.asarray(labels, jnp.int32)}

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: blocked ELL SpMMV with VMEM gather (irregular matrices).
+
+For matrices that are not diagonal-structured (the Hubbard dn-sector hop
+graph, SpinChainXXZ), the local contraction y[r] = Σ_w vals[r,w] x[cols[r,w]]
+needs a gather. TPU adaptation: the gather must be VMEM-resident, so the
+host pre-buckets each row block's entries by *column block* (tile format:
+row-block x col-block ELL with tile-local columns). The kernel grid is
+(row blocks, n_b blocks, tiles); each step loads one x column-block into
+VMEM and gathers rows from it with `jnp.take` along the sublane axis.
+
+Caveat recorded in DESIGN.md: Mosaic's sublane dynamic-gather support is
+newer than the rest of the ops used here; the kernel is validated in
+interpret mode on CPU (this container) and the ops.py dispatcher keeps the
+scan-of-gathers jnp path as the fallback on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _GRID_SPEC = pltpu.PrefetchScalarGridSpec
+except Exception:  # pragma: no cover
+    _GRID_SPEC = None
+
+DEFAULT_BR = 256
+DEFAULT_BC = 2048  # x rows per column block resident in VMEM
+DEFAULT_BN = 128
+
+
+def build_tiles(cols: np.ndarray, vals: np.ndarray, Rx: int, br: int, bc: int):
+    """Re-bucket an ELL block [R, W] into (row-block x col-block) tiles.
+
+    Returns (tile_cb [RB, T], tcols [RB, T, br, Wt], tvals [...]) where T is
+    the padded tile count and Wt the padded per-tile width. Padded entries
+    point at tile-local column 0 with value 0.
+    """
+    R, W = cols.shape
+    RB = R // br
+    n_cb = -(-Rx // bc)
+    tiles: list[list[tuple[int, np.ndarray, np.ndarray, np.ndarray]]] = []
+    T = 1
+    Wt = 1
+    for rb in range(RB):
+        c = cols[rb * br : (rb + 1) * br]
+        v = vals[rb * br : (rb + 1) * br]
+        nz = v != 0
+        cb_of = c // bc
+        row_tiles = []
+        for cb in np.unique(cb_of[nz]):
+            m = nz & (cb_of == cb)
+            w_t = int(m.sum(axis=1).max())
+            tc = np.zeros((br, w_t), dtype=np.int32)
+            tv = np.zeros((br, w_t), dtype=vals.dtype)
+            for r in range(br):
+                sel = np.nonzero(m[r])[0]
+                tc[r, : len(sel)] = c[r, sel] - cb * bc
+                tv[r, : len(sel)] = v[r, sel]
+            row_tiles.append((int(cb), tc, tv))
+            Wt = max(Wt, w_t)
+        T = max(T, len(row_tiles))
+        tiles.append(row_tiles)
+    tile_cb = np.zeros((RB, T), dtype=np.int32)
+    tcols = np.zeros((RB, T, br, Wt), dtype=np.int32)
+    tvals = np.zeros((RB, T, br, Wt), dtype=vals.dtype)
+    for rb, row_tiles in enumerate(tiles):
+        for t, (cb, tc, tv) in enumerate(row_tiles):
+            tile_cb[rb, t] = cb
+            tcols[rb, t, :, : tc.shape[1]] = tc
+            tvals[rb, t, :, : tv.shape[1]] = tv
+    return tile_cb, tcols, tvals
+
+
+def _kernel(tile_cb, tcols, tvals, xblk, out, *, n_tiles):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out[...] = jnp.zeros_like(out)
+
+    c = tcols[0, 0]  # [br, Wt] tile-local columns
+    v = tvals[0, 0]
+    xb = xblk[...]  # [bc, bn]
+    acc = out[...]
+    for w in range(c.shape[1]):
+        acc = acc + v[:, w : w + 1] * jnp.take(xb, c[:, w], axis=0)
+    out[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bc", "bn", "interpret"))
+def ell_gather_spmv(
+    tile_cb: jax.Array,  # [RB, T] col-block index per tile (scalar prefetch)
+    tcols: jax.Array,    # [RB, T, br, Wt]
+    tvals: jax.Array,    # [RB, T, br, Wt]
+    x: jax.Array,        # [Rx_pad, nb] (padded to multiple of bc)
+    br: int = DEFAULT_BR,
+    bc: int = DEFAULT_BC,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    RB, T, _, Wt = tcols.shape
+    R = RB * br
+    Rx, nb = x.shape
+    assert Rx % bc == 0 and nb % bn == 0
+    grid = (RB, nb // bn, T)
+    if _GRID_SPEC is None:
+        raise NotImplementedError
+    grid_spec = _GRID_SPEC(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, br, Wt), lambda rb, cb, t, cbref: (rb, t, 0, 0)),
+            pl.BlockSpec((1, 1, br, Wt), lambda rb, cb, t, cbref: (rb, t, 0, 0)),
+            pl.BlockSpec((bc, bn), lambda rb, cb, t, cbref: (cbref[rb, t], cb)),
+        ],
+        out_specs=pl.BlockSpec((br, bn), lambda rb, cb, t, cbref: (rb, cb)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_tiles=T),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, nb), x.dtype),
+        interpret=interpret,
+    )(tile_cb, tcols, tvals, x)

@@ -1,0 +1,73 @@
+"""Dispatch layer for the Pallas kernels.
+
+``prefer_pallas()`` is True only on TPU backends; on CPU (this container)
+the jnp reference path runs inside jit, and kernels are exercised through
+``interpret=True`` in the tests. Complex DIA matrices are decomposed into
+real/imaginary planes (4 real kernel calls) since TPU VREGs have no
+complex type.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .cheb_dia import cheb_dia as _cheb_dia_kernel
+
+
+def prefer_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ell_spmv(cols, vals, x):
+    """Local ELL contraction (scan-of-gathers; the Pallas tile kernel in
+    ell_gather.py is opted in by the operator builder on TPU)."""
+    return ref.ell_spmv_ref(cols, vals, x)
+
+
+def cheb_dia(offsets, dvals, x, w1, w2, alpha, beta, *, interpret=None, force_ref=False):
+    """Fused Chebyshev DIA step with real/complex dispatch."""
+    interpret = (not prefer_pallas()) if interpret is None else interpret
+    if force_ref or (interpret and _too_small(dvals, w1)):
+        return ref.cheb_dia_ref(offsets, dvals, x, w1, w2, alpha, beta)
+    if jnp.iscomplexobj(dvals) or jnp.iscomplexobj(x):
+        dr, di = jnp.real(dvals), jnp.imag(dvals)
+        xr, xi = jnp.real(x), jnp.imag(x)
+        w1r, w1i = jnp.real(w1), jnp.imag(w1)
+        w2r, w2i = jnp.real(w2), jnp.imag(w2)
+        zeros = jnp.zeros_like(w1r)
+        call = functools.partial(_call_real, offsets, interpret=interpret)
+        # (Ar + iAi)(xr + ixi): real = Ar xr - Ai xi ; imag = Ar xi + Ai xr
+        yr = call(dr, xr, w1r, w2r, alpha, beta) - (
+            call(di, xi, zeros, zeros, alpha, 0.0)
+        )
+        yi = call(dr, xi, w1i, w2i, alpha, beta) + (
+            call(di, xr, zeros, zeros, alpha, 0.0)
+        )
+        return yr + 1j * yi
+    return _call_real(offsets, dvals, x, w1, w2, alpha, beta, interpret=interpret)
+
+
+def _call_real(offsets, dvals, x, w1, w2, alpha, beta, *, interpret):
+    R, nb = w1.shape
+    br = _pick_block(R, (512, 256, 128, 64, 32, 16, 8))
+    bn = _pick_block(nb, (256, 128) if not interpret else (256, 128, 64, 32, 16, 8, 4, 2, 1))
+    if br is None or bn is None or x.shape[0] % br:
+        return ref.cheb_dia_ref(offsets, dvals, x, w1, w2, alpha, beta)
+    return _cheb_dia_kernel(
+        tuple(int(o) for o in offsets), dvals, x, w1, w2, alpha, beta,
+        br=br, bn=bn, interpret=interpret,
+    )
+
+
+def _pick_block(n, candidates):
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return None
+
+
+def _too_small(dvals, w1) -> bool:
+    return w1.shape[0] < 8 or w1.shape[1] < 1

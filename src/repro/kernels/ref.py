@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (shape-exact references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ell_spmv_ref(cols, vals, x):
+    """y[r] = sum_w vals[r, w] * x[cols[r, w]];  cols [R,W], x [Rx, nb]."""
+    def body(acc, cw):
+        c, v = cw
+        return acc + v[:, None] * jnp.take(x, c, axis=0), None
+
+    acc0 = jnp.zeros((cols.shape[0], x.shape[1]), dtype=jnp.result_type(vals, x))
+    acc, _ = lax.scan(body, acc0, (cols.T, vals.T))
+    return acc
+
+
+def cheb_dia_ref(offsets, dvals, x, w1, w2, alpha, beta):
+    """Fused Chebyshev step for a DIA (diagonal-offset) matrix.
+
+    y = 2*alpha*(A@x) + 2*beta*w1 - w2 with
+    (A@x)[i] = sum_d dvals[d, i] * x[i + offsets[d]]  (zero out of range).
+
+    offsets: static tuple of ints; dvals [n_diag, R]; x [Rx, nb] where x may
+    be longer than R (local rows + halo appended); w1/w2 [R, nb].
+    """
+    R = dvals.shape[1]
+    nb = x.shape[1]
+    acc = jnp.zeros((R, nb), dtype=jnp.result_type(dvals, x))
+    idx = jnp.arange(R)
+    for d, off in enumerate(offsets):
+        j = idx + off
+        ok = (j >= 0) & (j < x.shape[0])
+        xo = jnp.take(x, jnp.clip(j, 0, x.shape[0] - 1), axis=0)
+        acc = acc + jnp.where(ok[:, None], dvals[d][:, None] * xo, 0)
+    return 2.0 * alpha * acc + 2.0 * beta * w1 - w2

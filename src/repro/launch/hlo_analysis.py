@@ -1,0 +1,232 @@
+"""Loop-aware cost extraction from optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scanned program (layer scans, loss-chunk scans, Chebyshev iterations) is
+undercounted by the trip count. The optimized HLO annotates
+``backend_config={"known_trip_count":{"n":...}}`` on while ops, which lets
+us propagate an exact execution *multiplicity* to every computation and
+re-aggregate:
+
+  flops            — from dot ops (2 * |result| * |contraction|), conv ignored
+                     (no conv ops in this codebase's models)
+  collective bytes — operand bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute
+  hbm bytes        — operands+result of ops at fusion granularity
+                     (internal fused computations are not double counted)
+
+Validated against cost_analysis() on fully-unrolled small models (where
+XLA's numbers are exact) in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_TYPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+                   "bitcast(", " while(", "conditional(", "after-all(",
+                   "partition-id(", "replica-id(", "iota(")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    header = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line and ("(" in line) and "->" in line:
+            name = line.split("(", 1)[0].strip().lstrip("%").replace("ENTRY ", "").replace("ENTRY%", "")
+            name = name.replace("ENTRY", "").strip().lstrip("%").strip()
+            cur = name
+            comps[cur] = [line]
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _entry_name(text: str, comps) -> str | None:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            name = line.split("(", 1)[0].replace("ENTRY", "").strip().lstrip("%").strip()
+            if name in comps:
+                return name
+    return None
+
+
+_REF_WHILE = re.compile(r"body=%([\w\.\-]+)")
+_REF_COND = re.compile(r"condition=%([\w\.\-]+)")
+_REF_CALLS = re.compile(r"calls=%([\w\.\-]+)")
+_REF_APPLY = re.compile(r"to_apply=%([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+
+
+def _multiplicities(comps, entry) -> dict[str, float]:
+    mult = {name: 0.0 for name in comps}
+    if entry is None:
+        entry = next(iter(comps))
+    mult[entry] = 1.0
+    # iterate to fixpoint over the (acyclic) call graph
+    for _ in range(64):
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        changed = False
+        for name, lines in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for ln in lines:
+                body = _REF_WHILE.search(ln)
+                if body:
+                    t = _TRIP.search(ln)
+                    trip = float(t.group(1)) if t else 1.0
+                    if body.group(1) in new:
+                        new[body.group(1)] += m * trip
+                    c = _REF_COND.search(ln)
+                    if c and c.group(1) in new:
+                        new[c.group(1)] += m * (trip + 1)
+                    continue
+                for ref in _REF_CALLS.findall(ln) + _REF_APPLY.findall(ln):
+                    if ref in new:
+                        new[ref] += m
+        for k in comps:
+            if abs(new[k] - mult[k]) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return mult
+
+
+def _symbols(lines) -> dict[str, tuple[str, str]]:
+    """name -> (dtype, dims) for every defined value + typed params."""
+    sym: dict[str, tuple[str, str]] = {}
+    header = lines[0]
+    for m in re.finditer(r"([\w\.\-]+):\s*([a-z][a-z0-9]*)\[([0-9,]*)\]", header):
+        sym[m.group(1)] = (m.group(2), m.group(3))
+    for ln in lines[1:]:
+        ls = ln.strip()
+        if not ls.startswith("%") and not ls.startswith("ROOT"):
+            continue
+        ls2 = ls[5:].strip() if ls.startswith("ROOT") else ls
+        m = re.match(r"%([\w\.\-]+)\s*=\s*(?:\()?([a-z][a-z0-9]*)\[([0-9,]*)\]", ls2)
+        if m:
+            sym[m.group(1)] = (m.group(2), m.group(3))
+    return sym
+
+
+def _dot_flops(ls: str, sym) -> float:
+    m = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*([a-z][a-z0-9]*)\[([0-9,]*)\][^=]*dot\(([^)]*)\)", ls)
+    if not m:
+        return 0.0
+    res_elems = _shape_elems(m.group(2))
+    ops = [o.strip().lstrip("%") for o in m.group(3).split(",")]
+    lhs = sym.get(ops[0]) if ops else None
+    cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ls)
+    contract = 1
+    if lhs and cd:
+        dims = [int(x) for x in lhs[1].split(",") if x] if lhs[1] else []
+        for ci in cd.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                contract *= dims[int(ci)]
+    return 2.0 * res_elems * contract
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict[str, float]
+    per_collective: list  # (kind, bytes, multiplicity) heavy hitters
+
+
+def analyze_hlo(text: str) -> HloCosts:
+    comps = _split_computations(text)
+    entry = _entry_name(text, comps)
+    mult = _multiplicities(comps, entry)
+    # computations reached only via calls=/to_apply= from fusions are
+    # "internal": their ops don't touch HBM individually.
+    internal = set()
+    for name, lines in comps.items():
+        for ln in lines:
+            if " fusion(" in ln or "kind=kLoop" in ln or "kind=kOutput" in ln or "kind=kInput" in ln:
+                for ref in _REF_CALLS.findall(ln):
+                    internal.add(ref)
+            for ref in _REF_APPLY.findall(ln):
+                internal.add(ref)
+
+    flops = 0.0
+    hbm = 0.0
+    coll = {c: 0.0 for c in _COLLECTIVES}
+    heavy = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        sym = _symbols(lines)
+        in_internal = name in internal
+        for ln in lines[1:]:
+            ls = ln.strip()
+            if not (ls.startswith("%") or ls.startswith("ROOT")):
+                continue
+            f = _dot_flops(ls, sym)
+            if f:
+                flops += m * f
+            kind = None
+            for c in _COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", ls) and "-done" not in ls.split("=")[0]:
+                    kind = c
+                    break
+            if kind:
+                ops_m = re.search(rf"{kind}(?:-start)?\(([^)]*)\)", ls)
+                b = 0
+                if ops_m:
+                    for o in ops_m.group(1).split(","):
+                        o = o.strip().lstrip("%")
+                        if o in sym:
+                            b += _shape_bytes(*sym[o])
+                if b == 0:  # fall back to result type
+                    tm = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*([a-z][a-z0-9]*)\[([0-9,]*)\]", ls)
+                    if tm:
+                        b = _shape_bytes(tm.group(1), tm.group(2))
+                coll[kind] += m * b
+                heavy.append((kind, b, m))
+            if not in_internal and not any(s in ls for s in _SKIP_BYTES_OPS):
+                tm = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(?:\()?([a-z][a-z0-9]*)\[([0-9,]*)\]", ls)
+                if tm:
+                    b = _shape_bytes(tm.group(1), tm.group(2))
+                    # operands
+                    call = re.search(r"\(([^)]*)\)", ls.split("=", 1)[1])
+                    if call:
+                        for o in call.group(1).split(","):
+                            o = o.strip().lstrip("%")
+                            if o in sym:
+                                b += _shape_bytes(*sym[o])
+                    hbm += m * b
+    heavy.sort(key=lambda x: -x[1] * x[2])
+    return HloCosts(flops=flops, hbm_bytes=hbm, coll_bytes=sum(coll.values()),
+                    coll_breakdown=coll, per_collective=heavy[:20])

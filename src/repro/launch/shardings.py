@@ -1,0 +1,233 @@
+"""PartitionSpec rules: map params / batches / decode states onto the mesh.
+
+Mesh semantics (DESIGN.md §4): ``model`` = horizontal layer (tensor
+parallel), ``data`` (+``pod``) = vertical layer (batch / bundles).
+``fsdp_tp`` additionally shards the big weight matrices (and hence
+optimizer state) along the data axes — ZeRO-3-style, required for
+arctic-480b / deepseek-67b.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey, tree_map_with_path
+
+from ..models.config import ModelConfig
+
+TP = "model"
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axes_ok(mesh: Mesh, shape, spec: P) -> bool:
+    """True if every sharded dim divides evenly (jit input requirement)."""
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n:
+            return False
+    return True
+
+
+def _pick(mesh: Mesh, shape, *candidates: P) -> P:
+    for c in candidates:
+        if _axes_ok(mesh, shape, c):
+            return c
+    return P(*([None] * len(shape)))
+
+
+def _param_rule(pstr: str, shape, cfg: ModelConfig, mesh: Mesh) -> P:
+    ndim = len(shape)
+    dp = dp_axes(mesh)
+    fsdp = dp if cfg.param_sharding == "fsdp_tp" else None
+    stacked = pstr.startswith("segments/")
+    lead = (None,) if stacked else ()
+
+    def spec(*tail):
+        full = lead + tail
+        assert len(full) == ndim, (pstr, ndim, full)
+        # drop the fsdp axes (not TP) if they don't divide
+        if _axes_ok(mesh, shape, P(*full)):
+            return P(*full)
+        relaxed = tuple(None if (a == fsdp and a is not None) else a for a in full)
+        if _axes_ok(mesh, shape, P(*relaxed)):
+            return P(*relaxed)
+        return _pick(mesh, shape, P(*full), P(*relaxed))
+
+    last = pstr.rsplit("/", 1)[-1]
+    # ---------------- embeddings / head ----------------
+    if pstr in ("embed/table", "lm_head/table"):
+        # vocab on model (the LM-head layout switch); fall back to sharding
+        # d_model when the vocab is not 16-divisible (hubert/granite/hymba)
+        return _pick(mesh, shape, P(TP, fsdp), P(TP, None), P(fsdp, TP),
+                     P(None, TP))
+    if pstr.startswith("frontend/"):
+        return _pick(mesh, shape, P(None, TP) if ndim == 2 else P(TP))
+    # ---------------- norms & small vectors ----------------
+    if "norm" in pstr or last in ("scale", "bias", "b", "mu_x", "w0", "dt_bias",
+                                  "ln_scale", "q_norm", "k_norm", "D"):
+        return spec(*([None] * (ndim - len(lead))))
+    # ---------------- attention ----------------
+    if "/attn/" in pstr:
+        if "/wo/" in pstr:
+            return spec(TP, fsdp)
+        return spec(fsdp, TP)  # wq/wk/wv: output (heads) dim on model
+    # ---------------- MoE ----------------
+    if "/moe/router" in pstr:
+        return spec(None, None)
+    if "/moe/experts/" in pstr:
+        if cfg.moe_expert_sharding == "data_zero":
+            # storage sharded over data axes (ZeRO), replicated at compute:
+            # dispatch math stays shard-local (no collectives) and GSPMD
+            # re-gathers the small expert weights once per layer.
+            zshard = dp  # shard the widest inner dim over the data axes
+            if last == "down":  # [E, ff, d]
+                return _pick(mesh, shape, P(*(lead + (None, zshard, None))),
+                             P(*(lead + (None, None, zshard))))
+            return _pick(mesh, shape, P(*(lead + (None, zshard, None))),  # [E,d,ff]
+                         P(*(lead + (None, None, zshard))))
+        # expert parallelism on model; if n_experts is not 16-divisible
+        # fall back to TP inside the expert ffn dim
+        if last == "down":
+            return _pick(mesh, shape, P(*(lead + (TP, None, fsdp))),
+                         P(*(lead + (TP, None, None))),
+                         P(*(lead + (None, TP, fsdp))),
+                         P(*(lead + (None, TP, None))))
+        return _pick(mesh, shape, P(*(lead + (TP, fsdp, None))),
+                     P(*(lead + (TP, None, None))),
+                     P(*(lead + (None, fsdp, TP))),
+                     P(*(lead + (None, None, TP))))
+    if "/moe/dense/" in pstr or "/mlp/" in pstr:
+        if "down" in pstr:
+            return spec(TP, fsdp)
+        return spec(fsdp, TP)
+    # ---------------- RWKV6 ----------------
+    if "/time_mix/" in pstr:
+        if last in ("Wr", "Wk", "Wv", "Wg"):
+            return spec(fsdp, TP)
+        if last == "Wo":
+            return spec(TP, fsdp)
+        if last == "u":
+            return spec(TP, None)
+        return spec(*([None] * (ndim - len(lead))))  # loras, mu
+    if "/channel_mix/" in pstr:
+        if last == "Wv":
+            return spec(TP, fsdp)
+        return spec(fsdp, TP) if last in ("Wk", "Wr") else spec(*([None] * (ndim - len(lead))))
+    # ---------------- Mamba ----------------
+    if "/mamba/" in pstr:
+        if last == "in_proj":
+            return spec(fsdp, TP)
+        if last in ("x_proj", "out_proj", "A_log"):
+            return spec(TP, None)
+        if last == "conv_w":
+            return spec(None, TP)
+        return spec(*([None] * (ndim - len(lead))))
+    # default: replicate
+    return P(*([None] * ndim))
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_shape):
+    """PartitionSpec pytree matching the params pytree (shapes suffice)."""
+
+    def rule(path, leaf):
+        return _param_rule(_path_str(path), tuple(leaf.shape), cfg, mesh)
+
+    return tree_map_with_path(rule, params_shape)
+
+
+def opt_pspecs(cfg: ModelConfig, mesh: Mesh, opt_state_shape, params_spec):
+    """Optimizer-state specs: moments follow params; int8 codes are
+    flat-sharded across every mesh axis (pure memory layout)."""
+    flat_axes = tuple(mesh.axis_names)
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        if pstr == "step":
+            return P()
+        # strip leading m/ or v/
+        sub = pstr.split("/", 1)[1] if "/" in pstr else pstr
+        if cfg.optimizer_dtype == "int8":
+            # (codes [nblk, BLOCK], scales [nblk, 1]) leaves — flat-sharded
+            return _pick(mesh, leaf.shape, P(flat_axes, None),
+                         P(("data", "model"), None), P(("model",), None),
+                         P(("data",), None))
+        ps = params_spec
+        for k in sub.split("/"):
+            ps = ps[int(k)] if isinstance(ps, list) else ps[k]
+        return ps
+
+    return tree_map_with_path(rule, opt_state_shape)
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, batch_shape):
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        bdp = dp if (dp and b % _axes_size(mesh, dp) == 0) else ()
+        return P(bdp if bdp else None, *([None] * (leaf.ndim - 1)))
+
+    return tree_map_with_path(rule, batch_shape)
+
+
+def _axes_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def decode_state_pspecs(cfg: ModelConfig, mesh: Mesh, state_shape, batch: int):
+    """Ring/KV caches: batch on data axes when divisible, ring axis (S / W)
+    sharded on ``model`` — decode softmax then reduces tiny [B,H] partials
+    over ``model`` instead of moving the cache."""
+    dp = dp_axes(mesh)
+    bdp = dp if batch % _axes_size(mesh, dp) == 0 else None
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        last = pstr.rsplit("/", 1)[-1]
+        nd = leaf.ndim
+        sh = tuple(leaf.shape)
+        if last in ("k", "v"):  # [Ls,B,W,H,hd]: ring axis W on model
+            return _pick(mesh, sh, P(None, bdp, TP, None, None),
+                         P(None, bdp, None, None, None))
+        if last == "wkv":  # [Ls,B,H,hd,hd]
+            return _pick(mesh, sh, P(None, bdp, TP, None, None),
+                         P(None, bdp, None, None, None))
+        if last == "ssm":  # [Ls,B,di,N]
+            return _pick(mesh, sh, P(None, bdp, TP, None),
+                         P(None, bdp, None, None))
+        if last == "conv":  # [Ls,B,3,di]
+            return _pick(mesh, sh, P(None, bdp, None, TP),
+                         P(None, bdp, None, None))
+        if last in ("x_tm", "x_cm"):
+            return _pick(mesh, sh, P(None, bdp, None))
+        return P(*([None] * nd))
+
+    return tree_map_with_path(rule, state_shape)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,104 @@
+"""Training launcher: data pipeline -> train_step loop with checkpointing,
+health tracking, and (multi-pod) compressed cross-pod gradient reduction.
+
+On this CPU container it runs reduced configs end-to-end (the examples use
+it); on a cluster the same entry point runs the full configs — the mesh
+and shardings are identical to the dry-run's.
+
+XLA flags for the real run (latency hiding / collective overlap) are
+centralized in ``tpu_xla_flags()`` and documented in EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke_config
+from ..data import DataConfig, TokenPipeline
+from ..models import steps as steps_mod
+from ..models import transformer as tfm
+from ..optim import adamw
+from ..runtime import StepTimer
+from ..checkpoint import CheckpointManager, restore
+from .shardings import batch_pspecs, opt_pspecs, param_pspecs, to_shardings
+
+log = logging.getLogger("repro.train")
+
+
+def tpu_xla_flags() -> str:
+    """Production XLA flags: enable async collectives + latency-hiding
+    scheduler so the halo/gradient collectives overlap local compute."""
+    return " ".join([
+        "--xla_enable_async_all_gather=true",
+        "--xla_enable_async_collective_permute=true",
+        "--xla_tpu_enable_async_collective_fusion=true",
+        "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+        "--xla_latency_hiding_scheduler_rerun=2",
+    ])
+
+
+def train(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
+          smoke: bool = True, mesh=None, ckpt_dir: str | None = None,
+          log_every: int = 10, opt_overrides: dict | None = None):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    ocfg = adamw.AdamWConfig(moment_dtype=cfg.optimizer_dtype, warmup_steps=10,
+                             total_steps=steps, **(opt_overrides or {}))
+    pipe = TokenPipeline(cfg)
+    key = jax.random.PRNGKey(0)
+    params, opt_state = steps_mod.init_train_state(cfg, ocfg, key)
+    step_fn = steps_mod.make_train_step(cfg, ocfg)
+    if mesh is not None:
+        pshape = jax.eval_shape(lambda: tfm.init_params(cfg, key))
+        pspec = param_pspecs(cfg, mesh, pshape)
+        psh = to_shardings(mesh, pspec)
+        params = jax.device_put(params, psh)
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    manager = CheckpointManager(ckpt_dir, interval=max(steps // 3, 1)) if ckpt_dir else None
+    start = 0
+    if manager is not None:
+        try:
+            (params, opt_state), start, extra = restore(
+                manager.directory, (params, opt_state))
+            start += 1
+            log.info("resumed at step %d", start)
+        except FileNotFoundError:
+            pass
+    timer = StepTimer()
+    losses = []
+    for i in range(start, steps):
+        b = pipe.batch(i, batch, seq)
+        timer.start()
+        params, opt_state, metrics = jitted(params, opt_state, b)
+        loss = float(metrics["loss"])
+        timer.stop()
+        losses.append(loss)
+        if manager is not None:
+            manager.maybe_save(i, (params, opt_state), extra={"pipeline_index": i})
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[train {arch}] step {i:5d} loss {loss:.4f} "
+                  f"({timer.ewma:.3f}s/step ewma)")
+    return params, opt_state, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true", help="full (non-smoke) config")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+    train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+          smoke=not args.full, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

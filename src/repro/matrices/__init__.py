@@ -1,0 +1,21 @@
+"""ScaMaC-equivalent scalable matrix collection (host-side generators)."""
+from .families import MatrixFamily, available_families, get_family
+from .sparse import CSR, csr_from_coo, csr_to_ell, uniform_partition
+from .exciton import Exciton
+from .hubbard import Hubbard
+from .spinchain import SpinChainXXZ
+from .topins import TopIns
+
+__all__ = [
+    "MatrixFamily",
+    "available_families",
+    "get_family",
+    "CSR",
+    "csr_from_coo",
+    "csr_to_ell",
+    "uniform_partition",
+    "Exciton",
+    "Hubbard",
+    "SpinChainXXZ",
+    "TopIns",
+]

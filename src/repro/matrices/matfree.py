@@ -1,0 +1,39 @@
+"""Matrix-free / structured device formats built from the generators.
+
+``dia_from_family`` extracts the diagonal-offset (DIA) representation used
+by the flagship Pallas kernel (kernels/cheb_dia.py): lattice Hamiltonians
+(Exciton, TopIns) are unions of a few dozen shifted diagonals, so the
+SpMMV becomes gather-free shifted FMAs — the TPU-native reformulation of
+SELL-C-sigma (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .families import MatrixFamily
+
+
+def dia_from_family(fam: MatrixFamily, pad_to: int = 8, rows: slice | None = None,
+                    max_diags: int = 128):
+    """Extract (offsets, dvals [n_diag, R_pad], R_pad) for a row block.
+
+    ``rows`` selects a contiguous block (default: all rows). Offsets are
+    col - row; entries whose target falls outside the block land on the
+    same offsets (the caller provides x with halo so i + off indexes it).
+    """
+    lo = rows.start if rows else 0
+    hi = rows.stop if rows else fam.D
+    r, c, v = fam.row_entries(np.arange(lo, hi, dtype=np.int64))
+    off = c - r
+    offsets = np.unique(off)
+    if len(offsets) > max_diags:
+        raise ValueError(
+            f"{fam.name}: {len(offsets)} distinct diagonals — not DIA-structured"
+        )
+    R = hi - lo
+    R_pad = -(-R // pad_to) * pad_to
+    dtype = np.complex64 if fam.is_complex else np.float32
+    dvals = np.zeros((len(offsets), R_pad), dtype=dtype)
+    pos = np.searchsorted(offsets, off)
+    dvals[pos, r - lo] = v.astype(dtype)
+    return [int(o) for o in offsets], dvals, R_pad

@@ -1,0 +1,112 @@
+"""CSR / ELL sparse utilities and row partitioning (host-side, numpy).
+
+These are the host-side building blocks of the distributed SpMV engine:
+the partitioner in ``core/spmv.py`` consumes CSR patterns produced here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+__all__ = ["CSR", "uniform_partition", "csr_from_coo", "csr_to_ell"]
+
+
+@dataclasses.dataclass
+class CSR:
+    """Compressed-row-storage matrix. ``data`` may be None (pattern only)."""
+
+    indptr: np.ndarray  # int64, shape (D+1,)
+    indices: np.ndarray  # int64, shape (nnz,)
+    data: np.ndarray | None  # float64/complex128 or None
+    shape: tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def n_nzr(self) -> float:
+        return self.nnz / self.shape[0]
+
+    def row_slice(self, a: int, b: int) -> "CSR":
+        """Rows [a:b) as a (b-a) x D CSR."""
+        lo, hi = int(self.indptr[a]), int(self.indptr[b])
+        return CSR(
+            indptr=self.indptr[a : b + 1] - lo,
+            indices=self.indices[lo:hi],
+            data=None if self.data is None else self.data[lo:hi],
+            shape=(b - a, self.shape[1]),
+        )
+
+    def to_dense(self) -> np.ndarray:
+        D0, D1 = self.shape
+        out = np.zeros((D0, D1), dtype=self.data.dtype if self.data is not None else np.float64)
+        rows = np.repeat(np.arange(D0), np.diff(self.indptr))
+        out[rows, self.indices] = 1.0 if self.data is None else self.data
+        return out
+
+    def matvec(self, x: np.ndarray) -> np.ndarray:
+        """Reference (numpy) SpMV / SpMMV, x of shape (D,) or (D, n_b)."""
+        rows = np.repeat(np.arange(self.shape[0]), np.diff(self.indptr))
+        contrib = self.data[:, None] * x[self.indices] if x.ndim == 2 else self.data * x[self.indices]
+        out = np.zeros((self.shape[0],) + x.shape[1:], dtype=np.result_type(self.data, x))
+        np.add.at(out, rows, contrib)
+        return out
+
+
+def uniform_partition(D: int, P: int) -> np.ndarray:
+    """Row boundaries k_0..k_P (Eq. in Sec 3.4): k_p = round(p * D / P)."""
+    return np.round(np.arange(P + 1) * (D / P)).astype(np.int64)
+
+
+def csr_from_coo(rows, cols, vals, shape) -> CSR:
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    vals = None if vals is None else np.asarray(vals)[order]
+    # coalesce duplicates
+    if len(rows):
+        key_same = np.zeros(len(rows), dtype=bool)
+        key_same[1:] = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
+        if key_same.any():
+            grp = np.cumsum(~key_same) - 1
+            n = grp[-1] + 1
+            r2 = np.zeros(n, dtype=np.int64)
+            c2 = np.zeros(n, dtype=np.int64)
+            r2[grp[::-1]] = rows[::-1]
+            c2[grp[::-1]] = cols[::-1]
+            if vals is not None:
+                v2 = np.zeros(n, dtype=vals.dtype)
+                np.add.at(v2, grp, vals)
+                vals = v2
+            rows, cols = r2, c2
+    indptr = np.zeros(shape[0] + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSR(indptr=indptr, indices=cols, data=vals, shape=tuple(shape))
+
+
+def csr_to_ell(csr: CSR, width: int | None = None, pad_col: int = 0):
+    """Convert CSR to padded ELL: (cols[D, W], vals[D, W], valid[D, W]).
+
+    Padded entries point at ``pad_col`` with value 0 so a dense gather +
+    multiply-accumulate is exact. This is the host-side layout used by the
+    Pallas kernel and the jnp reference.
+    """
+    D = csr.shape[0]
+    counts = np.diff(csr.indptr)
+    W = int(counts.max()) if width is None else width
+    if W < counts.max():
+        raise ValueError(f"ELL width {W} < max row nnz {counts.max()}")
+    cols = np.full((D, W), pad_col, dtype=np.int32)
+    dtype = csr.data.dtype if csr.data is not None else np.float64
+    vals = np.zeros((D, W), dtype=dtype)
+    valid = np.zeros((D, W), dtype=bool)
+    slot = (np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], counts)).astype(np.int64)
+    rows = np.repeat(np.arange(D), counts)
+    cols[rows, slot] = csr.indices
+    if csr.data is not None:
+        vals[rows, slot] = csr.data
+    valid[rows, slot] = True
+    return cols, vals, valid

@@ -1,0 +1,11 @@
+"""LM substrate: model definitions for the assigned architecture pool."""
+from .config import ModelConfig, SHAPES, ShapeCell, applicable_shapes
+from .steps import (init_train_state, make_batch, make_decode_step,
+                    make_prefill_step, make_train_step)
+from .transformer import init_params, loss_fn
+
+__all__ = [
+    "ModelConfig", "SHAPES", "ShapeCell", "applicable_shapes",
+    "init_train_state", "make_batch", "make_decode_step", "make_prefill_step",
+    "make_train_step", "init_params", "loss_fn",
+]

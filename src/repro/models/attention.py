@@ -1,0 +1,148 @@
+"""GQA attention: chunked online-softmax (flash-style) for train/prefill,
+cache-based single-token path for decode. Pure JAX — the chunked form is
+the TPU-right structure (VMEM-sized KV blocks, no S x S score tensor) and
+doubles as the oracle for a future Pallas port.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import apply_linear, apply_rope, init_linear, rms_head_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": init_linear(ks[0], d, cfg.q_dim, cfg, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.kv_dim, cfg, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.kv_dim, cfg, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.q_dim, d, cfg),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), jnp.dtype(cfg.dtype))
+        p["k_norm"] = jnp.ones((cfg.hd,), jnp.dtype(cfg.dtype))
+    return p
+
+
+def _qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    q = apply_linear(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = apply_linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = apply_linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 1024, group: int = 1):
+    """Online-softmax attention over KV chunks.
+
+    q [B,Sq,H,hd], k/v [B,Sk,Hkv,hd] with H = Hkv*group. Memory per step is
+    O(Sq * chunk), never O(Sq * Sk). ``window`` > 0 restricts to a sliding
+    window (queries attend to keys in (pos-window, pos]).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    Sk_pad = n_chunks * chunk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, hd)
+    qg = q.reshape(B, Sq, Hkv, H // Hkv, hd)
+    scale = float(1.0 / np.sqrt(hd))
+    q_pos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, cidx = inp
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = k_pos[None, :] < Sk
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        # window may be a traced per-layer value; 0 disables it
+        w_lim = jnp.where(window > 0, window, Sk + Sq + 2)
+        mask &= k_pos[None, :] > q_pos[:, None] - w_lim
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Sq, Hkv, H // Hkv), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, H // Hkv), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, H // Hkv, hd), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc_t, vc_t, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_block(p, cfg, x, positions, *, causal=True, window=0, return_kv=False):
+    """Full attention sublayer for train/prefill. x [B,S,d]."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    group = cfg.n_heads // cfg.n_kv_heads
+    out = chunked_attention(q, k, v, causal=causal, window=window, group=group)
+    B, S = x.shape[:2]
+    y = apply_linear(p["wo"], out.reshape(B, S, cfg.q_dim))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ------------------------------------------------------------------ decode --
+
+def init_kv_cache(cfg, batch, max_len, layers=None, dtype=None):
+    L = layers if layers is not None else cfg.n_layers
+    dt = jnp.dtype(dtype or cfg.dtype)
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_attention(p, cfg, x, cache_k, cache_v, pos, *, window=0):
+    """Single-token attention against a KV cache.
+
+    x [B,1,d]; cache_k/v [B,Smax,Hkv,hd]; pos scalar int32 (current index).
+    Returns (out [B,1,d], new_k, new_v).
+    """
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, pos[None] if pos.ndim == 0 else pos)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    Smax = cache_k.shape[1]
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, cfg.n_kv_heads, group, cfg.hd)
+    scale = float(1.0 / np.sqrt(cfg.hd))
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(Smax)
+    mask = k_pos <= pos
+    w_lim = jnp.where(jnp.asarray(window) > 0, window, Smax + 2)
+    mask &= k_pos > pos - w_lim
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", pr.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    return apply_linear(p["wo"], out), cache_k, cache_v

@@ -1,0 +1,165 @@
+"""Serving paths: prefill (build decode state) and single-token decode.
+
+Decode caches are *ring buffers*: slot = pos % W with W = min(window, S_max)
+for sliding-window layers and W = S_max for full-attention layers. The
+absolute position of slot j at time pos is p_j = pos - ((pos - j) % W),
+which yields the correct causal/sliding mask for both cases with one
+formula. SSM layers (RWKV6 / Mamba) carry O(1) recurrent states instead —
+that is why those archs run the long_500k cell.
+
+Cache sharding (see launch/shardings.py): the ring axis W is sharded over
+the ``model`` mesh axis — attention against the cache then reduces tiny
+[B,H]-sized partial softmax statistics over ``model`` instead of gathering
+the cache (the decode-side analog of the paper's "communicate the small
+thing, not the vectors").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import ssm
+from .attention import NEG_INF, _qkv
+from .config import ModelConfig
+from .layers import apply_linear, apply_mlp, apply_norm, embed, unembed
+from .transformer import lm_head_table
+from . import moe as moe_mod
+
+
+# ----------------------------------------------------------- ring caches --
+
+def ring_update(ck, cv, k, v, pos):
+    """ck/cv [B,W,H,hd]; k/v [B,1,H,hd]; write slot pos % W."""
+    W = ck.shape[1]
+    slot = pos % W
+    ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    return ck, cv
+
+
+def ring_attend(p, cfg: ModelConfig, q, ck, cv, pos, window):
+    """q [B,1,H,hd] (rope applied); returns attention output [B,1,q_dim]."""
+    B = q.shape[0]
+    W = ck.shape[1]
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, cfg.n_kv_heads, group, cfg.hd)
+    scale = float(1.0 / np.sqrt(cfg.hd))
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, ck,
+                   preferred_element_type=jnp.float32) * scale
+    j = jnp.arange(W)
+    p_j = pos - ((pos - j) % W)  # absolute position stored in slot j
+    mask = (p_j >= 0) & (p_j <= pos)
+    w_lim = jnp.where(jnp.asarray(window) > 0, window, W + pos + 2)
+    mask &= p_j > pos - w_lim
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", pr.astype(jnp.float32),
+                     cv.astype(jnp.float32))
+    return out.reshape(B, 1, cfg.q_dim).astype(q.dtype)
+
+
+def attn_decode(p, cfg: ModelConfig, x, ck, cv, pos, window):
+    q, k, v = _qkv(p, cfg, x, pos[None])
+    ck, cv = ring_update(ck, cv, k, v, pos)
+    out = ring_attend(p, cfg, q, ck, cv, pos, window)
+    return apply_linear(p["wo"], out), ck, cv
+
+
+# ------------------------------------------------------------ block paths --
+
+def block_decode(lp, cfg: ModelConfig, x, st, pos, window):
+    """One layer, one token. st is this layer's state dict."""
+    if cfg.family == "ssm":
+        xin = apply_norm(lp["norm1"], x)
+        y, wkv, x_tm = ssm.rwkv_time_mix(
+            lp["time_mix"], cfg, xin, state=st["wkv"], x_prev=st["x_tm"]
+        )
+        x = x + y
+        xin = apply_norm(lp["norm2"], x)
+        y, x_cm = ssm.rwkv_channel_mix(lp["channel_mix"], cfg, xin, x_prev=st["x_cm"])
+        return x + y, {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}
+    xin = apply_norm(lp["norm1"], x)
+    a, ck, cv = attn_decode(lp["attn"], cfg, xin, st["k"], st["v"], pos, window)
+    new_st = {"k": ck, "v": cv}
+    if cfg.hybrid:
+        m, h_ssm, conv = ssm.mamba_block(
+            lp["mamba"], cfg, xin, state=st["ssm"], conv_state=st["conv"]
+        )
+        a = 0.5 * (apply_norm(lp["norm_attn"], a) + apply_norm(lp["norm_mamba"], m))
+        new_st["ssm"], new_st["conv"] = h_ssm, conv
+    x = x + a
+    xin = apply_norm(lp["norm2"], x)
+    if cfg.n_experts:
+        y = moe_mod.apply_moe_decode(lp["moe"], cfg, xin)
+    else:
+        y = apply_mlp(lp["mlp"], xin, cfg.activation)
+    return x + y, new_st
+
+
+# --------------------------------------------------------- state creation --
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Zero decode state: one entry per homogeneous segment (used by the
+    dry-run input_specs and by serving). Sliding-window segments allocate
+    ring buffers of the window size only — at 500k context the SWA layers
+    hold 2048-deep caches while the 3 global layers hold the full ring."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    d = cfg.d_model
+    states = []
+    for (a, b, w) in cfg.segments():
+        Ls = b - a
+        if cfg.family == "ssm":
+            H = cfg.n_heads
+            hd = d // H
+            states.append({
+                "wkv": jnp.zeros((Ls, batch, H, hd, hd), jnp.float32),
+                "x_tm": jnp.zeros((Ls, batch, d), dt),
+                "x_cm": jnp.zeros((Ls, batch, d), dt),
+            })
+            continue
+        W = min(w, max_len) if w > 0 else max_len
+        st = {
+            "k": jnp.zeros((Ls, batch, W, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((Ls, batch, W, cfg.n_kv_heads, cfg.hd), dt),
+        }
+        if cfg.hybrid:
+            st["ssm"] = jnp.zeros((Ls, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+            st["conv"] = jnp.zeros((Ls, batch, 3, cfg.d_inner), dt)
+        states.append(st)
+    return states
+
+
+# ------------------------------------------------------------ decode step --
+
+def decode_step(params, cfg: ModelConfig, state, token, pos):
+    """One new token for every sequence. token [B] int32; pos scalar int32.
+    Returns (logits [B, vocab], new_state)."""
+    x = embed(params["embed"], token[:, None])  # [B,1,d]
+    new_states = []
+    for (a, b, w), blocks, st in zip(cfg.segments(), params["segments"], state):
+
+        def body(x, inp, _w=w):
+            lp, s = inp
+            x, new_s = block_decode(lp, cfg, x, s, pos, _w)
+            return x, new_s
+
+        x, new_st = lax.scan(body, x, (blocks, st))
+        new_states.append(new_st)
+    h = apply_norm(params["final_norm"], x)
+    logits = h[:, 0] @ lm_head_table(params, cfg).T
+    return logits, new_states
+
+
+# ----------------------------------------------------------------- prefill --
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """Process a full prompt, returning (last-position logits, decode state).
+
+    Implemented as the train-path backbone with per-layer KV collection;
+    recurrent layers (rwkv/mamba) return their final states directly.
+    """
+    from .transformer import backbone_with_state
+
+    return backbone_with_state(params, cfg, batch, max_len)

@@ -1,0 +1,113 @@
+"""Shared neural-net primitives (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Init = jax.nn.initializers
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ norms --
+
+def init_norm(key, d, cfg):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), _dtype(cfg)), "bias": jnp.zeros((d,), _dtype(cfg))}
+    return {"scale": jnp.ones((d,), _dtype(cfg))}
+
+
+def apply_norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps=1e-6):
+    """Per-head RMS norm (qk_norm), x [..., H, hd]."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- linear --
+
+def init_linear(key, d_in, d_out, cfg, bias=False, scale=None):
+    std = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * std).astype(_dtype(cfg))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), _dtype(cfg))
+    return p
+
+
+def apply_linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ----------------------------------------------------------------- rotary --
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+
+
+def apply_rope(x, positions, theta):
+    """x [..., S, H, hd] (or [..., H, hd] with scalar positions broadcast)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLPs --
+
+def init_mlp(key, d, d_ff, cfg):
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {
+            "gate": init_linear(ks[0], d, d_ff, cfg),
+            "up": init_linear(ks[1], d, d_ff, cfg),
+            "down": init_linear(ks[2], d_ff, d, cfg),
+        }
+    return {"up": init_linear(ks[0], d, d_ff, cfg), "down": init_linear(ks[1], d_ff, d, cfg)}
+
+
+def apply_mlp(p, x, activation: str):
+    if activation == "swiglu":
+        h = jax.nn.silu(apply_linear(p["gate"], x)) * apply_linear(p["up"], x)
+    elif activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(apply_linear(p["up"], x)))
+    else:
+        h = jax.nn.gelu(apply_linear(p["up"], x))
+    return apply_linear(p["down"], h)
+
+
+# -------------------------------------------------------------- embedding --
+
+def init_embed(key, vocab, d, cfg):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(_dtype(cfg))}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Logits via the (tied or separate) output table [vocab, d]."""
+    return x @ p["table"].T

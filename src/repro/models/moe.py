@@ -1,0 +1,157 @@
+"""Mixture-of-experts layer with capacity-based dispatch.
+
+The dispatch is the LM-side instance of the paper's layout switch: tokens
+leave the data (vertical) layout, are scattered into expert buffers that
+live in the model (horizontal) layout, and are combined back — an explicit
+redistribution whose amortization is governed by the same r-vs-s accounting
+as Alg. 1 steps 7/9 (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import init_linear
+
+
+def init_moe(key, cfg):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    import numpy as np
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, shape) / np.sqrt(fan_in)).astype(dt)
+
+    p = {"router": w(ks[0], (d, E), d)}
+    if cfg.activation == "swiglu":
+        p["experts"] = {
+            "gate": w(ks[1], (E, d, ff), d),
+            "up": w(ks[2], (E, d, ff), d),
+            "down": w(ks[3], (E, ff, d), ff),
+        }
+    else:
+        p["experts"] = {"up": w(ks[1], (E, d, ff), d), "down": w(ks[2], (E, ff, d), ff)}
+    if cfg.dense_residual:
+        from .layers import init_mlp
+
+        p["dense"] = init_mlp(ks[4], d, cfg.dense_d_ff or cfg.d_ff, cfg)
+    return p
+
+
+def _expert_ffn(pe, cfg, buf):
+    """buf [E, C, d] -> [E, C, d], batched over experts."""
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, pe["gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, pe["up"])
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", buf, pe["up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, pe["up"]))
+    return jnp.einsum("ecf,efd->ecd", h, pe["down"])
+
+
+def apply_moe(p, cfg, x, capacity_factor: float = 1.25, n_groups: int | None = None):
+    """x [B,S,d] -> ([B,S,d], aux_loss).
+
+    Group-local dispatch: tokens are partitioned into G groups aligned with
+    the data shards; all position bookkeeping (cumsum over the one-hot
+    assignment) happens *within* a group, so it is shard-local under
+    GSPMD — no cross-device dependency exists before the single
+    buffers-to-experts all_to_all (the unavoidable EP redistribution,
+    exactly the paper's vertical->horizontal layout switch). The earlier
+    global-cumsum formulation serialized a [T*k, E] prefix sum across the
+    whole mesh and dominated the collective roofline term (§Perf log).
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    G = n_groups or min(B, 32)  # groups align with batch/data shards
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)  # [G, Tg, E]
+    gates, idx = lax.top_k(logits, k)  # [G, Tg, k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # load-balancing auxiliary loss (Switch-style)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=2), axis=(0, 1)
+    )
+    frac_probs = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    Cg = max(int(Tg * k / E * capacity_factor), 1)
+    flat_e = idx.reshape(G, Tg * k)  # expert of each (token, slot) per group
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [G, Tg*k, E]
+    pos_all = jnp.cumsum(oh, axis=1) - oh  # group-local prefix sums
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < Cg
+    pos_c = jnp.where(keep, pos, Cg)  # dropped tokens land in slot Cg
+
+    src = jnp.repeat(xt, k, axis=1)  # [G, Tg*k, d]
+    buf = jnp.zeros((G, E, Cg + 1, d), x.dtype)
+    gidx = jnp.arange(G)[:, None] * jnp.ones_like(flat_e)
+    buf = buf.at[gidx, flat_e, pos_c].add(src, mode="drop")
+    out_buf = _expert_ffn_grouped(p["experts"], cfg, buf[:, :, :Cg])
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((G, E, 1, d), out_buf.dtype)], axis=2)
+    gathered = out_buf[gidx, flat_e, pos_c]  # [G, Tg*k, d]
+    w = (gates.reshape(G, Tg * k) * keep).astype(x.dtype)
+    y = (gathered * w[..., None]).reshape(G, Tg, k, d).sum(axis=2)
+    y = y.reshape(B, S, d)
+    if "dense" in p:
+        from .layers import apply_mlp
+
+        y = y + apply_mlp(p["dense"], x, cfg.activation)
+    return y, aux * cfg.router_aux_coef
+
+
+def _expert_ffn_grouped(pe, cfg, buf):
+    """buf [G, E, Cg, d] -> same; the g axis rides along the expert batch
+    (the [G->E] resharding here is the one EP all_to_all)."""
+    # NOTE (§Perf iteration log): forcing the ZeRO-stored weights to be
+    # re-gathered here (with_sharding_constraint to replicated) removed
+    # 14.6 s of collective time but re-ran the full expert compute on every
+    # model shard (26x flops) — net regression, reverted.
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, pe["gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", buf, pe["up"])
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("gecd,edf->gecf", buf, pe["up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, pe["up"]))
+    return jnp.einsum("gecf,efd->gecd", h, pe["down"])
+
+
+def apply_moe_decode(p, cfg, x):
+    """Single-token MoE (decode): dense top-k gather, no capacity buffers.
+
+    x [B,1,d]; with B small, computing the k selected experts per token via
+    gathered weight slices is cheaper than buffer dispatch.
+    """
+    B, _, d = x.shape
+    xt = x.reshape(B, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    gates, idx = lax.top_k(logits, cfg.top_k)  # [B, k]
+    gates = jax.nn.softmax(gates, axis=-1)
+    pe = p["experts"]
+
+    def one_expert(e_idx, xi):
+        if cfg.activation == "swiglu":
+            h = jax.nn.silu(xi @ pe["gate"][e_idx]) * (xi @ pe["up"][e_idx])
+        elif cfg.activation == "squared_relu":
+            h = jnp.square(jax.nn.relu(xi @ pe["up"][e_idx]))
+        else:
+            h = jax.nn.gelu(xi @ pe["up"][e_idx])
+        return h @ pe["down"][e_idx]
+
+    # [B, k, d] via vmap over batch and slots
+    y = jax.vmap(lambda ei, xi: jax.vmap(lambda e: one_expert(e, xi))(ei))(idx, xt)
+    y = (y * gates[..., None].astype(y.dtype)).sum(axis=1).reshape(B, 1, d)
+    if "dense" in p:
+        from .layers import apply_mlp
+
+        y = y + apply_mlp(p["dense"], x, cfg.activation)
+    return y

@@ -1,0 +1,279 @@
+"""State-space / linear-recurrence blocks: RWKV6 (Finch) and Mamba-style
+selective SSM (for the Hymba hybrid). Sequence recurrences use lax.scan;
+decode threads O(1) per-layer states (no KV cache — the reason these archs
+run the long_500k cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import apply_linear, init_linear
+
+
+# =========================================================== RWKV6 (Finch) ==
+
+LORA_R = 32
+DECAY_LORA_R = 64
+
+
+def init_rwkv_time_mix(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 12)
+    dt = jnp.dtype(cfg.dtype)
+
+    def nrm(k, shape, fan):
+        return (jax.random.normal(k, shape) / np.sqrt(fan)).astype(dt)
+
+    return {
+        "mu_x": jnp.zeros((d,), dt),
+        "mu": jnp.zeros((5, d), dt),  # r, w, k, v, g interpolation
+        "lora_A": nrm(ks[0], (d, 5 * LORA_R), d),
+        "lora_B": nrm(ks[1], (5, LORA_R, d), LORA_R),
+        "w0": jnp.full((d,), -6.0, dt),  # decay bias (slow decay init)
+        "wA": nrm(ks[2], (d, DECAY_LORA_R), d),
+        "wB": nrm(ks[3], (DECAY_LORA_R, d), DECAY_LORA_R) * 0.1,
+        "Wr": nrm(ks[4], (d, d), d),
+        "Wk": nrm(ks[5], (d, d), d),
+        "Wv": nrm(ks[6], (d, d), d),
+        "Wg": nrm(ks[7], (d, d), d),
+        "Wo": nrm(ks[8], (d, d), d),
+        "u": nrm(ks[9], (H, hd), hd),  # per-head bonus
+        "ln_scale": jnp.ones((d,), dt),  # group-norm over heads
+    }
+
+
+def _rwkv_mix(p, x, x_shift):
+    """Data-dependent token-shift interpolation (5 projections)."""
+    xx = x_shift - x
+    xxx = x + xx * p["mu_x"]
+    m = jnp.tanh(xxx @ p["lora_A"])  # [B,S,5R]
+    B, S = x.shape[:2]
+    m = m.reshape(B, S, 5, LORA_R)
+    delta = jnp.einsum("bsfr,frd->bsfd", m, p["lora_B"])  # [B,S,5,d]
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (p["mu"][None, None] + delta)
+    return [mixed[:, :, i] for i in range(5)]  # r, w, k, v, g inputs
+
+
+def _rwkv_decay(p, xw):
+    """Data-dependent per-channel decay w in (0, 1)."""
+    ww = p["w0"].astype(jnp.float32) + jnp.tanh(xw @ p["wA"]).astype(jnp.float32) @ p["wB"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(ww))  # [B,S,d]
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Reference per-token recurrence. r/k/v/w [B,S,H,hd] f32."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B,H,hd] each
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = lax.scan(step, state, xs)  # ys [S,B,H,hd]
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+_EXP_CLAMP = 30.0  # bounds exp(-L_s); pairs beyond it contribute < e^-30
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunk-parallel WKV6 (TPU adaptation — see EXPERIMENTS §Perf).
+
+    Within a chunk of C tokens the recurrence unrolls to matmuls:
+      y_t = A_t @ S_0 + strict_tril(A B^T) V + diag(r·u·k) V,
+      A_t = r_t * exp(L_{t-1}),  B_s = k_s * exp(-L_s),
+      L_t = sum_{u<=t} log w_u   (log w = -exp(ww) is available exactly).
+    The state crosses chunk boundaries only: S -> exp(L_C)*(S + B^T V).
+    HBM state traffic drops from S trips to S/C trips and the inner work
+    becomes MXU matmuls instead of per-token VPU outer products.
+    exp(-L_s) is clamped at e^30: affected (t,s) pairs have true weight
+    exp(L_t - L_s) < e^-30 — below f32 resolution of the sum.
+    """
+    B, S, H, hd = r.shape
+    C = chunk
+    n = S // C
+    rc = r.reshape(B, n, C, H, hd)
+    kc = k.reshape(B, n, C, H, hd)
+    vc = v.reshape(B, n, C, H, hd)
+    logw = jnp.log(jnp.maximum(w, 1e-38)).reshape(B, n, C, H, hd)
+    L = jnp.cumsum(logw, axis=2)  # L_t, inclusive
+    Lm1 = L - logw  # L_{t-1}
+    A = rc * jnp.exp(Lm1)  # [B,n,C,H,hd]
+    Bm = kc * jnp.exp(jnp.minimum(-L, _EXP_CLAMP))
+    scores = jnp.einsum("bnthk,bnshk->bnhts", A, Bm)  # [B,n,H,C,C]
+    tri = jnp.tril(jnp.ones((C, C), bool), -1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    bonus = jnp.einsum("bnthk,bnthk->bnth", rc, u[None, None, None] * kc)
+    intra = jnp.einsum("bnhts,bnshv->bnthv", scores, vc) \
+        + bonus[..., None] * vc
+    # cross-chunk state pass (sequential over n, not S)
+    decay_tot = jnp.exp(L[:, :, -1])  # [B,n,H,hd]
+    kTv = jnp.einsum("bnshk,bnshv->bnhkv", Bm, vc)  # [B,n,H,hd,hd]
+
+    def carry_fn(s, inp):
+        dec, kv_, a_ = inp  # [B,H,hd], [B,H,hd,hd], [B,C,H,hd]
+        y0 = jnp.einsum("bthk,bhkv->bthv", a_, s)
+        s = dec[..., :, None] * (s + kv_)
+        return s, y0
+
+    state, y0 = lax.scan(
+        carry_fn, state,
+        (jnp.moveaxis(decay_tot, 1, 0), jnp.moveaxis(kTv, 1, 0),
+         jnp.moveaxis(A, 1, 0)),
+    )
+    y = intra + jnp.moveaxis(y0, 0, 1).reshape(B, n, C, H, hd)
+    return y.reshape(B, S, H, hd), state
+
+
+def rwkv_time_mix(p, cfg, x, *, state=None, x_prev=None):
+    """x [B,S,d]. state: [B,H,hd,hd] WKV state; x_prev [B,d] last token.
+    Returns (y, new_state, new_x_prev)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    x_shift = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xr, xw, xk, xv, xg = _rwkv_mix(p, x, x_shift)
+    r = (xr @ p["Wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["Wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["Wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["Wg"])
+    w = _rwkv_decay(p, xw).reshape(B, S, H, hd)
+    u = p["u"].astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    args = (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w.astype(jnp.float32))
+    C = getattr(cfg, "ssm_chunk", 64)
+    if C and S % C == 0 and S > C:
+        ys, state = _wkv_chunked(*args, u, state, C)
+    else:
+        ys, state = _wkv_scan(*args, u, state)
+    y = ys.reshape(B, S, d)
+    # group-norm over each head then gate
+    yf = y.reshape(B, S, H, hd)
+    mu = yf.mean(axis=-1, keepdims=True)
+    var = yf.var(axis=-1, keepdims=True)
+    yf = (yf - mu) * lax.rsqrt(var + 1e-5)
+    y = (yf.reshape(B, S, d) * p["ln_scale"].astype(jnp.float32)).astype(x.dtype)
+    y = (y * g.astype(y.dtype)) @ p["Wo"]
+    return y, state, x[:, -1]
+
+
+def init_rwkv_channel_mix(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+
+    def nrm(k, shape, fan):
+        return (jax.random.normal(k, shape) / np.sqrt(fan)).astype(dt)
+
+    return {
+        "mu_k": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt),
+        "Wk": nrm(ks[0], (d, ff), d),
+        "Wv": nrm(ks[1], (ff, d), ff),
+        "Wr": nrm(ks[2], (d, d), d),
+    }
+
+
+def rwkv_channel_mix(p, cfg, x, *, x_prev=None):
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    x_shift = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = x_shift - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    y = jax.nn.sigmoid(xr @ p["Wr"]) * (kk @ p["Wv"])
+    return y, x[:, -1]
+
+
+# ==================================================== Mamba selective SSM ==
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def nrm(k, shape, fan):
+        return (jax.random.normal(k, shape) / np.sqrt(fan)).astype(dtype)
+
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": nrm(ks[0], (d, 2 * di), d),
+        "conv_w": nrm(ks[1], (4, di), 4),  # depthwise causal conv, kernel 4
+        "x_proj": nrm(ks[2], (di, dt_rank + 2 * N), di),
+        "dt_proj": nrm(ks[3], (dt_rank, di), dt_rank),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(A),  # [di, N] float32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": nrm(ks[4], (di, d), di),
+    }
+
+
+def _mamba_scan(A, dtv, Bv, Cv, xv, state):
+    """h_t = exp(dt*A) h + dt*B x ; y_t = C·h. Shapes per step:
+    dtv [B,di], Bv [B,N], Cv [B,N], xv [B,di]; state [B,di,N]."""
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp
+        dA = jnp.exp(dt_t[..., None] * A[None])  # [B,di,N]
+        dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]  # [B,di,N]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    return lax.scan(step, state, (dtv, Bv, Cv, xv))
+
+
+def mamba_block(p, cfg, x, *, state=None, conv_state=None):
+    """x [B,S,d] -> (y, ssm_state [B,di,N], conv_state [B,3,di])."""
+    B, S, d = x.shape
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # [B,S,di]
+    # causal depthwise conv (kernel 4)
+    if conv_state is None:
+        conv_state = jnp.zeros((B, 3, di), xs.dtype)
+    xpad = jnp.concatenate([conv_state, xs], axis=1)  # [B,S+3,di]
+    w = p["conv_w"].astype(xs.dtype)
+    xc = (
+        xpad[:, 0:S] * w[0] + xpad[:, 1 : S + 1] * w[1]
+        + xpad[:, 2 : S + 2] * w[2] + xpad[:, 3 : S + 3] * w[3]
+    )
+    xc = jax.nn.silu(xc)
+    proj = xc @ p["x_proj"]  # [B,S,dt_rank+2N]
+    dt_in, Bv, Cv = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])  # [di,N]
+    if state is None:
+        state = jnp.zeros((B, di, N), jnp.float32)
+    state, ys = _mamba_scan(
+        A,
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bv.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cv.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+        state,
+    )
+    y = jnp.moveaxis(ys, 0, 1)  # [B,S,di]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, state, xpad[:, -3:]

@@ -1,0 +1,78 @@
+"""Step functions: train_step / prefill_step / decode_step builders."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import adamw
+from .config import ModelConfig
+from . import decode as dec
+from . import transformer as tfm
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_batch", "init_train_state"]
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, key):
+    params = tfm.init_params(cfg, key)
+    opt_state = adamw.init_state(opt_cfg, params)
+    return params, opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return tfm.loss_fn(p, cfg, batch)
+
+        (loss, parts), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = adamw.apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return tfm.backbone_with_state(params, cfg, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state, token, pos):
+        return dec.decode_step(params, cfg, state, token, pos)
+
+    return decode_step
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None, np_like=False):
+    """Construct a synthetic batch matching the arch's input contract
+    (tokens for LMs, feature frames for audio, patches+tokens for VLM)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0 if key is None else key)
+    if cfg.family == "audio":
+        return {
+            "features": jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.frontend_dim)), jnp.dtype(cfg.dtype)
+            ),
+            "mask": jnp.asarray(rng.random((batch, seq)) < 0.08),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        npfx = min(cfg.n_prefix_embeds, max(seq // 8, 1))
+        s_text = seq - npfx
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, s_text)), jnp.int32),
+            "patches": jnp.asarray(
+                rng.standard_normal((batch, npfx, cfg.frontend_dim)), jnp.dtype(cfg.dtype)
+            ),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, s_text)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+    }

@@ -1,0 +1,232 @@
+"""Model assembly for the architecture pool.
+
+Layer parameters are stacked along a leading [n_layers] axis and the layer
+loop is a (rematerialized) ``lax.scan`` — one compiled block body per model
+regardless of depth, which keeps dry-run lowering cheap for 95-layer
+configs. The hybrid (Hymba) family is unrolled instead because its layers
+are heterogeneous (3 global-attention layers among sliding-window ones,
+each with a differently-shaped decode cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .config import ModelConfig
+from .layers import (apply_linear, apply_mlp, apply_norm, embed, init_embed,
+                     init_linear, init_mlp, init_norm, unembed)
+
+
+# ------------------------------------------------------------------ blocks --
+
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    p = {"norm1": init_norm(ks[0], cfg.d_model, cfg)}
+    if cfg.family == "ssm":  # rwkv6
+        p["time_mix"] = ssm.init_rwkv_time_mix(ks[1], cfg)
+        p["norm2"] = init_norm(ks[2], cfg.d_model, cfg)
+        p["channel_mix"] = ssm.init_rwkv_channel_mix(ks[3], cfg)
+        return p
+    p["attn"] = attn.init_attention(ks[1], cfg)
+    if cfg.hybrid:
+        p["mamba"] = ssm.init_mamba(ks[2], cfg)
+        p["norm_attn"] = init_norm(ks[3], cfg.d_model, cfg)
+        p["norm_mamba"] = init_norm(ks[4], cfg.d_model, cfg)
+    p["norm2"] = init_norm(ks[5], cfg.d_model, cfg)
+    if cfg.n_experts:
+        p["moe"] = moe_mod.init_moe(ks[6], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[6], cfg.d_model, cfg.d_ff, cfg)
+    return p
+
+
+def block_forward(p, cfg: ModelConfig, x, positions, *, window, causal=True,
+                  collect=False):
+    """One layer, train/prefill path. Returns (x, aux_loss, state|None).
+
+    With ``collect=True`` the per-layer decode state (kv / recurrent
+    states) is also returned so prefill can hand off to decode.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h, wkv, x_tm = ssm.rwkv_time_mix(p["time_mix"], cfg, apply_norm(p["norm1"], x))
+        x = x + h
+        h, x_cm = ssm.rwkv_channel_mix(p["channel_mix"], cfg, apply_norm(p["norm2"], x))
+        st = {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm} if collect else None
+        return x + h, aux, st
+    xin = apply_norm(p["norm1"], x)
+    a = attn.attention_block(p["attn"], cfg, xin, positions, causal=causal,
+                             window=window, return_kv=collect)
+    kv = None
+    if collect:
+        a, kv = a
+    st = {"kv": kv} if collect else None
+    if cfg.hybrid:
+        m, h_ssm, conv = ssm.mamba_block(p["mamba"], cfg, xin)
+        a = 0.5 * (apply_norm(p["norm_attn"], a) + apply_norm(p["norm_mamba"], m))
+        if collect:
+            st["ssm"], st["conv"] = h_ssm, conv
+    x = x + a
+    xin = apply_norm(p["norm2"], x)
+    if cfg.n_experts:
+        y, aux = moe_mod.apply_moe(p["moe"], cfg, xin)
+    else:
+        y = apply_mlp(p["mlp"], xin, cfg.activation)
+    return x + y, aux, st
+
+
+# ------------------------------------------------------------------ model --
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 6)
+    p = {}
+    if cfg.embed_inputs:  # audio/vlm stub frontend: linear feature projection
+        p["frontend"] = init_linear(ks[0], cfg.frontend_dim, cfg.d_model, cfg)
+    if cfg.vocab:
+        p["embed"] = init_embed(ks[1], cfg.vocab, cfg.d_model, cfg)
+    segs = cfg.segments()
+    skeys = jax.random.split(ks[2], len(segs))
+    p["segments"] = []
+    for (a, b, w), sk in zip(segs, skeys):
+        lkeys = jax.random.split(sk, b - a)
+        p["segments"].append(jax.vmap(lambda k: init_block(k, cfg))(lkeys))
+    p["final_norm"] = init_norm(ks[3], cfg.d_model, cfg)
+    if cfg.vocab and not cfg.tie_embeddings:
+        p["lm_head"] = init_embed(ks[4], cfg.vocab, cfg.d_model, cfg)
+    return p
+
+
+def backbone(params, cfg: ModelConfig, x, positions, *, causal=True):
+    """Run all layers on embedded input x [B,S,d]. Returns (h, aux_loss).
+
+    One lax.scan per homogeneous segment (see ModelConfig.segments)."""
+    aux = jnp.zeros((), jnp.float32)
+    for (a, b, w), blocks in zip(cfg.segments(), params["segments"]):
+
+        def body(carry, lp, _w=w):
+            xx, au = carry
+            xx, al, _ = block_forward(lp, cfg, xx, positions, window=_w,
+                                      causal=causal)
+            return (xx, au + al), None
+
+        f = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = lax.scan(f, (x, aux), blocks)
+    return apply_norm(params["final_norm"], x), aux
+
+
+def _ring_place(k, W: int):
+    """Scatter the last W positions of k [..., S, H, hd] into ring slots
+    (slot = pos % W), matching decode's ring-buffer addressing."""
+    S = k.shape[1]
+    take = min(W, S)
+    src = k[:, S - take:]
+    slots = (jnp.arange(S - take, S)) % W
+    ring = jnp.zeros(k.shape[:1] + (W,) + k.shape[2:], k.dtype)
+    return ring.at[:, slots].set(src)
+
+
+def backbone_with_state(params, cfg: ModelConfig, batch, max_len: int):
+    """Prefill: full-sequence forward that also builds the decode state.
+    Returns (last-position logits [B, vocab], decode_state list per segment)."""
+    x, positions, _, _ = embed_batch(params, cfg, batch)
+    B, S, d = x.shape
+    states = []
+    for (a, b, w), blocks in zip(cfg.segments(), params["segments"]):
+
+        def body(xx, lp, _w=w):
+            xx, _, st = block_forward(lp, cfg, xx, positions, window=_w,
+                                      causal=True, collect=True)
+            return xx, st
+
+        x, sts = lax.scan(body, x, blocks)
+        if cfg.family == "ssm":
+            states.append(sts)  # stacked {wkv, x_tm, x_cm} over the segment
+        else:
+            k, v = sts.pop("kv")  # [Ls,B,S,H,hd]
+            W = min(w, max_len) if w > 0 else max_len
+            sts["k"] = jax.vmap(lambda kk: _ring_place(kk, W))(k)
+            sts["v"] = jax.vmap(lambda vv: _ring_place(vv, W))(v)
+            states.append(sts)
+    h = apply_norm(params["final_norm"], x)
+    logits = h[:, -1] @ lm_head_table(params, cfg).T
+    return logits, states
+
+
+def embed_batch(params, cfg: ModelConfig, batch):
+    """Map a batch dict to (x [B,S,d], positions [S], labels/None, mask/None)."""
+    if cfg.family == "audio":
+        x = apply_linear(params["frontend"], batch["features"])
+        if "mask" in batch:  # masked-prediction: zero out masked frames
+            x = jnp.where(batch["mask"][..., None], 0.0, x)
+        S = x.shape[1]
+        return x, jnp.arange(S), batch.get("labels"), batch.get("mask")
+    if cfg.family == "vlm":
+        tx = embed(params["embed"], batch["tokens"])
+        px = apply_linear(params["frontend"], batch["patches"])
+        x = jnp.concatenate([px, tx], axis=1)
+        S = x.shape[1]
+        labels = batch.get("labels")
+        return x, jnp.arange(S), labels, None
+    x = embed(params["embed"], batch["tokens"])
+    S = x.shape[1]
+    return x, jnp.arange(S), batch.get("labels"), None
+
+
+def lm_head_table(params, cfg: ModelConfig):
+    return params["embed" if cfg.tie_embeddings else "lm_head"]["table"]
+
+
+def chunked_ce_loss(table, h, labels, chunk: int, mask=None):
+    """Cross-entropy without materializing [B,S,V]: scan over S chunks.
+
+    ``mask`` selects positions contributing to the loss (audio masked-pred);
+    None means all positions with label >= 0.
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    S_pad = n * chunk
+    if S_pad != S:
+        h = jnp.pad(h, ((0, 0), (0, S_pad - S), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, S_pad - S)), constant_values=-1)
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, S_pad - S)))
+    hs = jnp.moveaxis(h.reshape(B, n, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0) if mask is not None else None
+
+    def body(carry, inp):
+        tot, cnt = carry
+        if ms is None:
+            hc, lc = inp
+            valid = lc >= 0
+        else:
+            hc, lc, mc = inp
+            valid = (lc >= 0) & mc
+        logits = (hc @ table.T).astype(jnp.float32)  # [B,C,V]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        tot = (tot + jnp.sum(jnp.where(valid, logz - ll, 0.0))).astype(jnp.float32)
+        cnt = cnt + jnp.sum(valid).astype(jnp.int32)
+        return (tot, cnt), None
+
+    xs = (hs, ls) if ms is None else (hs, ls, ms)
+    body_fn = jax.checkpoint(body)
+    (tot, cnt), _ = lax.scan(body_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), xs)
+    return tot / jnp.maximum(cnt, 1)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    x, positions, labels, mask = embed_batch(params, cfg, batch)
+    h, aux = backbone(params, cfg, x, positions, causal=not cfg.encoder_only)
+    if cfg.family == "vlm":  # loss only over the text region
+        npfx = batch["patches"].shape[1]
+        h = h[:, npfx:]
+    table = lm_head_table(params, cfg)
+    ce = chunked_ce_loss(table, h, labels, cfg.loss_chunk, mask)
+    return ce + aux, {"ce": ce, "aux": aux}

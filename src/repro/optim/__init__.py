@@ -1,0 +1,5 @@
+"""Optimizers + distributed-optimization tricks (gradient compression)."""
+from . import adamw
+from .adamw import AdamWConfig
+
+__all__ = ["adamw", "AdamWConfig"]

@@ -1,0 +1,137 @@
+"""AdamW with optional 8-bit (block-quantized) moment storage.
+
+Quantized moments are the memory-side trick that lets arctic-480b's
+optimizer state fit a single pod (the paper's "pillar trades memory for
+performance" caveat, transplanted to optimizer-state layout): m/v are kept
+as int8 codes with per-block fp32 scales (block = last axis groups of 256),
+dequantized on the fly inside the update. Error is bounded by the block
+max; the quantization round-trips are unit-tested against fp32 AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def _q8_encode(x):
+    """Block-quantize along the flattened last axis: (codes int8, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0
+    codes = jnp.round(blk / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _q8_decode(codes, scale, shape):
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
+    n = int(np.prod(shape))
+    return flat[:n].reshape(shape)
+
+
+def _store(x, dtype):
+    if dtype == "int8":
+        return _q8_encode(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load(s, dtype, shape):
+    if dtype == "int8":
+        return _q8_decode(s[0], s[1], shape)
+    return s.astype(jnp.float32)
+
+
+def _store_v(x, dtype):
+    """Second moment: quantize in sqrt-space (v >= 0 with a huge in-block
+    dynamic range; linear int8 on v underflows and destabilizes the
+    preconditioner — storing sqrt(v) halves the exponent range)."""
+    if dtype == "int8":
+        return _q8_encode(jnp.sqrt(jnp.maximum(x, 0.0)))
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load_v(s, dtype, shape):
+    if dtype == "int8":
+        u = _q8_decode(s[0], s[1], shape)
+        # half-step floor: never dequantize a stored-positive v to zero
+        blk = jnp.repeat(s[1][:, 0], BLOCK)[: int(np.prod(shape))].reshape(shape)
+        u = jnp.where(u > 0, jnp.maximum(u, blk * 0.5), 0.0)
+        return u * u
+    return s.astype(jnp.float32)
+
+
+def init_state(cfg: AdamWConfig, params):
+    def zeros_like_stored(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _store(z, cfg.moment_dtype)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_stored, params),
+        "v": jax.tree.map(zeros_like_stored, params),
+    }
+
+
+def _lr_at(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    lr = _lr_at(cfg, step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_s, v_s in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _load(m_s, cfg.moment_dtype, p.shape) + (1 - cfg.b1) * g
+        v = cfg.b2 * _load_v(v_s, cfg.moment_dtype, p.shape) + (1 - cfg.b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + cfg.weight_decay * pf)
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(_store(m, cfg.moment_dtype))
+        new_v.append(_store_v(v, cfg.moment_dtype))
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    state = {
+        "step": step,
+        "m": jax.tree_util.tree_unflatten(treedef, new_m),
+        "v": jax.tree_util.tree_unflatten(treedef, new_v),
+    }
+    return params, state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,81 @@
+"""Cross-pod gradient compression with error feedback.
+
+The pod axis is the slow link (data-center network / optical ICI between
+pods vs. in-pod ICI) — the LM-side instance of the paper's b_m/b_c gap.
+Within a pod gradients reduce in full precision (GSPMD all-reduce over
+``data``); across pods we exchange int8-quantized partial gradients with
+an error-feedback residual so compression noise is unbiased over steps
+(Seide et al. / EF-SGD):
+
+    q_t = Q(g_t + e_t);  e_{t+1} = (g_t + e_t) - dQ(q_t)
+
+For 2 pods the exchange is one ppermute of int8 codes + local sum — an
+8x byte reduction on the slow link. Used by launch/train.py via
+``cross_pod_reduce`` inside shard_map over the pod axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+BLOCK = 512
+
+
+def _quantize(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    blk = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0
+    codes = jnp.round(blk / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return codes, scale
+
+
+def _dequantize(codes, scale, shape):
+    import numpy as np
+
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: int(np.prod(shape))].reshape(shape)
+
+
+def make_cross_pod_reduce(mesh: Mesh, pspecs, enabled: bool = True):
+    """Return reduce(grads, err) -> (grads_mean, new_err) over the pod axis.
+
+    ``pspecs`` is the PartitionSpec tree of the gradient leaves (their
+    data/model sharding is preserved; only the pod axis is reduced, with
+    int8 exchange). With enabled=False this is a plain pmean (baseline
+    for §Perf)."""
+    if "pod" not in mesh.axis_names:
+        return lambda g, e: (g, e)
+    n_pods = mesh.shape["pod"]
+
+    def reduce_leaf(g, err, spec):
+        def local(gb, eb):
+            if not enabled:
+                return lax.pmean(gb, "pod"), eb
+            acc = gb + eb
+            codes, scale = _quantize(acc)
+            # exchange with every other pod (ring of ppermutes)
+            total = _dequantize(codes, scale, gb.shape)
+            new_err = acc - total  # own quantization error
+            for shift in range(1, n_pods):
+                perm = [(i, (i + shift) % n_pods) for i in range(n_pods)]
+                c = lax.ppermute(codes, "pod", perm)
+                s = lax.ppermute(scale, "pod", perm)
+                total = total + _dequantize(c, s, gb.shape)
+            return total / n_pods, new_err
+
+        fn = shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=(spec, spec), check_rep=False)
+        return fn(g, err)
+
+    def reduce_tree(grads, err_tree):
+        pairs = jax.tree.map(reduce_leaf, grads, err_tree, pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+        g = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        e = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return g, e
+
+    return reduce_tree

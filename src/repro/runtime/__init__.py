@@ -1,0 +1,5 @@
+"""Fault-tolerance runtime: health tracking, straggler detection, restart."""
+from .health import HealthMonitor, StepTimer
+from .supervisor import Supervisor
+
+__all__ = ["HealthMonitor", "StepTimer", "Supervisor"]

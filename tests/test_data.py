@@ -1,0 +1,54 @@
+"""Data pipeline: determinism, restartability, shape contracts."""
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, TokenPipeline
+
+
+def test_deterministic_and_restartable():
+    cfg = get_smoke_config("qwen3-0.6b")
+    p1 = TokenPipeline(cfg, DataConfig(seed=7))
+    p2 = TokenPipeline(cfg, DataConfig(seed=7))
+    b1 = p1.batch(12, 4, 32)
+    b2 = p2.batch(12, 4, 32)  # fresh pipeline, same index -> same batch
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = p1.batch(13, 4, 32)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    cfg = get_smoke_config("qwen3-0.6b")
+    b = TokenPipeline(cfg).batch(0, 2, 16)
+    t = np.asarray(b["tokens"])
+    l = np.asarray(b["labels"])
+    np.testing.assert_array_equal(l[:, :-1], t[:, 1:])
+    assert (l[:, -1] == -1).all()
+
+
+def test_family_contracts():
+    for arch in ("hubert-xlarge", "internvl2-1b", "rwkv6-1.6b"):
+        cfg = get_smoke_config(arch)
+        b = TokenPipeline(cfg).batch(0, 2, 24)
+        if cfg.family == "audio":
+            assert b["features"].shape == (2, 24, cfg.frontend_dim)
+            assert b["mask"].shape == (2, 24)
+        elif cfg.family == "vlm":
+            npfx = b["patches"].shape[1]
+            assert b["tokens"].shape[1] + npfx == 24
+        else:
+            assert b["tokens"].shape == (2, 24)
+            assert int(np.asarray(b["tokens"]).max()) < cfg.vocab
+
+
+def test_structure_learnable():
+    """The injected n-gram structure gives sub-uniform entropy (so training
+    losses in the examples can actually fall below log V)."""
+    cfg = get_smoke_config("qwen3-0.6b")
+    pipe = TokenPipeline(cfg)
+    b = pipe.batch(0, 8, 256)
+    toks = np.asarray(b["tokens"])
+    # successor statistics: P(next == succ[cur]) well above chance
+    cur = toks[:, :-1].reshape(-1)
+    nxt = toks[:, 1:].reshape(-1)
+    hit = (pipe.succ[cur] == nxt).mean()
+    assert hit > 0.2  # chance level would be ~1/V

@@ -1,0 +1,57 @@
+"""Filter polynomial construction (window Chebyshev expansion + Jackson)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filters import (build_filter, degree_for, jackson_damping,
+                                window_coeffs)
+
+
+def _cheb_eval(mu, x):
+    t = np.arccos(np.clip(x, -1, 1))
+    return np.cos(np.outer(t, np.arange(len(mu)))) @ mu
+
+
+@given(a=st.floats(-0.9, 0.5), w=st.floats(0.05, 0.4), n=st.integers(40, 200))
+@settings(max_examples=20, deadline=None)
+def test_window_coeffs_approximate_indicator(a, w, n):
+    b = min(a + w, 0.95)
+    mu = window_coeffs(a, b, n) * jackson_damping(n)
+    xs = np.linspace(-0.99, 0.99, 801)
+    y = _cheb_eval(mu, xs)
+    inside = (xs > a + 3.5 / n) & (xs < b - 3.5 / n)
+    outside = (xs < a - 3.5 / n) | (xs > b + 3.5 / n)
+    if inside.any():
+        assert y[inside].min() > 0.4
+    if outside.any():
+        assert np.abs(y[outside]).max() < 0.55
+        # far outside, the Jackson-damped filter is tiny
+        far = (xs < a - 12 / n) | (xs > b + 12 / n)
+        if far.any():
+            assert np.abs(y[far]).max() < 0.12
+
+
+def test_filterpoly_eval_matches_direct():
+    poly = build_filter((-0.1, 0.1), (-2.0, 2.0), degree=64)
+    lam = np.linspace(-1.9, 1.9, 100)
+    x = 2.0 / 4.0 * lam  # alpha*lam + beta with beta=0
+    np.testing.assert_allclose(poly.eval(lam), _cheb_eval(poly.mu, x),
+                               rtol=1e-10, atol=1e-12)
+
+
+@given(w1=st.floats(1e-4, 0.1), w2=st.floats(1e-4, 0.1))
+@settings(max_examples=20, deadline=None)
+def test_degree_monotone_in_width(w1, w2):
+    inc = (-1.0, 1.0)
+    d1 = degree_for((-w1, w1), inc)
+    d2 = degree_for((-w2, w2), inc)
+    if w1 < w2:
+        assert d1 >= d2
+    assert d1 % 32 == 0  # bucketing bounds recompiles
+
+
+def test_filter_amplifies_target_over_rest():
+    poly = build_filter((0.2, 0.3), (-1.0, 1.0), degree=160)
+    inside = poly.eval(np.array([0.25]))[0]
+    far = np.abs(poly.eval(np.linspace(-0.9, -0.1, 50))).max()
+    assert inside > 10 * far

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+hypothesis sweeps over shapes/dtypes/offset patterns."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.cheb_dia import cheb_dia
+from repro.kernels.ell_gather import build_tiles, ell_gather_spmv
+
+
+def _mk_dia(rng, R, offsets, dtype):
+    dvals = rng.standard_normal((len(offsets), R)).astype(dtype)
+    idx = np.arange(R)
+    for d, o in enumerate(offsets):
+        dvals[d, (idx + o < 0) | (idx + o >= R)] = 0.0
+    return dvals
+
+
+@pytest.mark.parametrize("R,nb,br,bn", [
+    (64, 128, 8, 128), (256, 128, 64, 128), (512, 256, 512, 128),
+    (1024, 384, 256, 128),
+])
+def test_cheb_dia_shapes(R, nb, br, bn):
+    rng = np.random.default_rng(R + nb)
+    offsets = (-(R // 3), -7, -1, 0, 2, 9, R // 4)
+    dvals = _mk_dia(rng, R, offsets, np.float32)
+    x = rng.standard_normal((R, nb)).astype(np.float32)
+    w1 = rng.standard_normal((R, nb)).astype(np.float32)
+    w2 = rng.standard_normal((R, nb)).astype(np.float32)
+    y_ref = np.asarray(ref.cheb_dia_ref(offsets, dvals, x, w1, w2, 1.1, -0.3))
+    y = np.asarray(cheb_dia(offsets, jnp.asarray(dvals), jnp.asarray(x),
+                            jnp.asarray(w1), jnp.asarray(w2), 1.1, -0.3,
+                            br=br, bn=bn, interpret=True))
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    roff=st.lists(st.integers(-96, 96), min_size=1, max_size=6, unique=True),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+@settings(max_examples=15, deadline=None)
+def test_cheb_dia_hypothesis(seed, roff, dtype):
+    R, nb = 128, 128
+    rng = np.random.default_rng(seed)
+    offsets = tuple(sorted(roff))
+    dvals = _mk_dia(rng, R, offsets, dtype)
+    x = rng.standard_normal((R, nb)).astype(dtype)
+    w1 = rng.standard_normal((R, nb)).astype(dtype)
+    w2 = rng.standard_normal((R, nb)).astype(dtype)
+    a, b = float(rng.normal()), float(rng.normal())
+    y_ref = np.asarray(ref.cheb_dia_ref(offsets, dvals, x, w1, w2, a, b))
+    y = np.asarray(cheb_dia(offsets, jnp.asarray(dvals), jnp.asarray(x),
+                            jnp.asarray(w1), jnp.asarray(w2), a, b,
+                            br=64, bn=128, interpret=True))
+    tol = 1e-4 if dtype == np.float32 else 1e-10
+    np.testing.assert_allclose(y, y_ref, rtol=tol, atol=tol)
+
+
+def test_cheb_dia_complex_via_ops():
+    rng = np.random.default_rng(3)
+    R, nb = 128, 128
+    offsets = (-8, -1, 0, 1, 8)
+    dv = (rng.standard_normal((5, R)) + 1j * rng.standard_normal((5, R))).astype(np.complex64)
+    idx = np.arange(R)
+    for d, o in enumerate(offsets):
+        dv[d, (idx + o < 0) | (idx + o >= R)] = 0.0
+    x = (rng.standard_normal((R, nb)) + 1j * rng.standard_normal((R, nb))).astype(np.complex64)
+    w1 = x * 0.3
+    w2 = x[::-1] * 0.7
+    y_ref = np.asarray(ref.cheb_dia_ref(offsets, jnp.asarray(dv), jnp.asarray(x),
+                                        jnp.asarray(w1), jnp.asarray(w2), 0.9, 0.05))
+    y = np.asarray(ops.cheb_dia(offsets, jnp.asarray(dv), jnp.asarray(x),
+                                jnp.asarray(w1), jnp.asarray(w2), 0.9, 0.05,
+                                interpret=True))
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_cheb_dia_halo_region():
+    """x longer than R (halo appended) with offsets pointing into it."""
+    rng = np.random.default_rng(4)
+    R, Rx, nb = 128, 256, 128
+    offsets = (0, 100)  # reaches into [R, Rx)
+    dvals = rng.standard_normal((2, R)).astype(np.float32)  # all valid: i+100 < 256
+    x = rng.standard_normal((Rx, nb)).astype(np.float32)
+    w1 = rng.standard_normal((R, nb)).astype(np.float32)
+    w2 = rng.standard_normal((R, nb)).astype(np.float32)
+    y_ref = np.asarray(ref.cheb_dia_ref(offsets, dvals, x, w1, w2, 1.0, 0.0))
+    y = np.asarray(cheb_dia(offsets, jnp.asarray(dvals), jnp.asarray(x),
+                            jnp.asarray(w1), jnp.asarray(w2), 1.0, 0.0,
+                            br=64, bn=128, interpret=True))
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@given(seed=st.integers(0, 1000), W=st.integers(1, 12),
+       density=st.floats(0.2, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_ell_gather_tiles(seed, W, density):
+    rng = np.random.default_rng(seed)
+    R, Rx, nb = 256, 2048, 128
+    cols = rng.integers(0, Rx, size=(R, W)).astype(np.int32)
+    vals = rng.standard_normal((R, W)).astype(np.float32)
+    vals[rng.random((R, W)) >= density] = 0.0
+    x = rng.standard_normal((Rx, nb)).astype(np.float32)
+    tile_cb, tcols, tvals = build_tiles(cols, vals, Rx, br=256, bc=512)
+    y_ref = np.asarray(ref.ell_spmv_ref(jnp.asarray(cols), jnp.asarray(vals),
+                                        jnp.asarray(x)))
+    y = np.asarray(ell_gather_spmv(jnp.asarray(tile_cb), jnp.asarray(tcols),
+                                   jnp.asarray(tvals), jnp.asarray(x),
+                                   br=256, bc=512, bn=128, interpret=True))
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_dia_matches_matrix_family():
+    """DIA kernel on the actual Exciton stencil == CSR matvec."""
+    from repro.matrices import Exciton
+    from repro.matrices.matfree import dia_from_family
+
+    fam = Exciton(L=2)  # D = 375
+    offsets, dvals, R = dia_from_family(fam, pad_to=128)
+    csr = fam.build_csr()
+    rng = np.random.default_rng(0)
+    nb = 128
+    x = (rng.standard_normal((R, nb)) + 1j * rng.standard_normal((R, nb))).astype(np.complex64)
+    x[fam.D:] = 0
+    w1 = np.zeros_like(x)
+    w2 = np.zeros_like(x)
+    y = np.asarray(ops.cheb_dia(tuple(offsets), jnp.asarray(dvals), jnp.asarray(x),
+                                jnp.asarray(w1), jnp.asarray(w2), 0.5, 0.0,
+                                interpret=True))
+    y_ref = csr.matvec(np.asarray(x)[: fam.D])
+    np.testing.assert_allclose(y[: fam.D], y_ref, rtol=2e-4, atol=2e-4)

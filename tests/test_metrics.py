@@ -1,0 +1,107 @@
+"""χ communication metrics: exactness, paper-table reproduction, invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import chi_bruteforce, chi_from_nvc, chi_metrics
+from repro.matrices import Exciton, Hubbard, SpinChainXXZ, TopIns, uniform_partition
+
+
+# ---------------------------------------------------------- paper tables --
+
+@pytest.mark.parametrize("Np,chi13,chi2", [
+    (2, 0.54, 0.54), (4, 1.51, 1.02), (8, 2.52, 1.53),
+    (16, 3.37, 2.07), (32, 4.17, 2.65), (64, 5.58, 3.19),
+])
+def test_hubbard14_table1(Np, chi13, chi2):
+    m = chi_metrics(Hubbard(14, 7), Np)
+    assert round(m.chi1, 2) == chi13
+    assert round(m.chi3, 2) == chi13
+    assert round(m.chi2, 2) == chi2
+
+
+@pytest.mark.parametrize("Np,chi13,chi2", [
+    (2, 0.53, 0.53), (4, 1.50, 1.01), (8, 2.50, 1.51),
+    (16, 3.37, 2.03), (32, 4.21, 2.61), (64, 5.67, 3.16),
+])
+def test_hubbard16_table1(Np, chi13, chi2):
+    m = chi_metrics(Hubbard(16, 8), Np)
+    assert round(m.chi1, 2) == chi13
+    assert round(m.chi2, 2) == chi2
+
+
+@pytest.mark.parametrize("Np,chi13", [(2, 0.01), (4, 0.05), (8, 0.11)])
+def test_exciton75_table1(Np, chi13):
+    assert round(chi_metrics(Exciton(L=75), Np).chi1, 2) == chi13
+
+
+@pytest.mark.parametrize("Np,chi13", [(2, 0.02), (4, 0.08), (8, 0.16), (16, 0.32)])
+def test_topins100_table5(Np, chi13):
+    assert round(chi_metrics(TopIns(100), Np).chi1, 2) == chi13
+
+
+def test_spinchain24_table5_small_np():
+    m = chi_metrics(SpinChainXXZ(24, 12), 2)
+    assert round(m.chi1, 2) == 0.52
+
+
+# ------------------------------------------------------------- exactness --
+
+@given(n=st.integers(6, 10), P=st.integers(2, 7), seed=st.integers(0, 100))
+@settings(max_examples=12, deadline=None)
+def test_hubbard_structured_matches_bruteforce(n, P, seed):
+    """Tensor-product n_vc == brute-force distinct counting, incl. random
+    (non-uniform) boundaries that cut inside spin sectors."""
+    k = n // 2
+    hub = Hubbard(n, k)
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.choice(np.arange(1, hub.D), size=P - 1, replace=False))
+    boundaries = np.concatenate([[0], cuts, [hub.D]])
+    csr = hub.build_csr()
+    bf = chi_bruteforce(csr, P, boundaries)
+    stv = hub.n_vc(boundaries)
+    assert np.array_equal(bf.n_vc, stv)
+
+
+@pytest.mark.parametrize("fam", [Exciton(L=3), TopIns(5), SpinChainXXZ(10, 5)])
+def test_generator_pattern_matches_csr(fam):
+    """row_cols streaming == the explicit CSR pattern."""
+    csr = fam.build_csr()
+    for P in (2, 3, 5):
+        bf = chi_bruteforce(csr, P)
+        stream = fam.n_vc(uniform_partition(fam.D, P))
+        assert np.array_equal(bf.n_vc, stream)
+
+
+def test_nnzr_formulas():
+    e = Exciton(L=10)
+    assert abs(e.build_csr().n_nzr - (9 - 6 / e.S)) < 1e-9
+    t = TopIns(6)
+    assert abs(t.build_csr().n_nzr - (12 - 12 / 6)) < 1e-9
+    h = Hubbard(10, 5)
+    assert abs(h.build_csr().n_nzr - 10) < 1e-9  # = n_sites at half filling
+    s = SpinChainXXZ(12, 6)
+    assert abs(s.build_csr().n_nzr - (0.5 * 12 + 1)) < 1e-9
+
+
+def test_hermitian_patterns():
+    for fam in (Exciton(L=2), TopIns(4), Hubbard(6, 3, U=1.0), SpinChainXXZ(8, 4)):
+        A = fam.build_csr().to_dense()
+        assert np.abs(A - A.conj().T).max() < 1e-12, fam.name
+
+
+# ------------------------------------------------------------ invariants --
+
+@given(P=st.integers(2, 16))
+@settings(max_examples=8, deadline=None)
+def test_chi_invariants(P):
+    m = chi_metrics(Hubbard(8, 4), P)
+    # chi2 <= chi3 (max >= mean), chi1 ~ chi3 for uniform partitions
+    assert m.chi2 <= m.chi3 + 1e-12
+    assert m.chi3 / max(m.chi1, 1e-12) == pytest.approx(1.0, rel=0.35)
+    assert 0 < m.efficiency_bound(0.05) <= 1.0
+
+
+def test_chi_zero_single_process():
+    m = chi_metrics(Hubbard(8, 4), 1)
+    assert m.chi1 == m.chi2 == m.chi3 == 0.0

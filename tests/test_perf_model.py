@@ -1,0 +1,72 @@
+"""Analytic performance model (paper Eqs. 11-23)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import perf_model as pm
+from repro.core.metrics import chi_metrics
+from repro.matrices import Hubbard
+
+
+def test_eq12_limits():
+    """T decreases with N_p only when chi stays flat; chi growth breaks
+    scaling (the paper's central claim, Fig. 4)."""
+    m = pm.MEGGIE
+    base = dict(D=10_000_000, n_b=64, n_nzr=14.0, S_d=8)
+    t1 = pm.cheb_iter_time(m, N_p=1, chi=0.0, **base)
+    t16_nochi = pm.cheb_iter_time(m, N_p=16, chi=0.0, **base)
+    assert t16_nochi == pytest.approx(t1 / 16)
+    t16 = pm.cheb_iter_time(m, N_p=16, chi=3.37, **base)
+    eff = t1 / (16 * t16)
+    assert eff < 0.5  # communication destroys parallel efficiency
+    bound = pm.parallel_efficiency_bound(m, 3.37)
+    assert eff < bound + 0.15
+
+
+@given(chi_P=st.floats(0.1, 8.0), frac=st.floats(0.05, 0.95))
+@settings(max_examples=30, deadline=None)
+def test_speedup_and_amortization_consistency(chi_P, frac):
+    m = pm.MEGGIE
+    chi_panel = chi_P * frac
+    s = pm.panel_speedup(m, chi_P, chi_panel)
+    assert s >= 1.0
+    r = pm.redistribution_factor(m, N_col=8, chi_panel=chi_panel)
+    n_star = pm.break_even_degree(s, r)
+    if np.isfinite(n_star) and n_star >= 1:
+        # S(n*) == 1 by construction (Eq. 19/20)
+        assert pm.amortized_speedup(s, r, n_star) == pytest.approx(1.0, rel=1e-9)
+        assert pm.amortized_speedup(s, r, 10 * n_star) > 1.0
+    # asymptote: S -> s
+    assert pm.amortized_speedup(s, r, 10_000 * max(r, 1)) == pytest.approx(s, rel=0.01)
+
+
+def test_pillar_condition_eq23():
+    assert pm.pillar_condition(2.0) == 1.0  # chi >= 2 -> any n >= 1 pays off
+    assert pm.pillar_condition(0.5) == 4.0
+
+
+def test_hubbard_pillar_always_wins_at_16():
+    """Paper: 'For the Hubbard matrices this is the case already for
+    P >= 16' — chi[16] >= 2."""
+    chi16 = chi_metrics(Hubbard(14, 7), 16).chi1
+    assert chi16 >= 2.0
+    assert pm.pillar_condition(chi16) <= 1.0
+
+
+def test_table3_hubbard14_speedup_structure():
+    """Qualitative reproduction of Table 3 (Hubbard14, P=32): the measured
+    pillar speedup s=4.98 with kappa*bc/bm fit; our model with the exact
+    chi values lands in the same regime and the break-even degree is
+    small (paper: n*=2)."""
+    m = pm.MachineModel("meggie-fit", b_m=53.3e9, b_c=2.82e9, kappa=10.0)
+    chi32 = chi_metrics(Hubbard(14, 7), 32).chi1
+    s_pillar = pm.panel_speedup(m, chi32, 0.0)  # chi[1] = 0
+    assert 3.0 < s_pillar < 10.0
+    r = pm.redistribution_factor(m, 32, 0.0)
+    assert pm.break_even_degree(s_pillar, r) < 6
+
+
+def test_tpu_regime_matches_cluster_regime():
+    """b_m/b_c ratio on v5e (~16) is in the paper's 15-20 cluster range, so
+    the chi thresholds transfer (DESIGN.md hardware adaptation)."""
+    assert 10 < pm.TPU_V5E.b_m / pm.TPU_V5E.b_c < 20

@@ -1,0 +1,78 @@
+"""Fault-tolerance runtime: straggler detection + supervisor restart."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime import HealthMonitor, StepTimer, Supervisor
+from repro.runtime.supervisor import SupervisorConfig
+
+
+def test_step_timer_ewma():
+    t = StepTimer(alpha=0.5)
+    for dt in (1.0, 1.0, 3.0):
+        t.observe(dt)
+    assert 1.0 < t.ewma < 3.0
+    assert t.count == 3
+
+
+def test_straggler_detection():
+    hm = HealthMonitor(n_hosts=8, k_sigma=3.0)
+    for step in range(20):
+        for h in range(8):
+            hm.report(h, 1.0 + 0.01 * np.sin(h + step) + (2.0 if h == 5 else 0.0))
+    assert hm.stragglers() == [5]
+    fr = hm.rebalance_fractions()
+    assert fr[5] == min(fr)  # straggler gets the smallest share
+    assert abs(sum(fr) - 1.0) < 1e-9
+
+
+def test_dead_host_detection():
+    import time
+
+    hm = HealthMonitor(n_hosts=3, heartbeat_timeout=0.05)
+    time.sleep(0.1)
+    hm.report(0, 1.0)
+    dead = hm.dead()
+    assert 1 in dead and 2 in dead and 0 not in dead
+
+
+def test_supervisor_restart_from_checkpoint(tmp_path):
+    """Inject a fault at step 7; the run restarts from the last committed
+    checkpoint and completes with identical final state to a clean run."""
+
+    def init_state():
+        return {"x": jnp.zeros(()), "hist": jnp.zeros(20)}
+
+    def step_fn(state, step):
+        return {"x": state["x"] + step, "hist": state["hist"].at[step].set(step)}
+
+    faults = {"armed": True}
+
+    def fault_hook(step):
+        if step == 7 and faults["armed"]:
+            faults["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    sup = Supervisor(str(tmp_path), SupervisorConfig(checkpoint_interval=3,
+                                                     max_restarts=2))
+    state, step = sup.run(init_state=init_state, step_fn=step_fn, n_steps=12,
+                          fault_hook=fault_hook)
+    assert step == 12
+    assert sup.restarts == 1
+    clean = init_state()
+    for i in range(12):
+        clean = step_fn(clean, i)
+    np.testing.assert_array_equal(np.asarray(state["hist"]), np.asarray(clean["hist"]))
+    assert float(state["x"]) == float(clean["x"])
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    def init_state():
+        return {"x": jnp.zeros(())}
+
+    def step_fn(state, step):
+        raise RuntimeError("always broken")
+
+    sup = Supervisor(str(tmp_path), SupervisorConfig(max_restarts=2))
+    with pytest.raises(RuntimeError):
+        sup.run(init_state=init_state, step_fn=step_fn, n_steps=3)
