@@ -12,7 +12,8 @@ def main() -> None:
     ap.add_argument("--large", action="store_true",
                     help="include the 1e8-dimension χ instances (minutes)")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table5,fig4,fig5,table3,table4,roofline")
+                    help="comma list: table1,table5,fig4,fig5,table3,table4,"
+                         "spmv_overlap,roofline")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -25,6 +26,7 @@ def main() -> None:
         "fig5": tables.fig5_panel_speedup,
         "table3": tables.table3_amortization,
         "table4": tables.table4_fd_end_to_end,
+        "spmv_overlap": tables.spmv_overlap,
         "roofline": tables.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else set(benches)

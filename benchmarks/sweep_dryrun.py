@@ -28,8 +28,10 @@ def main():
             for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
                 cells.append((arch, shape, mesh, multi))
         for eig in ("exciton200", "hubbard16"):
-            for layout in ("stack", "panel", "pillar"):
-                cells.append((eig, f"fd_iter[{layout}" , mesh, multi, layout))
+            # "+ov" lowers the split-phase overlap SpMV engine; the cached
+            # record carries overlap_model_speedup for the scalability story
+            for layout in ("stack", "panel", "pillar", "panel+ov"):
+                cells.append((eig, f"fd_iter[{layout}," , mesh, multi, layout))
     done = done_keys()
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     for cell in cells:

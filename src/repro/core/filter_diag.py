@@ -46,6 +46,7 @@ class FDConfig:
     sharpness: float = 6.0
     ortho: str = "tsqr"         # or "svqb"
     redist_impl: str = "explicit"  # or "gspmd"
+    spmv_overlap: bool = False  # split-phase SpMV: hide halo exchange
     dtype: str = "float64"
     seed: int = 7
 
@@ -92,9 +93,13 @@ class FilterDiag:
         self.D = D
         # one padded extent for both layouts
         self.D_pad = -(-D // self.P_total) * self.P_total
-        self.ell_stack = build_dist_ell(matrix, self.P_total, dtype=dt, d_pad=self.D_pad)
+        self.ell_stack = build_dist_ell(matrix, self.P_total, dtype=dt,
+                                        d_pad=self.D_pad,
+                                        split_halo=cfg.spmv_overlap)
         if self.N_col > 1:
-            self.ell_panel = build_dist_ell(matrix, self.N_row, dtype=dt, d_pad=self.D_pad)
+            self.ell_panel = build_dist_ell(matrix, self.N_row, dtype=dt,
+                                            d_pad=self.D_pad,
+                                            split_halo=cfg.spmv_overlap)
         else:
             self.ell_panel = self.ell_stack
         self._build_fns(matrix)
@@ -102,9 +107,11 @@ class FilterDiag:
     # ------------------------------------------------------------------
     def _build_fns(self, matrix):
         mesh, cfg = self.mesh, self.cfg
-        self.spmv_stack = make_spmv(mesh, self.stack_layout, self.ell_stack)
+        self.spmv_stack = make_spmv(mesh, self.stack_layout, self.ell_stack,
+                                    overlap=cfg.spmv_overlap)
         self.spmv_panel = (
-            make_spmv(mesh, self.panel_layout, self.ell_panel)
+            make_spmv(mesh, self.panel_layout, self.ell_panel,
+                      overlap=cfg.spmv_overlap)
             if self.N_col > 1 else self.spmv_stack
         )
         if cfg.ortho == "tsqr":

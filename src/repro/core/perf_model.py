@@ -4,12 +4,18 @@ All quantities are per *process*; bandwidths in bytes/s. The model is
 hardware-agnostic: feed Meggie constants (b_m = 53.3 GB/s, b_c ≈ 2.8 GB/s)
 to reproduce the paper's tables, or TPU v5e constants (b_m = 819 GB/s,
 b_c = 50 GB/s ICI — the same b_m/b_c ≈ 16 regime) to predict our target.
+
+Beyond the paper: ``cheb_iter_time_overlap`` models the split-phase SpMV
+engine (spmv.py ``overlap=True``), replacing Eq. 12's additive χ term with
+``T = max(T_comm, T_local) + T_halo`` — communication hides behind local
+work until χ·S_d/b_c exceeds the local memory time.
 """
 from __future__ import annotations
 
 import dataclasses
 
 __all__ = ["MachineModel", "MEGGIE", "TPU_V5E", "cheb_iter_time",
+           "cheb_iter_time_overlap", "overlap_speedup",
            "panel_speedup", "redistribution_factor", "amortized_speedup",
            "break_even_degree", "pillar_condition", "parallel_efficiency_bound"]
 
@@ -37,6 +43,51 @@ def cheb_iter_time(m: MachineModel, *, D: int, N_p: int, n_b: int, chi: float,
     """Eq. (12): execution time of one fused Chebyshev-filter iteration."""
     per_entry = ((S_d + S_i) * n_nzr / n_b + m.kappa * S_d) / m.b_m + chi * S_d / m.b_c
     return per_entry * n_b * D / N_p
+
+
+def cheb_iter_time_overlap(m: MachineModel, *, D: int, N_p: int, n_b: int,
+                           chi: float, n_nzr: float, S_d: int, S_i: int = 4,
+                           halo_frac: float | None = None) -> float:
+    """Overlap-aware variant of Eq. (12): ``T = max(T_comm, T_local) + T_halo``.
+
+    The split-phase engine (``make_spmv(..., overlap=True)``) issues the
+    halo all_to_all before the local contraction, so the additive χ term of
+    Eq. 12 is replaced by a max: communication is free whenever
+    ``T_comm <= T_local``. The halo contraction (``halo_frac`` of the
+    nonzeros, reading the received buffer) cannot be hidden and stays
+    additive.
+
+    ``halo_frac`` defaults to ``min(1, chi / n_nzr)`` — every communicated
+    vector entry feeds at least one halo nonzero (exact value available
+    from ``DistEll.halo_nnz_fraction``).
+    """
+    if N_p <= 1 or chi <= 0:
+        return cheb_iter_time(m, D=D, N_p=N_p, n_b=n_b, chi=0.0,
+                              n_nzr=n_nzr, S_d=S_d, S_i=S_i)
+    if halo_frac is None:
+        halo_frac = min(1.0, chi / max(n_nzr, 1e-12))
+    nnz_halo = halo_frac * n_nzr
+    nnz_loc = n_nzr - nnz_halo
+    scale = n_b * D / N_p
+    t_comm = chi * S_d / m.b_c * scale
+    # the kappa vector-traffic term belongs to the local phase (W1/W2/V
+    # streaming happens while bytes are in flight)
+    t_local = ((S_d + S_i) * nnz_loc / n_b + m.kappa * S_d) / m.b_m * scale
+    t_halo = (S_d + S_i) * nnz_halo / n_b / m.b_m * scale
+    return max(t_comm, t_local) + t_halo
+
+
+def overlap_speedup(m: MachineModel, *, D: int, N_p: int, n_b: int, chi: float,
+                    n_nzr: float, S_d: int, S_i: int = 4,
+                    halo_frac: float | None = None) -> float:
+    """Predicted additive/overlap time ratio (>1 when hiding the halo
+    exchange behind local work pays; ->1 when χ ≈ 0 or comm dominates)."""
+    t_add = cheb_iter_time(m, D=D, N_p=N_p, n_b=n_b, chi=chi, n_nzr=n_nzr,
+                           S_d=S_d, S_i=S_i)
+    t_ov = cheb_iter_time_overlap(m, D=D, N_p=N_p, n_b=n_b, chi=chi,
+                                  n_nzr=n_nzr, S_d=S_d, S_i=S_i,
+                                  halo_frac=halo_frac)
+    return t_add / t_ov
 
 
 def parallel_efficiency_bound(m: MachineModel, chi3: float) -> float:

@@ -19,6 +19,28 @@ bytes — L is the padded max of the paper's n_vc counts, so the measured
 (HLO) collective volume equals the χ-metric prediction up to the
 imbalance factor χ₃/χ₂ (see EXPERIMENTS §Dry-run).
 
+Overlap execution model (``make_spmv(..., overlap=True)``): each shard's
+ELL block is split once, on the host, into a *local* part (columns in
+``[0, R)`` — entries resolvable without communication) and a *halo* part
+(columns in the remote region ``[R, R + P*L)``), in the spirit of
+node-aware SpMV (Bienz, Gropp & Olson, arXiv:1612.08060). The device body
+then
+
+  1. launches the halo ``all_to_all`` (no dependence on the local part),
+  2. contracts the local ELL while the bytes are in flight,
+  3. contracts the halo ELL against the received buffer and accumulates.
+
+On backends with async collectives XLA schedules (1) and (2) concurrently,
+hiding the communication behind local work; the cost model becomes
+
+  T = max(T_comm, T_local) + T_halo
+
+instead of the additive ``T = T_comm + T_local+halo`` of Eq. 12 — see
+``perf_model.cheb_iter_time_overlap``. Within every output row the split
+engine accumulates local entries (ascending column) before halo entries,
+which is exactly the unsplit ELL slot order, so baseline and overlapped
+engines agree bit-for-bit up to associativity-free summation order.
+
 The vertical (``col``) mesh axes shard the vector bundle; no SpMV
 communication crosses them (the paper's central point).
 """
@@ -82,7 +104,10 @@ class DistEll:
     """Pytree of device arrays for the distributed ELL SpMV.
 
     All arrays carry a leading P axis that is sharded over the horizontal
-    mesh axes inside ``make_spmv``.
+    mesh axes inside ``make_spmv``. The four ``*_loc`` / ``*_halo`` fields
+    are the split-phase form consumed by the overlap engine; they are
+    populated on demand by :meth:`split` (or eagerly with
+    ``build_dist_ell(..., split_halo=True)``).
     """
 
     cols: jax.Array  # [P, R, W] int32, remapped columns
@@ -93,11 +118,67 @@ class DistEll:
     P: int = dataclasses.field(metadata=dict(static=True))
     D: int = dataclasses.field(metadata=dict(static=True))
     n_vc: np.ndarray | None = None  # exact per-shard remote counts (diagnostics)
+    cols_loc: jax.Array | None = None   # [P, R, W_loc] columns in [0, R)
+    vals_loc: jax.Array | None = None   # [P, R, W_loc]
+    cols_halo: jax.Array | None = None  # [P, R, W_halo] columns in [0, P*L)
+    vals_halo: jax.Array | None = None  # [P, R, W_halo]
 
     @property
     def comm_bytes_per_spmv(self) -> int:
         """all_to_all payload per vector column, summed over shards."""
         return self.P * self.P * self.L * self.vals.dtype.itemsize
+
+    @property
+    def halo_nnz_fraction(self) -> float:
+        """Fraction of stored nonzeros in the halo part (perf-model input)."""
+        cl, vl, ch, vh = self.split()
+        n_halo = int(np.count_nonzero(np.asarray(vh)))
+        n_loc = int(np.count_nonzero(np.asarray(vl)))
+        return n_halo / max(n_halo + n_loc, 1)
+
+    def split(self):
+        """Split the combined ELL into (cols_loc, vals_loc, cols_halo,
+        vals_halo) for the overlap engine; cached after the first call.
+
+        Local columns keep their [0, R) indices; halo columns are rebased
+        into the received buffer, i.e. [0, P*L). Per row, the split parts
+        preserve the combined slot order (local ascending, then halo
+        ascending), so split + unsplit contractions sum in the same order.
+        """
+        if self.cols_loc is not None:
+            return self.cols_loc, self.vals_loc, self.cols_halo, self.vals_halo
+        cols = np.asarray(self.cols)
+        vals = np.asarray(self.vals)
+        P, R, W = cols.shape
+        stored = vals != 0
+        is_halo = stored & (cols >= self.R)
+        is_loc = stored & ~is_halo
+        W_loc = int(is_loc.sum(axis=2).max()) if W else 0
+        W_halo = int(is_halo.sum(axis=2).max()) if W else 0
+        W_loc = max(W_loc, 1)  # keep the local block non-degenerate
+        cols_loc = np.zeros((P, R, W_loc), dtype=cols.dtype)
+        vals_loc = np.zeros((P, R, W_loc), dtype=vals.dtype)
+        cols_halo = np.zeros((P, R, W_halo), dtype=cols.dtype)
+        vals_halo = np.zeros((P, R, W_halo), dtype=vals.dtype)
+        for p in range(P):
+            for part, mask, carr, varr, rebase in (
+                ("loc", is_loc[p], cols_loc[p], vals_loc[p], 0),
+                ("halo", is_halo[p], cols_halo[p], vals_halo[p], self.R),
+            ):
+                rows, slots = np.nonzero(mask)
+                if not len(rows):
+                    continue
+                counts = np.bincount(rows, minlength=R)
+                out_slot = np.arange(len(rows)) - np.repeat(
+                    np.cumsum(counts) - counts, counts
+                )
+                carr[rows, out_slot] = cols[p][rows, slots] - rebase
+                varr[rows, out_slot] = vals[p][rows, slots]
+        self.cols_loc = jnp.asarray(cols_loc)
+        self.vals_loc = jnp.asarray(vals_loc)
+        self.cols_halo = jnp.asarray(cols_halo)
+        self.vals_halo = jnp.asarray(vals_halo)
+        return self.cols_loc, self.vals_loc, self.cols_halo, self.vals_halo
 
 
 def _pattern_chunks(matrix, rows):
@@ -110,8 +191,14 @@ def build_dist_ell(
     P_row: int,
     dtype=None,
     d_pad: int | None = None,
+    split_halo: bool = False,
 ) -> DistEll:
-    """Build per-shard ELL blocks + comm plan for P_row horizontal shards."""
+    """Build per-shard ELL blocks + comm plan for P_row horizontal shards.
+
+    With ``split_halo=True`` the local/halo split consumed by the overlap
+    engine is built eagerly (otherwise ``make_spmv(..., overlap=True)``
+    materializes it lazily on first use).
+    """
     if isinstance(matrix, CSR):
         D = matrix.shape[0]
         get_rows = lambda a, b: _csr_rows(matrix, a, b)
@@ -175,7 +262,7 @@ def build_dist_ell(
         vals_arr[p, rel, slot] = vals.astype(vdtype)
 
     n_vc = np.array([sum(len(v) for v in d.values()) for d in need], dtype=np.int64)
-    return DistEll(
+    ell = DistEll(
         cols=jnp.asarray(cols_arr),
         vals=jnp.asarray(vals_arr),
         send_idx=jnp.asarray(send_idx),
@@ -185,6 +272,9 @@ def build_dist_ell(
         D=D,
         n_vc=n_vc,
     )
+    if split_halo:
+        ell.split()
+    return ell
 
 
 def _csr_rows(csr: CSR, a: int, b: int):
@@ -197,6 +287,18 @@ def _csr_rows(csr: CSR, a: int, b: int):
 # --------------------------------------------------------------------------
 # device side
 # --------------------------------------------------------------------------
+
+
+def _ell_contract(acc, cols, vals, xsrc):
+    """W-step scan accumulation of an ELL block into acc — shared by the
+    baseline and overlap engines so they stay bit-for-bit equivalent (no
+    [R, W, nb] temporary materialized after fusion)."""
+    def body(acc, cw):
+        c, v = cw
+        return acc + v[:, None] * jnp.take(xsrc, c, axis=0), None
+
+    acc, _ = lax.scan(body, acc, (cols.T, vals.T))
+    return acc
 
 
 def _local_spmv(cols, vals, send_idx, x, dist_axes, P_row, L, use_kernel=False):
@@ -213,22 +315,73 @@ def _local_spmv(cols, vals, send_idx, x, dist_axes, P_row, L, use_kernel=False):
         from ..kernels import ops as kops
 
         return kops.ell_spmv(cols, vals, xfull)
-    # W-step accumulation: no [R, W, nb] temporary materialized after fusion
-    def body(acc, cw):
-        c, v = cw
-        return acc + v[:, None] * jnp.take(xfull, c, axis=0), None
-
     acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals.dtype, x.dtype))
-    acc, _ = lax.scan(body, acc0, (cols.T, vals.T))
+    return _ell_contract(acc0, cols, vals, xfull)
+
+
+def _local_spmv_overlap(cols_loc, vals_loc, cols_halo, vals_halo, send_idx, x,
+                        dist_axes, P_row, L, use_kernel=False):
+    """Split-phase per-device body: launch the halo exchange, contract the
+    local ELL while bytes are in flight, then contract the halo ELL.
+
+    The all_to_all has no data dependence on the local contraction, so on
+    backends with async collectives XLA hides it behind step 2 — the
+    ``T = max(T_comm, T_local) + T_halo`` execution model."""
+    R = cols_loc.shape[0]
+    nb = x.shape[1]
+    if P_row > 1:
+        send = jnp.take(x, send_idx, axis=0)  # [P, L, nb]
+        halo = lax.all_to_all(send, dist_axes, split_axis=0, concat_axis=0,
+                              tiled=False).reshape(P_row * L, nb)
+    else:
+        halo = jnp.zeros((0, nb), dtype=x.dtype)
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        return kops.ell_spmv_split(cols_loc, vals_loc, cols_halo, vals_halo,
+                                   x, halo)
+
+    acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals_loc.dtype, x.dtype))
+    acc = _ell_contract(acc0, cols_loc, vals_loc, x)  # overlaps the exchange
+    if cols_halo.shape[1]:
+        acc = _ell_contract(acc, cols_halo, vals_halo, halo)
     return acc
 
 
-def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False):
+def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
+              overlap: bool = False):
     """Return spmv(x) on the global padded array X [D_pad, N_s'] where the
-    layout's dist axes shard D and bundle axes shard N_s."""
+    layout's dist axes shard D and bundle axes shard N_s.
+
+    ``overlap=True`` selects the split-phase engine that issues the halo
+    all_to_all before the local contraction so communication can hide
+    behind local work (identical results; summation order preserved)."""
     dist = layout.dist_axes
     vec_spec = layout.vec_pspec()
     plan_spec = P(dist if dist else None, None, None)
+
+    if overlap:
+        cols_loc, vals_loc, cols_halo, vals_halo = ell.split()
+
+        def local_fn_ov(cl, vl, ch, vh, send_idx, x):
+            # cl/vl [1, R, W_loc]; ch/vh [1, R, W_halo]; send_idx [1, P, L]
+            return _local_spmv_overlap(
+                cl[0], vl[0], ch[0], vh[0], send_idx[0], x, dist, ell.P,
+                ell.L, use_kernel
+            )
+
+        fn = shard_map(
+            local_fn_ov,
+            mesh=mesh,
+            in_specs=(plan_spec,) * 5 + (vec_spec,),
+            out_specs=vec_spec,
+            check_rep=False,
+        )
+
+        def spmv_ov(x):
+            return fn(cols_loc, vals_loc, cols_halo, vals_halo, ell.send_idx, x)
+
+        return spmv_ov
 
     def local_fn(cols, vals, send_idx, x):
         # cols/vals [1, R, W]; send_idx [1, P, L]; x [R, nb_loc]
@@ -250,13 +403,40 @@ def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = Fa
     return spmv
 
 
-def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False):
+def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
+                         overlap: bool = False):
     """w2' = 2a (A w1) + 2b w1 - w2 — the paper's fused SpMV+axpy kernel
     (Alg. 2 step 7), computed in one shard_map body so XLA (or the Pallas
-    kernel) fuses the axpy with the contraction (κ = 5, not 6)."""
+    kernel) fuses the axpy with the contraction (κ = 5, not 6). With
+    ``overlap=True`` the SpMV inside uses the split-phase engine."""
     dist = layout.dist_axes
     vec_spec = layout.vec_pspec()
     plan_spec = P(dist if dist else None, None, None)
+
+    if overlap:
+        cols_loc, vals_loc, cols_halo, vals_halo = ell.split()
+
+        def local_fn(cl, vl, ch, vh, send_idx, w1, w2, a, b):
+            y = _local_spmv_overlap(cl[0], vl[0], ch[0], vh[0], send_idx[0],
+                                    w1, dist, ell.P, ell.L, use_kernel)
+            return 2.0 * a * y + 2.0 * b * w1 - w2
+
+        fn = shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=(plan_spec,) * 5 + (vec_spec, vec_spec, P(), P()),
+            out_specs=vec_spec,
+            check_rep=False,
+        )
+
+        def step_ov(w1, w2, alpha, beta):
+            rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
+            a = jnp.asarray(alpha, dtype=rdt)
+            b = jnp.asarray(beta, dtype=rdt)
+            return fn(cols_loc, vals_loc, cols_halo, vals_halo, ell.send_idx,
+                      w1, w2, a, b)
+
+        return step_ov
 
     def local_fn(cols, vals, send_idx, w1, w2, a, b):
         y = _local_spmv(cols[0], vals[0], send_idx[0], w1, dist, ell.P, ell.L, use_kernel)

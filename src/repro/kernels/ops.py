@@ -27,6 +27,18 @@ def ell_spmv(cols, vals, x):
     return ref.ell_spmv_ref(cols, vals, x)
 
 
+def ell_spmv_split(cols_loc, vals_loc, cols_halo, vals_halo, x, halo):
+    """Split-phase ELL contraction for the overlap engine.
+
+    The local block never reads the halo buffer, so the caller can launch
+    the halo exchange first and XLA overlaps it with the local contraction.
+    The halo block gathers only from the (small) received buffer — on TPU
+    it stays VMEM-resident, which is exactly the regime the ell_gather tile
+    kernel wants (one column block, no re-bucketing)."""
+    return ref.ell_spmv_split_ref(cols_loc, vals_loc, cols_halo, vals_halo,
+                                  x, halo)
+
+
 def cheb_dia(offsets, dvals, x, w1, w2, alpha, beta, *, interpret=None, force_ref=False):
     """Fused Chebyshev DIA step with real/complex dispatch."""
     interpret = (not prefer_pallas()) if interpret is None else interpret

@@ -16,6 +16,17 @@ def ell_spmv_ref(cols, vals, x):
     return acc
 
 
+def ell_spmv_split_ref(cols_loc, vals_loc, cols_halo, vals_halo, x, halo):
+    """Split-phase ELL contraction: local block against the resident shard
+    x [R, nb], halo block against the received buffer halo [P*L, nb]. Per
+    row, local entries accumulate before halo entries — the unsplit ELL
+    slot order."""
+    y = ell_spmv_ref(cols_loc, vals_loc, x)
+    if cols_halo.shape[1]:
+        y = y + ell_spmv_ref(cols_halo, vals_halo, halo)
+    return y
+
+
 def cheb_dia_ref(offsets, dvals, x, w1, w2, alpha, beta):
     """Fused Chebyshev step for a DIA (diagonal-offset) matrix.
 

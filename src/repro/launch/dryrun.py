@@ -163,7 +163,12 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               n_search: int | None = None, verbose=True) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
-    surrogate with the *exact* χ-derived comm plan of the real matrix."""
+    surrogate with the *exact* χ-derived comm plan of the real matrix.
+
+    ``layout_name`` may carry a ``+ov`` suffix (e.g. ``panel+ov``) to lower
+    the split-phase overlap SpMV engine instead of the baseline; the record
+    then also carries the overlap-aware perf-model prediction so the sweep
+    can quantify when overlap restores scalability."""
     from ..configs import get_config as gc
     from ..core import layouts as L
     from ..core.filter_diag import FDConfig
@@ -175,6 +180,9 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
 
     conf = gc(name)
     fd: FDConfig = conf["fd"]
+    overlap = layout_name.endswith("+ov")
+    if overlap:
+        layout_name = layout_name[:-3]
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = mesh.axis_names
     # map the solver layers onto the production mesh:
@@ -207,10 +215,18 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     W = int(round(_nnzr(fam)))
     R = D_pad // N_row
     L = max(-(-int(n_vc.max()) // max(N_row - 1, 1)), 1) if N_row > 1 else 1
+    # overlap surrogate: split the width budget into local + halo parts
+    # (halo rows ~ ceil(n_vc / R) entries wide on average)
+    W_halo = max(1, -(-int(n_vc.max()) // max(R, 1))) if N_row > 1 else 1
+    W_loc = max(1, W - W_halo)
     ell_spec = dict(
         cols=jax.ShapeDtypeStruct((N_row, R, W), jnp.int32),
         vals=jax.ShapeDtypeStruct((N_row, R, W), dt),
         send_idx=jax.ShapeDtypeStruct((N_row, N_row, L), jnp.int32),
+        cols_loc=jax.ShapeDtypeStruct((N_row, R, W_loc), jnp.int32),
+        vals_loc=jax.ShapeDtypeStruct((N_row, R, W_loc), dt),
+        cols_halo=jax.ShapeDtypeStruct((N_row, R, W_halo), jnp.int32),
+        vals_halo=jax.ShapeDtypeStruct((N_row, R, W_halo), dt),
     )
     tsqr = make_tsqr(mesh, stack_l)
     to_panel, to_stack = make_redistribute(mesh, stack_l, panel_l)
@@ -225,22 +241,42 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
         return to_stack(Vp)
 
+    def fd_iteration_ov(V, mu, alpha, beta, cols_loc, vals_loc, cols_halo,
+                        vals_halo, send_idx):
+        ell = spmv_mod.DistEll(cols=cols_loc, vals=vals_loc, send_idx=send_idx,
+                               R=R, L=L, P=N_row, D=D,
+                               cols_loc=cols_loc, vals_loc=vals_loc,
+                               cols_halo=cols_halo, vals_halo=vals_halo)
+        spmv = spmv_mod.make_spmv(mesh, panel_l, ell, overlap=True)
+        Q, _ = tsqr(V)
+        Vp = to_panel(Q)
+        Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
+        return to_stack(Vp)
+
     V = jax.ShapeDtypeStruct((D_pad, n_s), dt)
     mu = jax.ShapeDtypeStruct((degree + 1,), jnp.float32)
     dist = panel_l.dist_axes
     from jax.sharding import PartitionSpec as PS
     plan_sh = jax.NamedSharding(mesh, PS(dist if dist else None, None, None))
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
     with mesh:
         vsh = jax.NamedSharding(mesh, stack_l.vec_pspec())
-        jitted = jax.jit(fd_iteration,
-                         in_shardings=(vsh, None, None, None,
-                                       plan_sh, plan_sh,
-                                       jax.NamedSharding(mesh, PS(dist if dist else None, None, None))),
-                         out_shardings=vsh, donate_argnums=(0,))
-        lowered = jitted.lower(V, mu, jax.ShapeDtypeStruct((), jnp.float32),
-                               jax.ShapeDtypeStruct((), jnp.float32),
-                               ell_spec["cols"], ell_spec["vals"],
-                               ell_spec["send_idx"])
+        if overlap:
+            jitted = jax.jit(fd_iteration_ov,
+                             in_shardings=(vsh, None, None, None) + (plan_sh,) * 5,
+                             out_shardings=vsh, donate_argnums=(0,))
+            lowered = jitted.lower(V, mu, scalar, scalar,
+                                   ell_spec["cols_loc"], ell_spec["vals_loc"],
+                                   ell_spec["cols_halo"], ell_spec["vals_halo"],
+                                   ell_spec["send_idx"])
+        else:
+            jitted = jax.jit(fd_iteration,
+                             in_shardings=(vsh, None, None, None,
+                                           plan_sh, plan_sh, plan_sh),
+                             out_shardings=vsh, donate_argnums=(0,))
+            lowered = jitted.lower(V, mu, scalar, scalar,
+                                   ell_spec["cols"], ell_spec["vals"],
+                                   ell_spec["send_idx"])
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -251,16 +287,38 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
             + 2.0 * D * n_s * n_s
         roof = rl.analyze(compiled, useful, mesh.devices.size)
     rec = {
-        "arch": name, "shape": f"fd_iter[{layout_name},Ns={n_s},deg={degree}]",
+        "arch": name,
+        "shape": f"fd_iter[{layout_name}{'+ov' if overlap else ''},Ns={n_s},deg={degree}]",
         "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": mesh.devices.size,
         "status": "ok", "t_lower_s": round(t_lower, 1),
         "t_compile_s": round(t_compile, 1), "memory": mem,
         "model_flops": useful, **roof.row(),
         "chi_comm_plan_L": int(L), "n_vc_max": int(n_vc.max()) if N_row > 1 else 0,
     }
+    # perf-model per-Chebyshev-iteration prediction for this cell: additive
+    # Eq. 12 vs the overlap engine's max(T_comm, T_local) + T_halo — the
+    # sweep uses the ratio to see where overlap restores scalability
+    if N_row > 1:
+        from ..core import perf_model as pm
+        from ..core.metrics import chi_from_nvc
+
+        bnd = np.minimum(np.arange(N_row + 1) * (D_pad // N_row), D)
+        chim = chi_from_nvc(n_vc, np.diff(bnd), D)
+        n_b_loc = max(n_s // max(n_col, 1), 1)
+        kw = dict(D=D, N_p=N_row, n_b=n_b_loc, chi=chim.chi1,
+                  n_nzr=_nnzr(fam), S_d=jnp.dtype(dt).itemsize)
+        rec["t_model_additive_s"] = pm.cheb_iter_time(pm.TPU_V5E, **kw)
+        rec["t_model_overlap_s"] = pm.cheb_iter_time_overlap(pm.TPU_V5E, **kw)
+        rec["overlap_model_speedup"] = round(
+            rec["t_model_additive_s"] / rec["t_model_overlap_s"], 3)
     if verbose:
-        print(f"[dryrun-eigen] {name} [{layout_name}] on {rec['mesh']}: OK "
+        print(f"[dryrun-eigen] {name} "
+              f"[{layout_name}{'+ov' if overlap else ''}] on {rec['mesh']}: OK "
               f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        if "overlap_model_speedup" in rec:
+            print(f"  perf model/iter: additive={rec['t_model_additive_s']*1e3:.2f}ms "
+                  f"overlap={rec['t_model_overlap_s']*1e3:.2f}ms "
+                  f"(x{rec['overlap_model_speedup']:.2f} if overlapped)")
         print(f"  memory_analysis: {mem}")
         print(f"  roofline: compute={roof.t_compute*1e3:.2f}ms "
               f"memory={roof.t_memory*1e3:.2f}ms "
@@ -288,7 +346,8 @@ def main(argv=None):
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--eigen", help="paper config dry-run (exciton200/hubbard16)")
-    ap.add_argument("--layout", default="pillar", choices=["stack", "panel", "pillar"])
+    ap.add_argument("--layout", default="pillar",
+                    choices=["stack", "panel", "pillar", "panel+ov", "stack+ov"])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None, help="append JSON records here")

@@ -11,11 +11,18 @@ re-aggregate:
                      (no conv ops in this codebase's models)
   collective bytes — operand bytes of all-gather / all-reduce /
                      reduce-scatter / all-to-all / collective-permute
+                     (async ``-start``/``-done`` pairs counted once, on the
+                     start; tuple-shaped operand lists are summed per leaf)
   hbm bytes        — operands+result of ops at fusion granularity
                      (internal fused computations are not double counted)
 
-Validated against cost_analysis() on fully-unrolled small models (where
-XLA's numbers are exact) in tests/test_hlo_analysis.py.
+The parser is deliberately defensive about HLO-text dialects: operands may
+be printed bare (``%arg.1``) or with inline types (``f32[8,32]{1,0}
+%arg.1``), names may or may not carry the ``%`` sigil, the trip count may
+sit on the while line or on a continuation line, and computation names may
+be mangled (``region_0.35``, ``wide.wide.body``, ``...clone``). Validated
+against cost_analysis() on fully-unrolled small models (where XLA's
+numbers are exact) in tests/test_hlo_analysis.py.
 """
 from __future__ import annotations
 
@@ -30,12 +37,17 @@ _DTYPE_BYTES = {
     "c128": 16,
 }
 
-_TYPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TYPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
-_SKIP_BYTES_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
-                   "bitcast(", " while(", "conditional(", "after-all(",
-                   "partition-id(", "replica-id(", "iota(")
+# ops whose operands/results never touch HBM as real traffic
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "iota", "copy-start", "copy-done",
+}
+# an op-defining line: optional ROOT, optional % sigil, name, '='
+_OP_LINE = re.compile(r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*\S")
 
 
 def _shape_elems(dims: str) -> int:
@@ -50,21 +62,35 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 0)
 
 
+def _typed_tokens_bytes(text: str) -> int:
+    """Sum the byte sizes of every inline-typed leaf (``f32[8,32]``) in a
+    fragment — handles tuple shapes by summing their leaves."""
+    return sum(_shape_bytes(d, dims) for d, dims in _TYPE_RE.findall(text))
+
+
 def _split_computations(text: str) -> dict[str, list[str]]:
+    """Computation name -> its lines, with continuation lines joined onto
+    the op line they belong to (trip counts / configs may wrap)."""
     comps: dict[str, list[str]] = {}
     cur = None
-    header = None
     for line in text.splitlines():
-        if not line.startswith(" ") and "{" in line and ("(" in line) and "->" in line:
-            name = line.split("(", 1)[0].strip().lstrip("%").replace("ENTRY ", "").replace("ENTRY%", "")
+        if line.startswith("HloModule"):
+            continue
+        if (not line.startswith(" ") and "{" in line and "(" in line
+                and "->" in line):
+            name = line.split("(", 1)[0]
             name = name.replace("ENTRY", "").strip().lstrip("%").strip()
             cur = name
             comps[cur] = [line]
         elif cur is not None:
             if line.startswith("}"):
                 cur = None
-            else:
+            elif _OP_LINE.match(line.strip()) or len(comps[cur]) == 1:
                 comps[cur].append(line)
+            elif line.strip():
+                # continuation of a wrapped op line (e.g. backend_config on
+                # its own line) — join so per-line regexes still see it
+                comps[cur][-1] = comps[cur][-1].rstrip() + " " + line.strip()
     return comps
 
 
@@ -77,11 +103,13 @@ def _entry_name(text: str, comps) -> str | None:
     return None
 
 
-_REF_WHILE = re.compile(r"body=%([\w\.\-]+)")
-_REF_COND = re.compile(r"condition=%([\w\.\-]+)")
-_REF_CALLS = re.compile(r"calls=%([\w\.\-]+)")
-_REF_APPLY = re.compile(r"to_apply=%([\w\.\-]+)")
-_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_REF_WHILE = re.compile(r"body=%?([\w\.\-]+)")
+_REF_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_REF_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_REF_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+# matches "known_trip_count":{"n":"6"}, known_trip_count{n:6} (proto text)
+# and known_trip_count = {n = 6} variants
+_TRIP = re.compile(r'known_trip_count["\s]*[=:]?\s*\{[^}]*?n["\s]*[=:]\s*"?(\d+)')
 
 
 def _multiplicities(comps, entry) -> dict[str, float]:
@@ -121,6 +149,105 @@ def _multiplicities(comps, entry) -> dict[str, float]:
     return mult
 
 
+# --------------------------------------------------------------- op parse --
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result: str    # text of the result type (may be a tuple)
+    opname: str    # e.g. "dot", "all-to-all-start", "fusion"
+    operands: str  # raw operand-list text (commas inside types possible)
+    attrs: str     # everything after the closing operand paren
+
+
+def _balanced(s: str, i: int) -> int:
+    """Index just past the paren group opening at s[i] ('(' expected)."""
+    depth = 0
+    for j in range(i, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(s)
+
+
+def _parse_op(ls: str) -> _Op | None:
+    """Parse one op line: ``[ROOT] %name = <result> opname(<operands>), attrs``."""
+    s = ls.strip()
+    if s.startswith("ROOT"):
+        s = s[4:].strip()
+    m = re.match(r"%?([\w\.\-]+)\s*=\s*", s)
+    if not m:
+        return None
+    name = m.group(1)
+    s = s[m.end():]
+    # result type: either a tuple "(...)" or a single "dtype[dims]{layout}"
+    if s.startswith("("):
+        j = _balanced(s, 0)
+        result, s = s[:j], s[j:].lstrip()
+    else:
+        tm = re.match(r"[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?", s)
+        if not tm:
+            return None
+        result, s = tm.group(0), s[tm.end():].lstrip()
+    om = re.match(r"([\w\-]+)\s*\(", s)
+    if not om:
+        return None
+    opname = om.group(1)
+    k = _balanced(s, om.end() - 1)
+    operands = s[om.end():k - 1]
+    attrs = s[k:]
+    return _Op(name=name, result=result, opname=opname, operands=operands,
+               attrs=attrs)
+
+
+def _operand_list(opstr: str) -> list[str]:
+    """Split an operand string at top-level commas (commas inside type
+    annotations like ``f32[8,32]{1,0}`` or nested tuples don't split)."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(opstr):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(opstr[start:i].strip())
+            start = i + 1
+    tail = opstr[start:].strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _operand_type(op: str, sym) -> tuple[str, str] | None:
+    """(dtype, dims) of one operand: inline annotation if present, else a
+    symbol-table lookup of the trailing name."""
+    tm = _TYPE_RE.search(op)
+    if tm:
+        return tm.group(1), tm.group(2)
+    nm = re.search(r"%?([\w\.\-]+)\s*$", op)
+    if nm and nm.group(1) in sym:
+        return sym[nm.group(1)]
+    return None
+
+
+def _operand_bytes(opstr: str, sym) -> int:
+    """Total bytes of an operand list; inline types win, bare names fall
+    back to the symbol table."""
+    b = _typed_tokens_bytes(opstr)
+    if b:
+        return b
+    total = 0
+    for op in _operand_list(opstr):
+        t = _operand_type(op, sym)
+        if t:
+            total += _shape_bytes(*t)
+    return total
+
+
 def _symbols(lines) -> dict[str, tuple[str, str]]:
     """name -> (dtype, dims) for every defined value + typed params."""
     sym: dict[str, tuple[str, str]] = {}
@@ -129,23 +256,21 @@ def _symbols(lines) -> dict[str, tuple[str, str]]:
         sym[m.group(1)] = (m.group(2), m.group(3))
     for ln in lines[1:]:
         ls = ln.strip()
-        if not ls.startswith("%") and not ls.startswith("ROOT"):
+        if not _OP_LINE.match(ls):
             continue
-        ls2 = ls[5:].strip() if ls.startswith("ROOT") else ls
-        m = re.match(r"%([\w\.\-]+)\s*=\s*(?:\()?([a-z][a-z0-9]*)\[([0-9,]*)\]", ls2)
+        m = re.match(r"(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(?:\()?([a-z][a-z0-9]*)\[([0-9,]*)\]", ls)
         if m:
             sym[m.group(1)] = (m.group(2), m.group(3))
     return sym
 
 
-def _dot_flops(ls: str, sym) -> float:
-    m = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*([a-z][a-z0-9]*)\[([0-9,]*)\][^=]*dot\(([^)]*)\)", ls)
-    if not m:
+def _dot_flops(op: _Op, sym) -> float:
+    if op.opname != "dot":
         return 0.0
-    res_elems = _shape_elems(m.group(2))
-    ops = [o.strip().lstrip("%") for o in m.group(3).split(",")]
-    lhs = sym.get(ops[0]) if ops else None
-    cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ls)
+    res_elems = sum(_shape_elems(dims) for _, dims in _TYPE_RE.findall(op.result))
+    ops = _operand_list(op.operands)
+    lhs = _operand_type(ops[0], sym) if ops else None
+    cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
     contract = 1
     if lhs and cd:
         dims = [int(x) for x in lhs[1].split(",") if x] if lhs[1] else []
@@ -153,6 +278,23 @@ def _dot_flops(ls: str, sym) -> float:
             if ci and int(ci) < len(dims):
                 contract *= dims[int(ci)]
     return 2.0 * res_elems * contract
+
+
+def _collective_kind(opname: str) -> str | None:
+    """Collective kind for an opname, counting async pairs once (start)."""
+    if opname.endswith("-done") or opname.endswith("-update"):
+        return None
+    base = opname[:-6] if opname.endswith("-start") else opname
+    return base if base in _COLLECTIVES else None
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions, which
+    variously return a dict, a per-device list of dicts, or None."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 
 @dataclasses.dataclass
@@ -191,42 +333,22 @@ def analyze_hlo(text: str) -> HloCosts:
         in_internal = name in internal
         for ln in lines[1:]:
             ls = ln.strip()
-            if not (ls.startswith("%") or ls.startswith("ROOT")):
+            op = _parse_op(ls)
+            if op is None:
                 continue
-            f = _dot_flops(ls, sym)
+            f = _dot_flops(op, sym)
             if f:
                 flops += m * f
-            kind = None
-            for c in _COLLECTIVES:
-                if re.search(rf"\b{c}(-start)?\(", ls) and "-done" not in ls.split("=")[0]:
-                    kind = c
-                    break
+            kind = _collective_kind(op.opname)
             if kind:
-                ops_m = re.search(rf"{kind}(?:-start)?\(([^)]*)\)", ls)
-                b = 0
-                if ops_m:
-                    for o in ops_m.group(1).split(","):
-                        o = o.strip().lstrip("%")
-                        if o in sym:
-                            b += _shape_bytes(*sym[o])
+                b = _operand_bytes(op.operands, sym)
                 if b == 0:  # fall back to result type
-                    tm = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*([a-z][a-z0-9]*)\[([0-9,]*)\]", ls)
-                    if tm:
-                        b = _shape_bytes(tm.group(1), tm.group(2))
+                    b = _typed_tokens_bytes(op.result)
                 coll[kind] += m * b
                 heavy.append((kind, b, m))
-            if not in_internal and not any(s in ls for s in _SKIP_BYTES_OPS):
-                tm = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(?:\()?([a-z][a-z0-9]*)\[([0-9,]*)\]", ls)
-                if tm:
-                    b = _shape_bytes(tm.group(1), tm.group(2))
-                    # operands
-                    call = re.search(r"\(([^)]*)\)", ls.split("=", 1)[1])
-                    if call:
-                        for o in call.group(1).split(","):
-                            o = o.strip().lstrip("%")
-                            if o in sym:
-                                b += _shape_bytes(*sym[o])
-                    hbm += m * b
+            if not in_internal and op.opname not in _SKIP_BYTES_OPS:
+                b = _typed_tokens_bytes(op.result) + _operand_bytes(op.operands, sym)
+                hbm += m * b
     heavy.sort(key=lambda x: -x[1] * x[2])
     return HloCosts(flops=flops, hbm_bytes=hbm, coll_bytes=sum(coll.values()),
                     coll_breakdown=coll, per_collective=heavy[:20])

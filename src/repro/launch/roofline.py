@@ -142,12 +142,9 @@ def analyze(compiled, model_flops_total: float, n_chips: int) -> Roofline:
     unrolled modules in tests); raw cost_analysis values are kept in
     ``xla_cost`` for reference.
     """
-    from .hlo_analysis import analyze_hlo
+    from .hlo_analysis import analyze_hlo, xla_cost_analysis
 
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0]
-    cost = cost or {}
+    cost = xla_cost_analysis(compiled)
     h = analyze_hlo(compiled.as_text())
     r = Roofline(
         flops_per_chip=h.flops,

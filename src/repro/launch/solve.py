@@ -70,10 +70,14 @@ def main(argv=None):
     ap.add_argument("--max-iters", type=int, default=40)
     ap.add_argument("--n-row", type=int, default=1)
     ap.add_argument("--n-col", type=int, default=1)
+    ap.add_argument("--spmv-overlap", action="store_true",
+                    help="split-phase SpMV: hide the halo all_to_all behind "
+                         "the local ELL contraction")
     ap.add_argument("--degraded-ok", action="store_true")
     args = ap.parse_args(argv)
     fd = FDConfig(n_target=args.n_target, n_search=args.n_search,
-                  target=args.target, tol=args.tol, max_iters=args.max_iters)
+                  target=args.target, tol=args.tol, max_iters=args.max_iters,
+                  spmv_overlap=args.spmv_overlap)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok)
     print(f"converged {res.n_converged} eigenpairs in {res.iterations} "

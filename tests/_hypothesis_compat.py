@@ -1,0 +1,123 @@
+"""Offline stand-in for the subset of `hypothesis` this test suite uses.
+
+The container has no network access and `hypothesis` is not baked in, so a
+hard import aborts collection of five tier-1 modules. When the real
+library is available it is re-exported unchanged; otherwise `given` /
+`settings` / `strategies` are backed by a *deterministic* example
+sequence: every strategy first yields its boundary values (min, then max)
+and then seeded pseudo-random draws, so each `@given` test runs
+`max_examples` fixed cases. This keeps the property-style tests meaningful
+(boundaries + a spread of interior points) and exactly reproducible.
+
+Usage in test modules:
+
+    from tests._hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # prefer the real thing when the environment has it
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw rule: example(i, rng) -> value. i==0/1 hit boundaries."""
+
+        def __init__(self, fn):
+            self._fn = fn
+
+        def example(self, i: int, rng: random.Random):
+            return self._fn(i, rng)
+
+    class st:  # noqa: N801 - mimics `strategies as st`
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            def draw(i, rng):
+                if i == 0:
+                    return min_value
+                if i == 1:
+                    return max_value
+                return rng.uniform(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            def draw(i, rng):
+                if i == 0:
+                    return min_value
+                if i == 1:
+                    return max_value
+                return rng.randint(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+
+            def draw(i, rng):
+                if i < len(elements):
+                    return elements[i]
+                return elements[rng.randrange(len(elements))]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False, **_kw):
+            def draw(i, rng):
+                n = min_size if i == 0 else (max_size if i == 1
+                                             else rng.randint(min_size, max_size))
+                out = []
+                attempts = 0
+                while len(out) < n and attempts < 100 * max(n, 1):
+                    v = elements.example(2 + attempts, rng)
+                    attempts += 1
+                    if unique and v in out:
+                        continue
+                    out.append(v)
+                return out
+
+            return _Strategy(draw)
+
+    def settings(max_examples: int = 10, **_kw):
+        """Records max_examples on the test for `given` to pick up."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Run the test over a fixed grid of examples per strategy kwargs."""
+
+        def deco(fn):
+            n = getattr(fn, "_compat_max_examples", 10)
+
+            def wrapper(*args, **kwargs):
+                for i in range(n):
+                    rng = random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
+                    drawn = {k: s.example(i, rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception:
+                        print(f"falsifying example ({fn.__name__}, case {i}): "
+                              f"{drawn}")
+                        raise
+
+            # keep a zero-arg signature for pytest (no __wrapped__: pytest
+            # would otherwise resolve the strategy kwargs as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            for key, val in fn.__dict__.items():
+                if key != "_compat_max_examples":
+                    wrapper.__dict__[key] = val
+            return wrapper
+
+        return deco

@@ -76,6 +76,7 @@ print("VOLUME OK", atoa, per_chip_pred)
     assert "VOLUME OK" in out
 
 
+@pytest.mark.slow
 def test_fd_panel_interior_eigenvalues():
     """FD with two layers of parallelism on a 4x2 mesh finds interior
     eigenvalues of SpinChainXXZ(12,6) matching dense eigh."""
@@ -130,6 +131,7 @@ print("FUSED OK")
     assert "FUSED OK" in out
 
 
+@pytest.mark.slow
 def test_production_mesh_and_shardings_small():
     """shardings rules produce valid, divisible specs for every arch on a
     small (2,2[,2]) stand-in mesh; lower+compile a smoke train step."""

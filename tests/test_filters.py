@@ -1,7 +1,7 @@
 """Filter polynomial construction (window Chebyshev expansion + Jackson)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.filters import (build_filter, degree_for, jackson_damping,
                                 window_coeffs)

@@ -1,7 +1,7 @@
 """χ communication metrics: exactness, paper-table reproduction, invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.metrics import chi_bruteforce, chi_from_nvc, chi_metrics
 from repro.matrices import Exciton, Hubbard, SpinChainXXZ, TopIns, uniform_partition

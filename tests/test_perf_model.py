@@ -1,7 +1,7 @@
 """Analytic performance model (paper Eqs. 11-23)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import perf_model as pm
 from repro.core.metrics import chi_metrics
