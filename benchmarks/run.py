@@ -13,7 +13,7 @@ def main() -> None:
                     help="include the 1e8-dimension χ instances (minutes)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table5,fig4,fig5,table3,table4,"
-                         "spmv_overlap,roofline")
+                         "spmv_overlap,planner,roofline")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -27,6 +27,7 @@ def main() -> None:
         "table3": tables.table3_amortization,
         "table4": tables.table4_fd_end_to_end,
         "spmv_overlap": tables.spmv_overlap,
+        "planner": tables.planner_table,
         "roofline": tables.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else set(benches)

@@ -354,6 +354,45 @@ print(f"HALO_FRAC {ell.halo_nnz_fraction:.4f}")
     return rows
 
 
+def planner_table():
+    """§Planner: χ-driven layout choice across the bundled matrix families.
+
+    For each family the planner (core/planner.py) ranks every
+    (mesh split x layout x overlap) configuration from the sparsity
+    pattern alone — no jax, no device work; the winner is what
+    ``--layout auto`` runs. The ``matfree`` row plans a pattern-only
+    instance (``exact_comm=False``: χ via the family's streamed/structured
+    n_vc, no per-pair scan) — the path used at paper scale (D ~ 1e8)."""
+    from repro.core.planner import plan_layout
+    from repro.matrices import Exciton, Hubbard, SpinChainXXZ, TopIns
+
+    rows = []
+    P, Ns = 32, 64
+    cases = [
+        ("exciton", Exciton(L=10), {}),
+        ("hubbard", Hubbard(10, 5, U=4.0, ranpot=1.0), {}),
+        ("spinchain", SpinChainXXZ(14, 7), {}),
+        ("topins", TopIns(12), {}),
+        ("matfree", Exciton(L=24), dict(exact_comm=False)),
+    ]
+    print(f"\n=== Planner: chi-driven layout choice (P={P}, Ns={Ns}, v5e) ===")
+    print(f"{'family':10s} {'D':>9s} {'best':16s} {'chi1':>6s} "
+          f"{'t_pass[ms]':>11s} {'speedup':>8s}  runners-up")
+    for label, fam, kw in cases:
+        t0 = time.perf_counter()
+        plan = plan_layout(fam, P, n_search=Ns, **kw)
+        us = (time.perf_counter() - t0) * 1e6
+        b = plan.best
+        others = ", ".join(f"{c.describe()} x{plan.speedup(c):.2f}"
+                           for c in plan.candidates[1:3])
+        print(f"{label:10s} {plan.D:9d} {b.describe():16s} {b.chi1:6.2f} "
+              f"{b.t_pass * 1e3:11.3f} {plan.speedup(b):8.2f}  {others}")
+        rows.append((f"planner_{label}", us,
+                     f"best={b.describe()} ov={int(b.overlap)} "
+                     f"chi1={b.chi1:.2f} s={plan.speedup(b):.2f}"))
+    return rows
+
+
 def roofline_table():
     """§Roofline source: per-cell terms from the dry-run caches.
 

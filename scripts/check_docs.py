@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Documentation consistency gate.
+
+Verifies, without importing any heavy modules:
+
+  1. every module under ``src/repro/`` has a module docstring,
+  2. every ``--flag`` used by a README bash snippet exists in the argparse
+     parser of the CLI the snippet invokes (``repro.launch.solve``,
+     ``repro.launch.dryrun``, ``benchmarks.run``),
+  3. every repo-relative ``*.py``/``*.md`` path referenced in the README
+     exists,
+  4. every function/class name the README's cross-reference table pins to
+     a file is actually defined in that file.
+
+Run standalone::
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+or as part of the tier-1 suite via ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(ROOT, "README.md")
+
+#: README CLI module -> source file holding its argparse definitions
+CLI_SOURCES = {
+    "repro.launch.solve": "src/repro/launch/solve.py",
+    "repro.launch.dryrun": "src/repro/launch/dryrun.py",
+    "benchmarks.run": "benchmarks/run.py",
+}
+
+
+def check_module_docstrings() -> list[str]:
+    """Every module under src/repro must carry a module docstring."""
+    errors = []
+    for dirpath, _, filenames in os.walk(os.path.join(ROOT, "src", "repro")):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                try:
+                    tree = ast.parse(f.read())
+                except SyntaxError as e:
+                    errors.append(f"{os.path.relpath(path, ROOT)}: {e}")
+                    continue
+            if ast.get_docstring(tree) is None:
+                errors.append(
+                    f"{os.path.relpath(path, ROOT)}: missing module docstring")
+    return errors
+
+
+def _bash_commands(text: str) -> list[str]:
+    """Commands from README ```bash fences, continuation lines joined."""
+    cmds = []
+    for block in re.findall(r"```bash\n(.*?)```", text, flags=re.S):
+        joined = block.replace("\\\n", " ")
+        for line in joined.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                cmds.append(line)
+    return cmds
+
+
+def _declared_flags(src_path: str) -> set[str]:
+    """--flags declared via add_argument in a CLI source file."""
+    with open(os.path.join(ROOT, src_path)) as f:
+        return set(re.findall(r"add_argument\(\s*[\"'](--[\w-]+)[\"']", f.read()))
+
+
+def check_readme_flags() -> list[str]:
+    """README bash snippets may only use flags the CLIs declare."""
+    errors = []
+    with open(README) as f:
+        text = f.read()
+    for cmd in _bash_commands(text):
+        target = next((m for m in CLI_SOURCES
+                       if f"-m {m}" in cmd or CLI_SOURCES[m] in cmd), None)
+        if target is None:
+            continue
+        declared = _declared_flags(CLI_SOURCES[target])
+        # flags preceded by whitespace (so VAR=--xla... env values don't count)
+        for flag in re.findall(r"(?<=\s)--[a-zA-Z][\w-]*", cmd):
+            if flag not in declared:
+                errors.append(
+                    f"README: `{flag}` not a flag of {target} "
+                    f"(declared: {sorted(declared)})")
+    return errors
+
+
+def check_readme_paths() -> list[str]:
+    """Repo-relative paths in backticks must exist."""
+    errors = []
+    with open(README) as f:
+        text = f.read()
+    for ref in set(re.findall(r"`((?:src|benchmarks|tests|scripts|examples)"
+                              r"/[\w/.\-]+?\.(?:py|md))`", text)):
+        if not os.path.exists(os.path.join(ROOT, ref)):
+            errors.append(f"README: referenced path `{ref}` does not exist")
+    return errors
+
+
+def check_readme_symbols() -> list[str]:
+    """Cross-reference rows ``path` — `name1`, `name2`...`: each name must
+    be defined (def/class/assignment) in that file."""
+    errors = []
+    with open(README) as f:
+        text = f.read()
+    for path, names in re.findall(
+            r"`((?:src|benchmarks)/[\w/.\-]+?\.py)`[^|\n]*?—((?:[^|\n]*?`[\w.]+`)+)",
+            text):
+        full = os.path.join(ROOT, path)
+        if not os.path.exists(full):
+            continue  # reported by check_readme_paths
+        with open(full) as f:
+            src = f.read()
+        for name in re.findall(r"`([\w.]+)`", names):
+            base = name.split(".")[-1]
+            if not re.search(rf"^\s*(?:def|class)\s+{re.escape(base)}\b"
+                             rf"|^\s*{re.escape(base)}\s*[=:]",
+                             src, flags=re.M):
+                errors.append(f"README: `{name}` not defined in {path}")
+    return errors
+
+
+def run_all() -> list[str]:
+    errors = []
+    errors += check_module_docstrings()
+    errors += check_readme_flags()
+    errors += check_readme_paths()
+    errors += check_readme_symbols()
+    return errors
+
+
+def main() -> int:
+    errors = run_all()
+    for e in errors:
+        print(f"[check_docs] {e}")
+    if errors:
+        print(f"[check_docs] FAILED ({len(errors)} problems)")
+        return 1
+    print("[check_docs] OK — docstrings, README flags/paths/symbols consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,8 @@
 """Core — the paper's contribution: two orthogonal layers of parallelism
 for block eigensolvers (layouts, χ metrics, distributed SpMV, Chebyshev
 filter, communication-avoiding orthogonalization, redistribution, the FD
-driver, and the analytic performance model)."""
+driver, the analytic performance model, and the χ-driven layout planner
+that turns the model into the control path)."""
 from .layouts import Layout, make_solver_mesh, panel, pillar, stack
 from .metrics import ChiMetrics, chi_bruteforce, chi_from_nvc, chi_metrics, chi_sweep
 from .spmv import DistEll, Partition, build_dist_ell, make_fused_cheb_step, make_spmv
@@ -11,6 +12,7 @@ from .orthogonalize import make_gram, make_svqb, make_tsqr
 from .redistribute import make_redistribute, redistribution_volume
 from .lanczos import lanczos_interval
 from .filter_diag import FDConfig, FDResult, FilterDiag
+from .planner import Candidate, Plan, SpmvCommPlan, comm_plan, plan_for_mesh, plan_layout
 from . import perf_model
 
 __all__ = [
@@ -23,5 +25,6 @@ __all__ = [
     "make_redistribute", "redistribution_volume",
     "lanczos_interval",
     "FDConfig", "FDResult", "FilterDiag",
+    "Candidate", "Plan", "SpmvCommPlan", "comm_plan", "plan_for_mesh", "plan_layout",
     "perf_model",
 ]

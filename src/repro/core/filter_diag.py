@@ -9,6 +9,14 @@ Orchestrates the two orthogonal layers of parallelism:
 The driver is layout-generic: with ``n_col = 1`` it degenerates to the
 classic single-layer stack algorithm (the paper's baseline); with
 ``n_col = P`` the filter runs in the pillar layout (comm-free SpMV).
+
+The filter layout is picked by ``FDConfig.layout``: an explicit name
+("stack" / "panel" / "pillar") materialized on the given mesh, or
+``"auto"``, which runs the χ-driven planner (``core/planner.py``) over
+the layouts the mesh realizes and adopts the minimum-predicted-time
+configuration — including whether to use the split-phase overlap SpMV
+engine (``FDConfig.spmv_overlap`` is then set from the plan). A
+``panel_layout`` passed explicitly to ``FilterDiag`` overrides both.
 """
 from __future__ import annotations
 
@@ -46,6 +54,7 @@ class FDConfig:
     sharpness: float = 6.0
     ortho: str = "tsqr"         # or "svqb"
     redist_impl: str = "explicit"  # or "gspmd"
+    layout: str = "panel"       # filter layout: stack | panel | pillar | auto
     spmv_overlap: bool = False  # split-phase SpMV: hide halo exchange
     dtype: str = "float64"
     seed: int = 7
@@ -67,15 +76,22 @@ class FDResult:
 class FilterDiag:
     """Filter diagonalization on a (row x col) solver mesh.
 
-    ``matrix`` may be a MatrixFamily, a CSR, or a pre-built pair of
-    DistEll operators via ``from_operators``.
+    ``matrix`` may be a MatrixFamily or a CSR — both expose the sparsity
+    pattern, which ``build_dist_ell`` turns into per-shard ELL blocks plus
+    the halo communication plan (and which the planner consumes when
+    ``cfg.layout == "auto"``; the chosen plan is kept on ``self.plan``).
     """
 
     def __init__(self, matrix, mesh: Mesh, cfg: FDConfig,
                  panel_layout: Layout | None = None):
+        if panel_layout is None and cfg.layout == "auto":
+            # the planner decides spmv_overlap — work on a copy so the
+            # caller's config object is not mutated
+            cfg = dataclasses.replace(cfg)
         self.cfg = cfg
         self.mesh = mesh
-        self.panel_layout = panel_layout or panel(mesh)
+        self.plan = None
+        self.panel_layout = panel_layout or self._resolve_layout(matrix, mesh, cfg)
         # stack shards D over all axes, panel-row axes slowest ("matching")
         self.stack_layout = Layout(
             "stack", self.panel_layout.dist_axes + self.panel_layout.bundle_axes, ()
@@ -105,6 +121,30 @@ class FilterDiag:
         self._build_fns(matrix)
 
     # ------------------------------------------------------------------
+    def _resolve_layout(self, matrix, mesh: Mesh, cfg: FDConfig) -> Layout:
+        """Materialize ``cfg.layout`` on the mesh; ``"auto"`` runs the
+        χ-driven planner over {stack, panel, pillar} × {overlap on/off}
+        and also decides ``cfg.spmv_overlap``."""
+        from .planner import layout_on_mesh, plan_for_mesh
+
+        if cfg.layout == "auto":
+            # plan on the engine's padded partition (build_dist_ell below
+            # uses d_pad = ceil(D/P)*P) so the scored χ/L are the ones the
+            # built operator will actually realize
+            P = 1
+            for a in mesh.axis_names:
+                P *= mesh.shape[a]
+            D = matrix.shape[0] if hasattr(matrix, "shape") else matrix.D
+            self.plan = plan_for_mesh(matrix, mesh, n_search=cfg.n_search,
+                                      d_pad=-(-D // P) * P)
+            best = self.plan.best
+            cfg.spmv_overlap = best.overlap
+            return layout_on_mesh(mesh, best.layout)
+        if cfg.layout in ("stack", "panel", "pillar"):
+            return layout_on_mesh(mesh, cfg.layout)
+        raise ValueError(f"unknown FDConfig.layout {cfg.layout!r} "
+                         "(expected stack | panel | pillar | auto)")
+
     def _build_fns(self, matrix):
         mesh, cfg = self.mesh, self.cfg
         self.spmv_stack = make_spmv(mesh, self.stack_layout, self.ell_stack,

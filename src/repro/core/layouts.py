@@ -4,17 +4,39 @@ The search vectors form a D x N_s matrix V. A *panel* layout distributes V
 over an (N_row x N_col) Cartesian process grid (paper Fig. 3):
 
   * horizontal layer — the D axis is sliced across ``N_row`` processes
-    (SpMV communicates along this axis),
+    (SpMV communicates along this axis: each shard gathers the remote
+    vector entries its nonzeros reference — the χ metric counts them),
   * vertical layer   — the N_s axis is sliced across ``N_col`` process
-    columns (orthogonalization communicates along this axis).
+    columns into bundles of N_s/N_col vectors (no SpMV communication
+    crosses it; orthogonalization communicates along this axis).
 
-``stack``  = N_col = 1  (D over all P; orthogonalization-friendly)
-``pillar`` = N_row = 1  (N_s over all P; SpMV requires no communication)
+The three named layouts on a P = 8 device mesh, showing which slice of
+the D x N_s vector block each device p0..p7 owns::
+
+        stack (8x1)          panel (4x2)          pillar (1x8)
+      N_col = 1            N_row x N_col        N_row = 1
+      +-----------+        +-----+-----+      +--+--+--+--+--+--+--+--+
+   D  | p0        |        | p0  | p1  |      |p0|p1|p2|p3|p4|p5|p6|p7|
+   |  | p1        |        +-----+-----+      |  |  |  |  |  |  |  |  |
+   v  | p2        |        | p2  | p3  |      |  |  |  |  |  |  |  |  |
+      |  ...      |        +-----+-----+      |  |  |  |  |  |  |  |  |
+      | p7        |        |  ...      |      |  |  |  |  |  |  |  |  |
+      +-----------+        +-----+-----+      +--+--+--+--+--+--+--+--+
+        -> N_s                -> N_s               -> N_s
+
+``stack``  = N_col = 1: D over all P — orthogonalization-friendly, but the
+SpMV halo exchange spans all P processes (χ grows with N_row).
+``pillar`` = N_row = 1: N_s over all P — every device holds all of D, the
+filter's SpMV needs **no communication**, at the price of redistributing
+V before/after each filter pass (Alg. 1 steps 7/9, ``redistribute.py``).
+``panel``  = everything in between.
 
 On a JAX mesh the horizontal layer maps to the ``row`` axis and the
 vertical layer to the ``col`` axis (for the LM production mesh these are
 the ``model`` / ``data`` axes; the multi-pod ``pod`` axis extends the
 vertical layer — pods never communicate during the polynomial filter).
+The χ-driven planner (``planner.py``) chooses between these layouts from
+the sparsity pattern when ``FDConfig.layout == "auto"``.
 """
 from __future__ import annotations
 

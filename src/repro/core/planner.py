@@ -1,0 +1,401 @@
+"""χ-driven layout & overlap planner — the perf model as the control path.
+
+The paper's central observation is that the communication metric χ (Eqs.
+8–10, ``core/metrics.py``) is computable **from the sparsity pattern
+alone**, before any code runs, and predicts when each of the two
+orthogonal layers of parallelism wins:
+
+  * low χ   → the horizontal layer scales: keep ``stack``/wide ``panel``
+              row meshes (D sliced over many processes),
+  * high χ  → SpMV communication destroys scaling (Eq. 11): shrink the
+              row mesh — at the extreme the ``pillar`` layout (n_col = P)
+              makes the filter communication-free — and pay the explicit
+              redistribution (Eqs. 17/18) instead,
+  * overlap → the split-phase SpMV engine (``spmv.py overlap=True``)
+              replaces the additive χ term of Eq. 12 with
+              ``max(T_comm, T_local)`` (``perf_model.cheb_iter_time_overlap``),
+              shifting the stack↔pillar break-even point.
+
+This module enumerates candidate configurations — mesh splits
+``n_row × n_col`` with ``n_row · n_col = P``, vector layouts
+{stack, panel, pillar}, overlap on/off, redistribution on/off (stack runs
+redistribution-free; panel/pillar pay Eq. 17/18 twice per filter pass,
+amortized per Eqs. 19–21) — scores each with the analytic model, and
+returns a ranked :class:`Plan`. It is wired into the production entry
+points:
+
+  * ``FDConfig(layout="auto")``          → :func:`plan_for_mesh` inside
+    ``FilterDiag`` (choice restricted to layouts the given mesh realizes),
+  * ``repro.launch.solve --layout auto`` → :func:`plan_layout` before mesh
+    construction (free choice of the split),
+  * ``repro.launch.dryrun --plan``       → ranking printed next to the
+    measured HLO all-to-all volume of the lowered iteration,
+  * ``benchmarks/run.py --only planner`` → sweep over the bundled families.
+
+Everything here is host-side numpy; no jax computation is launched.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..matrices.sparse import CSR
+from . import perf_model as pm
+from .layouts import Layout, panel, pillar
+from .metrics import ChiMetrics, chi_from_nvc
+from .redistribute import redistribution_volume
+from .spmv import Partition
+
+__all__ = [
+    "SpmvCommPlan", "Candidate", "Plan", "comm_plan", "default_row_axes",
+    "estimate_nnzr", "plan_layout", "plan_for_mesh", "layout_on_mesh",
+    "DEFAULT_PLAN_DEGREE",
+]
+
+#: Planning-time Chebyshev degree when the caller has not run the filter
+#: selector yet. FD filter degrees are O(100) at paper tolerances (Table 4),
+#: far above the pillar break-even n* = 2/χ[P] (Eq. 23) for high-χ matrices.
+DEFAULT_PLAN_DEGREE = 100
+
+
+# --------------------------------------------------------------------------
+# pattern-only communication plan
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvCommPlan:
+    """Pattern-derived stats of the SpMV engine's all_to_all at ``n_row``
+    horizontal shards.
+
+    ``L`` is the padded per-(sender, receiver) slot count the engine uses
+    (``build_dist_ell``): with ``exact=True`` it is the true maximum
+    pair volume, so :meth:`a2a_bytes_per_device` equals the HLO-measured
+    per-chip all_to_all operand of ``make_spmv`` bit-for-bit; with
+    ``exact=False`` it is the χ-based estimate ``ceil(max n_vc / (P-1))``
+    (the same convention as the dry-run's bandwidth-matched surrogate).
+    """
+
+    n_row: int
+    D: int
+    L: int
+    n_vc: np.ndarray
+    exact: bool
+    d_pad: int | None = None
+
+    @property
+    def chi(self) -> ChiMetrics:
+        bnds = Partition(self.D, self.n_row, self.d_pad).boundaries()
+        return chi_from_nvc(self.n_vc, np.diff(bnds), self.D)
+
+    def a2a_bytes_per_device(self, n_b: int, S_d: int) -> int:
+        """Operand bytes of one SpMV's all_to_all on each device (the
+        ``[P, L, n_b]`` send buffer)."""
+        if self.n_row <= 1:
+            return 0
+        return self.n_row * self.L * n_b * S_d
+
+
+def _remote_cols(matrix, a: int, b: int, chunk: int = 2_000_000) -> np.ndarray:
+    """Distinct columns outside [a, b) referenced by rows [a, b)."""
+    if isinstance(matrix, CSR):
+        lo, hi = int(matrix.indptr[a]), int(matrix.indptr[b])
+        cols = matrix.indices[lo:hi]
+        return np.unique(cols[(cols < a) | (cols >= b)])
+    parts = []
+    for lo, hi in matrix._scan_ranges(a, b):
+        for c0 in range(lo, hi, chunk):
+            _, cols = matrix.row_cols(np.arange(c0, min(c0 + chunk, hi),
+                                                dtype=np.int64))
+            cols = cols[(cols < a) | (cols >= b)]
+            if cols.size:
+                parts.append(np.unique(cols))
+    return np.unique(np.concatenate(parts)) if parts else np.empty(0, np.int64)
+
+
+def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
+              exact: bool | None = None,
+              n_vc: np.ndarray | None = None) -> SpmvCommPlan:
+    """Communication plan of the SpMV engine at ``n_row`` shards, computed
+    from the sparsity pattern without building the operator.
+
+    ``exact`` controls whether ``L`` comes from true per-pair distinct
+    counts (matches ``build_dist_ell`` exactly; cost ~ one pattern pass) or
+    from the aggregate n_vc counts (cheap at any D via the family's
+    streamed/structured ``n_vc``). Default: exact for CSR inputs and small
+    instances, estimated above D = 2·10⁶. A precomputed ``n_vc`` (on the
+    same ``Partition(D, n_row, d_pad)`` boundaries) skips the pattern pass
+    entirely and implies the estimated-L path.
+    """
+    D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
+    part = Partition(D, n_row, d_pad)
+    bnds = part.boundaries()
+    if n_row <= 1:
+        return SpmvCommPlan(1, D, 0, np.zeros(1, np.int64), True, d_pad)
+    if n_vc is not None:
+        n_vc = np.asarray(n_vc, dtype=np.int64)
+        L = max(-(-int(n_vc.max()) // (n_row - 1)), 1)
+        return SpmvCommPlan(n_row, D, L, n_vc, False, d_pad)
+    if exact is None:
+        exact = isinstance(matrix, CSR) or D <= 2_000_000
+    if not exact:
+        n_vc = matrix.n_vc(bnds)
+        L = max(-(-int(n_vc.max()) // (n_row - 1)), 1)
+        return SpmvCommPlan(n_row, D, L, n_vc, False, d_pad)
+    L = 1
+    n_vc = np.zeros(n_row, dtype=np.int64)
+    for p in range(n_row):
+        a, b = int(bnds[p]), int(bnds[p + 1])
+        cols = _remote_cols(matrix, a, b)
+        if not cols.size:
+            continue
+        n_vc[p] = cols.size
+        pair = np.bincount(part.owner(cols), minlength=n_row)
+        L = max(L, int(pair.max()))
+    return SpmvCommPlan(n_row, D, L, n_vc, True, d_pad)
+
+
+def estimate_nnzr(matrix, probe_rows: int = 4096) -> float:
+    """Average stored nonzeros per row: exact for CSR, leading-row probe
+    for generator families (pattern rows are statistically homogeneous)."""
+    if isinstance(matrix, CSR):
+        return matrix.n_nzr
+    rows = np.arange(0, min(matrix.D, probe_rows), dtype=np.int64)
+    r, _ = matrix.row_cols(rows)
+    return len(r) / len(rows)
+
+
+# --------------------------------------------------------------------------
+# candidate scoring
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One scored configuration of the two parallelism layers."""
+
+    layout: str        # "stack" | "panel" | "pillar"
+    n_row: int         # horizontal layer width (D split)
+    n_col: int         # vertical layer width (bundle split)
+    overlap: bool      # split-phase SpMV engine on
+    redistribute: bool # pays Eq. 17/18 twice per filter pass (n_col > 1)
+    chi1: float        # χ₁ of the filter layout's row partition
+    chi2: float
+    t_iter: float      # one Chebyshev iteration [s] (Eq. 12 / overlap model)
+    t_redist: float    # one redistribution [s] (Eq. 17/18 over b_c)
+    t_pass: float      # degree·t_iter + 2·t_redist [s]
+    a2a_bytes_per_device: int  # predicted SpMV all_to_all operand bytes
+
+    @property
+    def name(self) -> str:
+        """Layout name with the dry-run's ``+ov`` overlap suffix."""
+        return self.layout + ("+ov" if self.overlap else "")
+
+    def describe(self) -> str:
+        return f"{self.name}({self.n_row}x{self.n_col})"
+
+    def row(self) -> str:
+        return (f"{self.describe():18s} {self.chi1:7.2f} "
+                f"{self.t_iter * 1e3:9.3f} {self.t_redist * 1e3:9.3f} "
+                f"{self.t_pass * 1e3:10.2f}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Ranked candidate configurations (best first) for one matrix."""
+
+    matrix: str
+    D: int
+    n_devices: int
+    n_search: int
+    degree: int
+    machine: str
+    candidates: tuple[Candidate, ...]
+
+    @property
+    def best(self) -> Candidate:
+        return self.candidates[0]
+
+    @property
+    def baseline(self) -> Candidate:
+        """Speedup reference: the additive stack candidate (n_col = 1, no
+        overlap — the paper's reference point) when it was enumerated,
+        otherwise the slowest candidate (``report()`` says which)."""
+        for c in self.candidates:
+            if c.n_col == 1 and not c.overlap:
+                return c
+        return max(self.candidates, key=lambda c: c.t_pass)
+
+    def speedup(self, c: Candidate) -> float:
+        """Predicted filter-pass speedup of ``c`` over :attr:`baseline`."""
+        return self.baseline.t_pass / c.t_pass
+
+    def report(self) -> str:
+        base = self.baseline
+        vs = ("additive stack" if base.n_col == 1 and not base.overlap
+              else f"slowest candidate {base.describe()}")
+        lines = [
+            f"layout plan: {self.matrix}  D={self.D}  P={self.n_devices}  "
+            f"N_s={self.n_search}  degree={self.degree}  machine={self.machine}",
+            f"{'config':18s} {'chi1':>7s} {'t_iter':>9s} {'t_redist':>9s} "
+            f"{'t_pass':>10s} {'speedup':>8s}   (ms; speedup vs {vs})",
+        ]
+        for i, c in enumerate(self.candidates):
+            mark = " <- best" if i == 0 else ""
+            lines.append(f"{c.row()} {self.speedup(c):8.2f}{mark}")
+        return "\n".join(lines)
+
+
+def _matrix_label(matrix) -> str:
+    if isinstance(matrix, CSR):
+        return f"CSR{matrix.shape}"
+    return matrix.describe() if hasattr(matrix, "describe") else str(matrix)
+
+
+def plan_layout(matrix, n_devices: int, *, n_search: int,
+                degree: int = DEFAULT_PLAN_DEGREE,
+                machine: pm.MachineModel = pm.TPU_V5E,
+                overlap: tuple[bool, ...] = (False, True),
+                splits=None, S_d: int | None = None,
+                n_nzr: float | None = None, d_pad: int | None = None,
+                exact_comm: bool | None = None,
+                n_vc_by_row: dict | None = None) -> Plan:
+    """Enumerate and rank layout/overlap configurations for ``matrix`` on
+    ``n_devices`` devices with an ``n_search``-wide vector bundle.
+
+    ``splits`` restricts the candidate ``(n_row, n_col)`` meshes (default:
+    every n_col dividing both P and n_search). ``overlap`` selects which
+    SpMV engines to consider; overlap variants are only generated where
+    they differ from the additive model (χ > 0). The ranking key is the
+    predicted time of one filter pass, ``degree`` Chebyshev iterations
+    plus two redistributions (Alg. 1 steps 7/9). ``n_vc_by_row`` maps
+    n_row -> precomputed n_vc counts (on ``Partition(D, n_row, d_pad)``
+    boundaries) so callers that already paid the pattern pass — e.g. the
+    dry-run — are not charged again.
+    """
+    P = int(n_devices)
+    D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
+    if S_d is None:
+        S_d = matrix.S_d if hasattr(matrix, "S_d") else (
+            matrix.data.dtype.itemsize if getattr(matrix, "data", None) is not None else 8)
+    if n_nzr is None:
+        n_nzr = estimate_nnzr(matrix)
+    if splits is None:
+        splits = [(P // c, c) for c in range(1, P + 1)
+                  if P % c == 0 and n_search % c == 0]
+    if not splits:
+        raise ValueError(f"no (n_row, n_col) split of P={P} divides n_search={n_search}")
+
+    plans: dict[int, SpmvCommPlan] = {}
+    cands: list[Candidate] = []
+    for n_row, n_col in splits:
+        if n_row * n_col != P:
+            raise ValueError(f"split {n_row}x{n_col} != P={P}")
+        if n_row not in plans:
+            plans[n_row] = comm_plan(
+                matrix, n_row, d_pad=d_pad, exact=exact_comm,
+                n_vc=(n_vc_by_row or {}).get(n_row))
+        cp = plans[n_row]
+        chim = cp.chi
+        chi1 = chim.chi1 if n_row > 1 else 0.0
+        n_b = n_search // n_col
+        name = "stack" if n_col == 1 else ("pillar" if n_col == P else "panel")
+        t_red = 0.0
+        if n_col > 1:
+            # per-device moved bytes of one redistribution (Eq. 18 total
+            # spread over P devices) through the inter-process bandwidth
+            t_red = (redistribution_volume(D, n_search, P, n_col, S_d)
+                     ["bytes_total"] / P / machine.b_c)
+        kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi1, n_nzr=n_nzr, S_d=S_d)
+        for ov in sorted(set(overlap)):
+            if ov and chi1 <= 0.0:
+                continue  # overlap engine is a no-op without a halo exchange
+            t_iter = (pm.cheb_iter_time_overlap(machine, **kw) if ov
+                      else pm.cheb_iter_time(machine, **kw))
+            cands.append(Candidate(
+                layout=name, n_row=n_row, n_col=n_col, overlap=ov,
+                redistribute=n_col > 1, chi1=chi1, chi2=chim.chi2,
+                t_iter=t_iter, t_redist=t_red,
+                t_pass=degree * t_iter + 2.0 * t_red,
+                a2a_bytes_per_device=cp.a2a_bytes_per_device(n_b, S_d),
+            ))
+    if not cands:
+        raise ValueError(
+            f"no candidate survived for P={P}, n_search={n_search}, "
+            f"overlap={overlap}, splits={splits} — overlap-only planning "
+            f"needs at least one split with chi > 0 (n_row > 1)")
+    cands.sort(key=lambda c: (c.t_pass, c.overlap, c.n_col))
+    return Plan(matrix=_matrix_label(matrix), D=D, n_devices=P,
+                n_search=n_search, degree=degree, machine=machine.name,
+                candidates=tuple(cands))
+
+
+# --------------------------------------------------------------------------
+# mesh-constrained planning (FDConfig.layout = "auto")
+# --------------------------------------------------------------------------
+
+
+def _mesh_size(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n
+
+
+def default_row_axes(mesh) -> tuple[str, ...]:
+    """Horizontal-layer (D-sharding) axes of a mesh by naming convention:
+    the solver mesh's ``row`` axis, else the production mesh's ``model``
+    axis (the dry-run maps the horizontal layer there), else the first
+    axis. Returns () only for a mesh with no axes."""
+    names = tuple(mesh.axis_names)
+    for preferred in ("row", "model"):
+        if preferred in names:
+            return (preferred,)
+    return names[:1]
+
+
+def plan_for_mesh(matrix, mesh, *, n_search: int, row_axes=None,
+                  **kwargs) -> Plan:
+    """Rank the layouts realizable on an **existing** mesh: stack (all axes
+    on D), panel (``row_axes`` × the rest; default
+    :func:`default_row_axes`), pillar (all axes on bundles). Used by
+    ``FilterDiag`` when ``FDConfig.layout == "auto"`` — the mesh shape is
+    already fixed, so only the layout and overlap choice remain.
+    """
+    P = _mesh_size(mesh)
+    if row_axes is None:
+        row_axes = default_row_axes(mesh)
+    row_axes = tuple(a for a in row_axes if a in mesh.axis_names)
+    n_row = 1
+    for a in row_axes:
+        n_row *= mesh.shape[a]
+    splits = []
+    for nr, nc in ((P, 1), (n_row, P // max(n_row, 1)), (1, P)):
+        if nr >= 1 and nc >= 1 and nr * nc == P and n_search % nc == 0 \
+                and (nr, nc) not in splits:
+            splits.append((nr, nc))
+    return plan_layout(matrix, P, n_search=n_search, splits=splits, **kwargs)
+
+
+def layout_on_mesh(mesh, layout_name: str, row_axes=None) -> Layout:
+    """Materialize a planner layout choice as a ``Layout`` on ``mesh``.
+
+    ``row_axes`` defaults to :func:`default_row_axes`; passing axes
+    explicitly raises if none of them exist on the mesh (a panel without
+    a row axis would silently be a pillar)."""
+    base = layout_name.removesuffix("+ov")
+    if base == "stack":
+        return Layout("stack", tuple(mesh.axis_names), ())
+    if base == "pillar":
+        return pillar(mesh)
+    if base == "panel":
+        if row_axes is None:
+            row_axes = default_row_axes(mesh)
+        row_axes = tuple(a for a in row_axes if a in mesh.axis_names)
+        if not row_axes:
+            raise ValueError(
+                f"panel layout needs a row axis, but mesh axes "
+                f"{mesh.axis_names} contain none of the requested row axes")
+        return panel(mesh, row_axes=row_axes)
+    raise ValueError(f"unknown layout {layout_name!r}")

@@ -1,8 +1,30 @@
 """Redistribution of vectors between the stack and panel layouts (paper §3.4).
 
 The redistribution is the explicit price paid for running the Chebyshev
-filter in a panel/pillar layout while orthogonalization runs in the stack
-layout (Alg. 1 steps 7 and 9). Two implementations:
+filter in a panel/pillar layout (vertical layer active) while
+orthogonalization runs in the stack layout (horizontal layer only,
+``layouts.py``). Each process row exchanges slices with itself only —
+for "matching" layouts the collective never crosses the ``row`` axes::
+
+      stack (4x2 mesh, N_col=2)            panel (4x2)
+      +----------+                      +------+------+
+      | p0       |  <- row 0 ->         | p0   | p1   |    all_to_all
+      | p1       |                      |      |      |    within the
+      +----------+                      +------+------+    pair {p0,p1}
+      | p2       |  <- row 1 ->         | p2   | p3   |    (and {p2,p3},
+      | p3       |                      |      |      |     ...): tiles
+      +----------+                      +------+------+    of D/P x N_s/2
+      |  ...     |                      |     ...     |
+      +----------+                      +-------------+
+
+Per device this moves exactly (N_s·D/P)(1 − 1/N_col) entries each way
+(Eqs. 17–18, :func:`redistribution_volume`); the planner
+(``planner.py``) charges two such exchanges per filter pass when ranking
+panel/pillar candidates against the redistribution-free stack. Amortized
+over a degree-n filter the cost is r/n Chebyshev iterations (Eqs. 19–21,
+``perf_model.redistribution_factor``).
+
+Two implementations (Alg. 1 steps 7 and 9):
 
   * ``explicit`` — the paper-faithful collective: one `all_to_all` along
     the vertical (``col``) mesh axes, tiled over the N_s axis on the way

@@ -15,9 +15,11 @@ Device side (`make_spmv`): a ``shard_map`` function executing the paper's
 distributed SpMV: gather send slots -> single ``all_to_all`` over the
 horizontal (``row``) mesh axes -> local ELL contraction against
 ``[x_local ‖ halo]``. The all_to_all moves exactly ``P * L * n_b * S_d``
-bytes — L is the padded max of the paper's n_vc counts, so the measured
-(HLO) collective volume equals the χ-metric prediction up to the
-imbalance factor χ₃/χ₂ (see EXPERIMENTS §Dry-run).
+bytes per device — L is the padded max per-pair volume derived from the
+paper's n_vc counts, so the measured (HLO) collective volume equals the
+pattern-only prediction of ``planner.comm_plan`` bit-for-bit
+(tests/test_planner.py) and the χ-metric estimate up to the imbalance
+factor χ₃/χ₂.
 
 Overlap execution model (``make_spmv(..., overlap=True)``): each shard's
 ELL block is split once, on the host, into a *local* part (columns in

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels and their jnp reference implementations.
+
+``ops.py`` dispatches between the Pallas kernels (``ell_gather.py`` ELL
+SpMV, ``cheb_dia.py`` fused DIA Chebyshev step) and the pure-jnp
+references in ``ref.py`` — the distributed engine (``core/spmv.py``)
+calls through ``ops.ell_spmv`` / ``ops.ell_spmv_split`` when built with
+``use_kernel=True``.
+"""

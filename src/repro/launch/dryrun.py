@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture x input shape)
 on the production meshes and extract memory/cost/roofline data.
 
@@ -12,7 +9,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out cache.json]
   PYTHONPATH=src python -m repro.launch.dryrun --eigen exciton200 --layout pillar
+  PYTHONPATH=src python -m repro.launch.dryrun --eigen hubbard16 --layout panel+ov --plan
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import functools
 import json
@@ -160,7 +161,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False, verbose=True) -> di
 # -------------------------------------------------- eigensolver dry-runs --
 
 def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
-              n_search: int | None = None, verbose=True) -> dict:
+              n_search: int | None = None, verbose=True,
+              plan: bool = False) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
     surrogate with the *exact* χ-derived comm plan of the real matrix.
@@ -168,7 +170,12 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     ``layout_name`` may carry a ``+ov`` suffix (e.g. ``panel+ov``) to lower
     the split-phase overlap SpMV engine instead of the baseline; the record
     then also carries the overlap-aware perf-model prediction so the sweep
-    can quantify when overlap restores scalability."""
+    can quantify when overlap restores scalability.
+
+    ``plan=True`` adds the χ-driven planner panel: the full candidate
+    ranking (``core/planner.py``) for this matrix on the production mesh,
+    plus the predicted all-to-all volume of the lowered cell next to the
+    HLO-measured one — prediction and measurement in one place."""
     from ..configs import get_config as gc
     from ..core import layouts as L
     from ..core.filter_diag import FDConfig
@@ -311,6 +318,52 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         rec["t_model_overlap_s"] = pm.cheb_iter_time_overlap(pm.TPU_V5E, **kw)
         rec["overlap_model_speedup"] = round(
             rec["t_model_additive_s"] / rec["t_model_overlap_s"], 3)
+    if plan:
+        # planner panel: ranking from the pattern alone + predicted vs
+        # measured all-to-all volume of this lowered cell (χ is the
+        # prediction; the HLO parse is the measurement)
+        from ..core.planner import plan_for_mesh
+        from ..core.redistribute import redistribution_volume
+
+        P_t = mesh.devices.size
+        S_cell = jnp.dtype(dt).itemsize
+        lp = plan_for_mesh(fam, mesh, n_search=n_s, row_axes=("model",),
+                           degree=degree, S_d=S_cell, exact_comm=False,
+                           d_pad=D_pad, n_nzr=_nnzr(fam),
+                           # the lowered layout's n_vc was already computed
+                           # above — don't pay the pattern pass twice
+                           n_vc_by_row={N_row: n_vc} if N_row > 1 else None)
+        # predicted per-chip all-to-all operand bytes of THIS cell:
+        #   degree SpMV halo exchanges ([N_row, L, n_b] send buffer) +
+        #   2 redistributions (full local slice; Eq. 17/18 is the moved
+        #   subset — XLA prints either convention, so report both)
+        pred_spmv = degree * N_row * L * (n_s // max(n_col, 1)) * S_cell \
+            if N_row > 1 else 0
+        pred_red_full = 2 * (D_pad // P_t) * n_s * S_cell if n_col > 1 else 0
+        pred_red_moved = 2 * int(redistribution_volume(
+            D_pad, n_s, P_t, n_col, S_cell)["bytes_total"] / P_t) \
+            if n_col > 1 else 0
+        meas = int(roof.coll_breakdown.get("all-to-all", 0))
+        # two honest conventions for the redistribution operand (XLA may
+        # print the full local slice or only the moved subset) — report
+        # BOTH ratios; agreement means one of them is ~1, and the spmv
+        # term (the χ prediction proper) is identical in both
+        pred_full = pred_spmv + pred_red_full
+        pred_moved = pred_spmv + pred_red_moved
+        rec["plan_best"] = lp.best.describe()
+        rec["plan_chi1"] = lp.best.chi1
+        rec["plan_pred_a2a_bytes_full"] = pred_full
+        rec["plan_pred_a2a_bytes_moved"] = pred_moved
+        rec["plan_measured_a2a_bytes"] = meas
+        if verbose:
+            print(lp.report())
+            r_full = meas / pred_full if pred_full else float("nan")
+            r_moved = meas / pred_moved if pred_moved else float("nan")
+            print(f"[plan] cell a2a/chip predicted: spmv {degree}x"
+                  f"{pred_spmv // max(degree, 1)} + redist(full) "
+                  f"{pred_red_full} = {pred_full} | redist(moved) "
+                  f"{pred_red_moved} = {pred_moved}  measured {meas}  "
+                  f"ratio full {r_full:.3f} / moved {r_moved:.3f}")
     if verbose:
         print(f"[dryrun-eigen] {name} "
               f"[{layout_name}{'+ov' if overlap else ''}] on {rec['mesh']}: OK "
@@ -347,7 +400,16 @@ def main(argv=None):
     ap.add_argument("--shape")
     ap.add_argument("--eigen", help="paper config dry-run (exciton200/hubbard16)")
     ap.add_argument("--layout", default="pillar",
-                    choices=["stack", "panel", "pillar", "panel+ov", "stack+ov"])
+                    choices=["stack", "panel", "pillar", "panel+ov", "stack+ov"],
+                    help="eigensolver vector layout for --eigen cells; the "
+                         "'+ov' suffix lowers the split-phase overlap SpMV "
+                         "engine (halo all_to_all issued before the local "
+                         "contraction — the --spmv-overlap flag of "
+                         "repro.launch.solve)")
+    ap.add_argument("--plan", action="store_true",
+                    help="with --eigen: print the χ-driven planner ranking "
+                         "(core/planner.py) and the predicted vs HLO-measured "
+                         "all-to-all volume of the lowered cell")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None, help="append JSON records here")
@@ -356,7 +418,8 @@ def main(argv=None):
     records = []
     try:
         if args.eigen:
-            records.append(run_eigen(args.eigen, args.layout, args.multi_pod))
+            records.append(run_eigen(args.eigen, args.layout, args.multi_pod,
+                                     plan=args.plan))
         elif args.all:
             for arch, shape, cell in iter_cells():
                 if cell is None:

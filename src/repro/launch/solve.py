@@ -5,6 +5,13 @@ vector layout (the paper's production entry point).
       --params n_sites=14,n_up=7 --n-target 8 --target -0.16 \
       --n-row 4 --n-col 2
 
+``--layout auto`` hands the choice to the χ-driven planner
+(``core/planner.py``): it enumerates every (n_row x n_col) mesh split,
+layout, and overlap-engine option, scores each with the analytic perf
+model from the sparsity pattern alone, prints the ranking, and runs the
+minimum-predicted-time configuration (``--n-row/--n-col`` are then
+ignored; ``--spmv-overlap`` is decided by the plan).
+
 ``--degraded-ok`` continues with a reduced search space if a column group
 is lost (the vertical layer is fault-isolating: bundles of search vectors
 are statistically interchangeable).
@@ -12,6 +19,7 @@ are statistically interchangeable).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import numpy as np
 import jax
@@ -38,10 +46,27 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
           verbose: bool = True, degraded_ok: bool = False):
     jax.config.update("jax_enable_x64", True)
     n_dev = len(jax.devices())
+    mat = get_family(family, **params)
+    if fd.layout == "auto":
+        # χ-driven planner: pick the mesh split AND the overlap engine from
+        # the sparsity pattern before any mesh is built (core/planner.py).
+        # The caller's config is left untouched so it can be reused for
+        # another matrix (the plan depends on the pattern).
+        from ..core.planner import plan_layout
+
+        plan = plan_layout(mat, n_dev, n_search=fd.n_search,
+                           d_pad=-(-mat.D // n_dev) * n_dev)
+        best = plan.best
+        if verbose:
+            print(plan.report())
+            print(f"[auto] running {best.describe()} "
+                  f"(spmv_overlap={best.overlap})")
+        n_row, n_col = best.n_row, best.n_col
+        # the chosen split realizes the planned layout
+        fd = dataclasses.replace(fd, layout="panel", spmv_overlap=best.overlap)
     if n_row * n_col > n_dev:
         raise RuntimeError(f"mesh {n_row}x{n_col} needs {n_row*n_col} devices, "
                            f"have {n_dev}")
-    mat = get_family(family, **params)
     mesh = make_solver_mesh(n_row, n_col)
     try:
         with mesh:
@@ -68,16 +93,31 @@ def main(argv=None):
     ap.add_argument("--target", type=float, default=0.0)
     ap.add_argument("--tol", type=float, default=1e-10)
     ap.add_argument("--max-iters", type=int, default=40)
-    ap.add_argument("--n-row", type=int, default=1)
-    ap.add_argument("--n-col", type=int, default=1)
+    ap.add_argument("--n-row", type=int, default=1,
+                    help="horizontal-layer width N_row (D sliced over "
+                         "N_row row shards; SpMV halo exchange runs here)")
+    ap.add_argument("--n-col", type=int, default=1,
+                    help="vertical-layer width N_col (search vectors split "
+                         "into N_col bundles; no SpMV communication)")
+    ap.add_argument("--layout", default="panel",
+                    choices=["stack", "panel", "pillar", "auto"],
+                    help="filter-phase vector layout on the mesh: 'stack' "
+                         "(N_col=1, D over all devices), 'panel' (N_row x "
+                         "N_col grid), 'pillar' (N_row=1, comm-free SpMV), "
+                         "or 'auto' — the χ-driven planner picks the mesh "
+                         "split AND the overlap engine from the sparsity "
+                         "pattern (overrides --n-row/--n-col/--spmv-overlap)")
     ap.add_argument("--spmv-overlap", action="store_true",
-                    help="split-phase SpMV: hide the halo all_to_all behind "
-                         "the local ELL contraction")
+                    help="split-phase SpMV engine: issue the halo "
+                         "all_to_all first and contract the local ELL block "
+                         "while the bytes are in flight (the dry-run's "
+                         "'+ov' layout suffix; T = max(T_comm, T_local) + "
+                         "T_halo instead of additive Eq. 12)")
     ap.add_argument("--degraded-ok", action="store_true")
     args = ap.parse_args(argv)
     fd = FDConfig(n_target=args.n_target, n_search=args.n_search,
                   target=args.target, tol=args.tol, max_iters=args.max_iters,
-                  spmv_overlap=args.spmv_overlap)
+                  layout=args.layout, spmv_overlap=args.spmv_overlap)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok)
     print(f"converged {res.n_converged} eigenpairs in {res.iterations} "

@@ -1,0 +1,29 @@
+"""Documentation gate in the tier-1 loop: runs scripts/check_docs.py —
+every module under src/repro has a docstring, and README snippets only
+reference flags/paths/symbols that actually exist."""
+import importlib.util
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(ROOT, "scripts", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_consistent():
+    cd = _load_check_docs()
+    errors = cd.run_all()
+    assert not errors, "\n".join(errors)
+
+
+def test_readme_exists_with_quickstart():
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    assert "## Quickstart" in readme
+    assert 'python -m pytest -x -q' in readme
+    assert '-m "not slow"' in readme
+    assert "--layout auto" in readme
