@@ -1,7 +1,12 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV;
+# ``--json PATH`` additionally writes the machine-readable perf records
+# (predicted vs measured bytes + wall times per family x engine) so the
+# BENCH_*.json trajectory can track regressions across PRs.
 import argparse
+import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
@@ -13,7 +18,12 @@ def main() -> None:
                     help="include the 1e8-dimension χ instances (minutes)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table5,fig4,fig5,table3,table4,"
-                         "spmv_overlap,planner,roofline")
+                         "spmv_overlap,spmv_comm,planner,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable perf artifact (e.g. "
+                         "BENCH_spmv.json): per family x engine predicted "
+                         "vs HLO-measured bytes and wall time, plus the "
+                         "CSV rows")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -27,6 +37,7 @@ def main() -> None:
         "table3": tables.table3_amortization,
         "table4": tables.table4_fd_end_to_end,
         "spmv_overlap": tables.spmv_overlap,
+        "spmv_comm": tables.spmv_comm,
         "planner": tables.planner_table,
         "roofline": tables.roofline_table,
     }
@@ -38,6 +49,19 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        artifact = {
+            "schema": "bench-spmv/v1",
+            "generated_unix": int(time.time()),
+            "benches": sorted(only & set(benches)),
+            "records": tables.RECORDS,
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"[bench] wrote {len(tables.RECORDS)} records + "
+              f"{len(rows)} rows -> {args.json}")
 
 
 if __name__ == "__main__":

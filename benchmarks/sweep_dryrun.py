@@ -27,11 +27,18 @@ def main():
         for arch in ARCHS:
             for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
                 cells.append((arch, shape, mesh, multi))
-        for eig in ("exciton200", "hubbard16"):
+        for eig in ("exciton200", "hubbard16", "roadnet48k"):
             # "+ov" lowers the split-phase overlap SpMV engine; the cached
             # record carries overlap_model_speedup for the scalability story
             for layout in ("stack", "panel", "pillar", "panel+ov"):
                 cells.append((eig, f"fd_iter[{layout}," , mesh, multi, layout))
+            # "+cmp": the sparsity-compressed neighbor-permute engine
+            # (dryrun --spmv-comm compressed; chi2-scaled wire bytes).
+            # The record's shape suffix order is <layout>+cmp[+ov]
+            for layout, shape in (("panel", "panel+cmp"),
+                                  ("panel+ov", "panel+cmp+ov")):
+                cells.append((eig, f"fd_iter[{shape},", mesh, multi,
+                              layout, "compressed"))
     done = done_keys()
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     for cell in cells:
@@ -43,12 +50,13 @@ def main():
             cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
                    "--shape", shape, "--out", CACHE]
         else:
-            arch, shape_prefix, mesh, multi, layout = cell
+            arch, shape_prefix, mesh, multi, layout = cell[:5]
+            comm = cell[5] if len(cell) > 5 else "a2a"
             if any(k[0] == arch and k[1].startswith(shape_prefix) and k[2] == mesh for k in done):
-                print(f"skip-cached {arch} {layout} {mesh}", flush=True)
+                print(f"skip-cached {arch} {layout} {comm} {mesh}", flush=True)
                 continue
             cmd = [sys.executable, "-m", "repro.launch.dryrun", "--eigen", arch,
-                   "--layout", layout, "--out", CACHE]
+                   "--layout", layout, "--spmv-comm", comm, "--out", CACHE]
         if multi:
             cmd.append("--multi-pod")
         t0 = time.time()

@@ -16,6 +16,11 @@ CACHE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "_cache")
 os.makedirs(CACHE_DIR, exist_ok=True)
 _CHI_CACHE = os.path.join(CACHE_DIR, "chi.json")
 
+#: Machine-readable perf records appended by benchmark bodies; drained by
+#: ``run.py --json`` into the BENCH_*.json trajectory artifact so future
+#: PRs can diff predicted-vs-measured bytes and wall times per engine.
+RECORDS: list[dict] = []
+
 PAPER_TABLE1 = {  # matrix -> {Np: (chi13, chi2)}
     "Exciton,L=75": {2: (0.01, 0.01), 4: (0.05, 0.04), 8: (0.11, 0.09),
                      16: (0.21, 0.20), 32: (0.42, 0.41), 64: (0.85, 0.83)},
@@ -35,7 +40,7 @@ PAPER_TABLE5 = {
 
 
 def _family(label: str):
-    from repro.matrices import Exciton, Hubbard, SpinChainXXZ, TopIns
+    from repro.matrices import Exciton, Hubbard, RoadNet, SpinChainXXZ, TopIns
 
     kind, *args = label.split(",")
     if kind == "Exciton":
@@ -44,6 +49,8 @@ def _family(label: str):
         return Hubbard(int(args[0]), int(args[1]))
     if kind == "SpinChainXXZ":
         return SpinChainXXZ(int(args[0]), int(args[1]))
+    if kind == "RoadNet":
+        return RoadNet(n=int(args[0]))
     return TopIns(int(args[0]))
 
 
@@ -354,6 +361,137 @@ print(f"HALO_FRAC {ell.halo_nnz_fraction:.4f}")
     return rows
 
 
+def spmv_comm():
+    """§Compressed engine: padded a2a vs sparsity-compressed neighbor
+    ppermute across a structured and a comm-imbalanced family.
+
+    For each family x engine the table shows the pattern-predicted
+    per-device SpMV exchange bytes (``planner.comm_plan``), the
+    HLO-measured bytes of the compiled engine (must match exactly), and
+    the measured µs/call on 8 fake CPU devices (correctness+overhead
+    check; the byte columns are the hardware story — χ₂- vs χ₃-scaled
+    wire volume). Every row also lands in :data:`RECORDS` for the
+    ``run.py --json`` trajectory artifact."""
+    import subprocess
+    import sys
+
+    rows = []
+    fams = [("spinchain", "SpinChainXXZ(12, 6)"),
+            ("roadnet", "RoadNet(n=4000, w=2, m=256, k=4)")]
+    print("\n=== SpMV comm engines (8 fake devices, panel 4x2) ===")
+    print(f"{'family':10s} {'engine':8s} {'pred B/dev':>11s} {'meas B/dev':>11s} "
+          f"{'us/call':>9s} {'imb':>5s}")
+    script_tmpl = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+jax.config.update('jax_enable_x64', True)
+from repro.matrices import RoadNet, SpinChainXXZ
+from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
+from repro.launch.hlo_analysis import analyze_hlo
+mat = {family}
+csr = mat.build_csr()
+D = csr.shape[0]
+mesh = make_solver_mesh(4, 2)
+lay = panel(mesh)
+D_pad = -(-D // 8) * 8
+ell = build_dist_ell(csr, 4, d_pad=D_pad, split_halo=True)
+rng = np.random.default_rng(0)
+X = np.zeros((D_pad, 8)); X[:D] = rng.standard_normal((D, 8))
+ys = {{}}
+with mesh:
+    Xs = jax.device_put(jnp.asarray(X), lay.vec_sharding(mesh))
+    for name, comm, ov in (("a2a", "a2a", False), ("a2a+ov", "a2a", True),
+                           ("cmp", "compressed", False),
+                           ("cmp+ov", "compressed", True)):
+        f = jax.jit(make_spmv(mesh, lay, ell, comm=comm, overlap=ov))
+        c = f.lower(Xs).compile()
+        h = analyze_hlo(c.as_text())
+        meas = int(h.coll_breakdown["all-to-all"]
+                   + h.coll_breakdown["collective-permute"])
+        y = f(Xs); jax.block_until_ready(y)
+        n = 30
+        t0 = time.perf_counter()
+        for _ in range(n):
+            y = f(Xs)
+        jax.block_until_ready(y)
+        ys[name] = np.asarray(y)
+        print(f"ROW {{name}} {{(time.perf_counter() - t0) / n * 1e6:.1f}} {{meas}}")
+for name in ("a2a+ov", "cmp", "cmp+ov"):
+    assert np.abs(ys[name] - ys["a2a"]).max() < 1e-11, name
+print("AGREE OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    env.pop("XLA_FLAGS", None)
+    from repro.core.metrics import chi_metrics
+    from repro.core.planner import comm_plan
+    from repro.matrices import RoadNet, SpinChainXXZ
+
+    # the ctor string is the single source of truth for each instance:
+    # it is pasted into the measuring subprocess AND evaluated here for
+    # the host-side prediction, so the two sides can never diverge
+    ctors = {"RoadNet": RoadNet, "SpinChainXXZ": SpinChainXXZ}
+    for label, ctor in fams:
+        mat = eval(ctor, {"__builtins__": {}}, ctors)
+        D_pad = -(-mat.D // 8) * 8
+        cp = comm_plan(mat, 4, d_pad=D_pad)
+        chim = chi_metrics(mat, 4)
+        pred = {"a2a": cp.a2a_bytes_per_device(4, 8),
+                "compressed": cp.permute_bytes_per_device(4, 8)}
+        r = subprocess.run([sys.executable, "-c",
+                            script_tmpl.format(family=ctor)], env=env,
+                           capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            print(f"spmv_comm subprocess failed for {label}:\n{r.stderr[-1500:]}")
+            rows.append((f"spmv_comm_{label}", 0.0, "status=fail"))
+            continue
+        assert "AGREE OK" in r.stdout
+        for line in r.stdout.splitlines():
+            if not line.startswith("ROW "):
+                continue
+            _, name, us, meas = line.split()
+            p = pred["compressed" if name.startswith("cmp") else "a2a"]
+            assert int(meas) == p, (label, name, meas, p)
+            print(f"{label:10s} {name:8s} {p:11d} {int(meas):11d} "
+                  f"{float(us):9.1f} {chim.imbalance:5.2f}")
+            rows.append((f"spmv_comm_{label}_{name}", float(us),
+                         f"pred={p} meas={meas}"))
+            RECORDS.append(dict(
+                table="spmv_comm", family=label, engine=name,
+                pred_bytes_per_device=int(p), meas_bytes_per_device=int(meas),
+                us_per_call=float(us), chi2=chim.chi2, chi3=chim.chi3,
+                imbalance=chim.imbalance))
+        ratio = pred["a2a"] / max(pred["compressed"], 1)
+        print(f"{label:10s} compressed moves {ratio:.2f}x fewer bytes "
+              f"(chi3/chi2 = {chim.imbalance:.2f})")
+        rows.append((f"spmv_comm_{label}_ratio", 0.0,
+                     f"bytes_ratio={ratio:.2f} imbalance={chim.imbalance:.2f}"))
+    # Table-1-style chi sweep of the imbalanced family: chi3/chi2 grows
+    # with N_p — the padded engine's wire overhead grows with it, the
+    # compressed engine's stays chi2-proportional
+    from repro.core.metrics import chi_sweep
+
+    rn = RoadNet(n=4000, w=2, m=256, k=4)
+    print(f"\n{'RoadNet chi sweep':18s} " + "".join(
+        f"{'Np=' + str(n):>9s}" for n in (2, 4, 8, 16)))
+    sweep = chi_sweep(rn, Nps=(2, 4, 8, 16))
+    for fieldname in ("chi2", "chi3", "imbalance"):
+        vals = [getattr(sweep[n], fieldname) for n in (2, 4, 8, 16)]
+        print(f"{fieldname:18s} " + "".join(f"{v:9.3f}" for v in vals))
+    rows.append(("spmv_comm_roadnet_chi_sweep", 0.0,
+                 "imb@P=" + "/".join(f"{sweep[n].imbalance:.1f}"
+                                     for n in (2, 4, 8, 16))))
+    RECORDS.append(dict(table="spmv_comm", family="roadnet",
+                        chi_sweep={str(n): dict(chi2=sweep[n].chi2,
+                                                chi3=sweep[n].chi3,
+                                                imbalance=sweep[n].imbalance)
+                                   for n in (2, 4, 8, 16)}))
+    return rows
+
+
 def planner_table():
     """§Planner: χ-driven layout choice across the bundled matrix families.
 
@@ -364,7 +502,7 @@ def planner_table():
     instance (``exact_comm=False``: χ via the family's streamed/structured
     n_vc, no per-pair scan) — the path used at paper scale (D ~ 1e8)."""
     from repro.core.planner import plan_layout
-    from repro.matrices import Exciton, Hubbard, SpinChainXXZ, TopIns
+    from repro.matrices import Exciton, Hubbard, RoadNet, SpinChainXXZ, TopIns
 
     rows = []
     P, Ns = 32, 64
@@ -373,6 +511,7 @@ def planner_table():
         ("hubbard", Hubbard(10, 5, U=4.0, ranpot=1.0), {}),
         ("spinchain", SpinChainXXZ(14, 7), {}),
         ("topins", TopIns(12), {}),
+        ("roadnet", RoadNet(), {}),
         ("matfree", Exciton(L=24), dict(exact_comm=False)),
     ]
     print(f"\n=== Planner: chi-driven layout choice (P={P}, Ns={Ns}, v5e) ===")
@@ -388,8 +527,13 @@ def planner_table():
         print(f"{label:10s} {plan.D:9d} {b.describe():16s} {b.chi1:6.2f} "
               f"{b.t_pass * 1e3:11.3f} {plan.speedup(b):8.2f}  {others}")
         rows.append((f"planner_{label}", us,
-                     f"best={b.describe()} ov={int(b.overlap)} "
+                     f"best={b.describe()} comm={b.comm} ov={int(b.overlap)} "
                      f"chi1={b.chi1:.2f} s={plan.speedup(b):.2f}"))
+        RECORDS.append(dict(
+            table="planner", family=label, best=b.describe(), comm=b.comm,
+            overlap=b.overlap, chi1=b.chi1, chi_eng=b.chi_eng,
+            pred_bytes_per_device=b.comm_bytes_per_device,
+            t_pass_s=b.t_pass, speedup=plan.speedup(b), plan_us=us))
     return rows
 
 

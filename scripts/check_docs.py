@@ -35,6 +35,18 @@ CLI_SOURCES = {
     "benchmarks.run": "benchmarks/run.py",
 }
 
+#: Engine/planner flags that must BOTH be declared by their CLI and be
+#: demonstrated in at least one README bash snippet — the README's engine
+#: matrix promises one runnable example per engine, so a flag silently
+#: dropped from either side fails the gate.
+REQUIRED_FLAGS = {
+    "repro.launch.solve": ["--layout", "--spmv-overlap", "--spmv-comm",
+                           "--machine"],
+    "repro.launch.dryrun": ["--layout", "--plan", "--spmv-comm",
+                            "--fit-machine"],
+    "benchmarks.run": ["--only", "--json"],
+}
+
 
 def check_module_docstrings() -> list[str]:
     """Every module under src/repro must carry a module docstring."""
@@ -94,6 +106,30 @@ def check_readme_flags() -> list[str]:
     return errors
 
 
+def check_required_flags() -> list[str]:
+    """Every REQUIRED_FLAGS entry must be declared by its CLI's argparse
+    AND appear in a README bash snippet invoking that CLI."""
+    errors = []
+    with open(README) as f:
+        text = f.read()
+    used: dict[str, set[str]] = {m: set() for m in CLI_SOURCES}
+    for cmd in _bash_commands(text):
+        target = next((m for m in CLI_SOURCES
+                       if f"-m {m}" in cmd or CLI_SOURCES[m] in cmd), None)
+        if target:
+            used[target].update(re.findall(r"(?<=\s)--[a-zA-Z][\w-]*", cmd))
+    for module, flags in REQUIRED_FLAGS.items():
+        declared = _declared_flags(CLI_SOURCES[module])
+        for flag in flags:
+            if flag not in declared:
+                errors.append(f"{CLI_SOURCES[module]}: required flag "
+                              f"`{flag}` not declared by {module}")
+            if flag not in used[module]:
+                errors.append(f"README: no bash example exercises "
+                              f"`{flag}` of {module}")
+    return errors
+
+
 def check_readme_paths() -> list[str]:
     """Repo-relative paths in backticks must exist."""
     errors = []
@@ -133,6 +169,7 @@ def run_all() -> list[str]:
     errors = []
     errors += check_module_docstrings()
     errors += check_readme_flags()
+    errors += check_required_flags()
     errors += check_readme_paths()
     errors += check_readme_symbols()
     return errors

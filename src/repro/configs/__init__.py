@@ -19,7 +19,7 @@ ARCHS = [
     "rwkv6-1.6b",
 ]
 
-EIGEN_CONFIGS = ["exciton200", "hubbard16"]
+EIGEN_CONFIGS = ["exciton200", "hubbard16", "roadnet48k"]
 
 _MODULES = {
     "deepseek-67b": "deepseek_67b",
@@ -34,6 +34,7 @@ _MODULES = {
     "rwkv6-1.6b": "rwkv6_1p6b",
     "exciton200": "exciton200",
     "hubbard16": "hubbard16",
+    "roadnet48k": "roadnet48k",
 }
 
 

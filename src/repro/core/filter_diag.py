@@ -15,8 +15,11 @@ The filter layout is picked by ``FDConfig.layout``: an explicit name
 ``"auto"``, which runs the χ-driven planner (``core/planner.py``) over
 the layouts the mesh realizes and adopts the minimum-predicted-time
 configuration — including whether to use the split-phase overlap SpMV
-engine (``FDConfig.spmv_overlap`` is then set from the plan). A
-``panel_layout`` passed explicitly to ``FilterDiag`` overrides both.
+engine and which halo-exchange engine to run (``FDConfig.spmv_overlap``
+and ``FDConfig.spmv_comm`` are then set from the plan; ``spmv_comm=
+"compressed"`` replaces the padded all_to_all with per-pair-sized
+ppermute rounds). A ``panel_layout`` passed explicitly to ``FilterDiag``
+overrides both.
 """
 from __future__ import annotations
 
@@ -56,6 +59,7 @@ class FDConfig:
     redist_impl: str = "explicit"  # or "gspmd"
     layout: str = "panel"       # filter layout: stack | panel | pillar | auto
     spmv_overlap: bool = False  # split-phase SpMV: hide halo exchange
+    spmv_comm: str = "a2a"      # halo exchange: a2a | compressed (ppermute)
     dtype: str = "float64"
     seed: int = 7
 
@@ -123,8 +127,9 @@ class FilterDiag:
     # ------------------------------------------------------------------
     def _resolve_layout(self, matrix, mesh: Mesh, cfg: FDConfig) -> Layout:
         """Materialize ``cfg.layout`` on the mesh; ``"auto"`` runs the
-        χ-driven planner over {stack, panel, pillar} × {overlap on/off}
-        and also decides ``cfg.spmv_overlap``."""
+        χ-driven planner over {stack, panel, pillar} × {a2a, compressed}
+        × {overlap on/off} and also decides ``cfg.spmv_overlap`` and
+        ``cfg.spmv_comm``."""
         from .planner import layout_on_mesh, plan_for_mesh
 
         if cfg.layout == "auto":
@@ -139,6 +144,7 @@ class FilterDiag:
                                       d_pad=-(-D // P) * P)
             best = self.plan.best
             cfg.spmv_overlap = best.overlap
+            cfg.spmv_comm = best.comm
             return layout_on_mesh(mesh, best.layout)
         if cfg.layout in ("stack", "panel", "pillar"):
             return layout_on_mesh(mesh, cfg.layout)
@@ -148,10 +154,11 @@ class FilterDiag:
     def _build_fns(self, matrix):
         mesh, cfg = self.mesh, self.cfg
         self.spmv_stack = make_spmv(mesh, self.stack_layout, self.ell_stack,
-                                    overlap=cfg.spmv_overlap)
+                                    overlap=cfg.spmv_overlap,
+                                    comm=cfg.spmv_comm)
         self.spmv_panel = (
             make_spmv(mesh, self.panel_layout, self.ell_panel,
-                      overlap=cfg.spmv_overlap)
+                      overlap=cfg.spmv_overlap, comm=cfg.spmv_comm)
             if self.N_col > 1 else self.spmv_stack
         )
         if cfg.ortho == "tsqr":

@@ -9,15 +9,32 @@ Beyond the paper: ``cheb_iter_time_overlap`` models the split-phase SpMV
 engine (spmv.py ``overlap=True``), replacing Eq. 12's additive χ term with
 ``T = max(T_comm, T_local) + T_halo`` — communication hides behind local
 work until χ·S_d/b_c exceeds the local memory time.
+
+The χ argument of both iteration-time models is the *effective* χ of a
+concrete comm engine — the vector entries it actually moves per device,
+normalized like Eq. 8 (:func:`engine_chi`). The padded all_to_all engine
+moves ``P·L`` entries (χ₃-scaled: every pair pays the global max pair
+volume); the compressed neighbor-permute engine moves ``H = Σ_k L_k``
+(χ₂-scaled: per-round padding, empty pairs skipped). Feeding each
+engine's exact wire volume through the same Eq. 12 / overlap form is how
+the planner ranks the {a2a, compressed} × {additive, overlap} grid.
+
+``MachineModel.fit`` calibrates b_c and κ from measured iteration times
+(``dryrun --fit-machine``) so rankings can use the machine actually under
+the workload instead of the hardcoded MEGGIE / TPU_V5E constants.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 
-__all__ = ["MachineModel", "MEGGIE", "TPU_V5E", "cheb_iter_time",
-           "cheb_iter_time_overlap", "overlap_speedup",
+import numpy as np
+
+__all__ = ["MachineModel", "MEGGIE", "TPU_V5E", "engine_chi",
+           "cheb_iter_time", "cheb_iter_time_overlap", "overlap_speedup",
            "panel_speedup", "redistribution_factor", "amortized_speedup",
-           "break_even_degree", "pillar_condition", "parallel_efficiency_bound"]
+           "break_even_degree", "pillar_condition", "parallel_efficiency_bound",
+           "save_machine", "load_machine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,11 +48,110 @@ class MachineModel:
     def bc_over_bm(self) -> float:
         return self.b_c / self.b_m
 
+    @classmethod
+    def fit(cls, samples, *, b_m: float, name: str = "fitted",
+            S_i: int = 4) -> "MachineModel":
+        """Least-squares fit of (κ, b_c) to measured iteration times.
+
+        Each sample is a dict with keys ``t`` (measured seconds of one
+        fused Chebyshev iteration) plus the Eq. 12 inputs ``D, N_p, n_b,
+        chi, n_nzr, S_d``. Eq. 12 is linear in κ and 1/b_c once b_m is
+        fixed (the paper fits the same way, b_m from STREAM):
+
+            t = scale·(S_d+S_i)·n_nzr/n_b / b_m  +  κ·scale·S_d/b_m
+                                                 +  (1/b_c)·scale·χ·S_d
+
+        with ``scale = n_b·D/N_p``. At least one sample must have χ > 0
+        to identify b_c; with only χ = 0 samples the fit is deliberately
+        comm-free (κ-only calibration, e.g. single-device runs) and b_c
+        stays +inf. When χ > 0 samples ARE present but the fitted comm
+        coefficient comes out non-positive (noisy timings, e.g. fake CPU
+        devices where communication is a memcpy), b_c is also left at
+        +inf and a ``RuntimeWarning`` flags that the model prices
+        communication as free — a ranking built on it would favor max-χ
+        layouts.
+        """
+        import warnings
+
+        samples = list(samples)
+        if not samples:
+            raise ValueError("MachineModel.fit needs at least one sample")
+        rows, rhs = [], []
+        for s in samples:
+            scale = s["n_b"] * s["D"] / s["N_p"]
+            mat_term = scale * (s["S_d"] + S_i) * s["n_nzr"] / s["n_b"] / b_m
+            rows.append([scale * s["S_d"] / b_m, scale * s["chi"] * s["S_d"]])
+            rhs.append(s["t"] - mat_term)
+        A = np.asarray(rows, dtype=np.float64)
+        y = np.asarray(rhs, dtype=np.float64)
+        has_comm = bool((A[:, 1] > 0).any())
+        if not has_comm:
+            A = A[:, :1]
+        sol, *_ = np.linalg.lstsq(A, y, rcond=None)
+        kappa = float(max(sol[0], 0.0))
+        inv_bc = float(max(sol[1], 0.0)) if has_comm else 0.0
+        b_c = (1.0 / inv_bc) if inv_bc > 0 else float("inf")
+        if has_comm and inv_bc == 0.0:
+            warnings.warn(
+                "MachineModel.fit: chi > 0 samples present but the fitted "
+                "comm coefficient is non-positive (timings do not scale "
+                "with chi on this host); b_c left at +inf — the model "
+                "treats communication as FREE and is unsuitable for "
+                "comm-sensitive planning", RuntimeWarning, stacklevel=2)
+        return cls(name=name, b_m=b_m, b_c=b_c, kappa=kappa)
+
 
 MEGGIE = MachineModel("meggie-socket", b_m=53.3e9, b_c=2.82e9, kappa=7.3)
 # v5e chip: 819 GB/s HBM; ICI ~50 GB/s per link. kappa=5 assumes the fused
 # Pallas Chebyshev kernel reads W1 once and streams W2/V.
 TPU_V5E = MachineModel("tpu-v5e-chip", b_m=819e9, b_c=50e9, kappa=5.0)
+
+
+def save_machine(m: MachineModel, path: str) -> None:
+    """Persist a (fitted) machine model as JSON (``dryrun --fit-machine``)."""
+    with open(path, "w") as f:
+        json.dump({"name": m.name, "b_m": m.b_m, "b_c": m.b_c,
+                   "kappa": m.kappa}, f)
+
+
+def load_machine(path: str) -> MachineModel:
+    """Load a machine model saved by :func:`save_machine`."""
+    with open(path) as f:
+        d = json.load(f)
+    return MachineModel(name=d["name"], b_m=float(d["b_m"]),
+                        b_c=float(d["b_c"]), kappa=float(d["kappa"]))
+
+
+#: Built-in machine models addressable by name on the CLIs.
+BUILTIN_MACHINES = {"tpu-v5e": TPU_V5E, "meggie": MEGGIE}
+
+
+def resolve_machine(name_or_path: str) -> MachineModel:
+    """CLI ``--machine`` resolution shared by solve and dryrun: a builtin
+    name (:data:`BUILTIN_MACHINES`) or a JSON path written by
+    ``dryrun --fit-machine`` / :func:`save_machine`."""
+    m = BUILTIN_MACHINES.get(name_or_path)
+    if m is not None:
+        return m
+    try:
+        return load_machine(name_or_path)
+    except FileNotFoundError:
+        raise ValueError(
+            f"--machine {name_or_path!r} is neither a builtin model "
+            f"({sorted(BUILTIN_MACHINES)}) nor a readable JSON path "
+            f"(save one with `dryrun --fit-machine`)") from None
+
+
+def engine_chi(moved_entries_per_device: float, D: int, N_p: int) -> float:
+    """Effective χ of a comm engine: the vector entries it physically moves
+    per device and vector column, over the local block size D/N_p (the
+    normalization of Eq. 8). The padded all_to_all moves ``P·L`` entries
+    (χ₃-scaled); the compressed neighbor schedule moves ``H = Σ_k L_k``
+    (χ₂-scaled). Feed the result to the ``chi`` argument of
+    :func:`cheb_iter_time` / :func:`cheb_iter_time_overlap`."""
+    if N_p <= 1:
+        return 0.0
+    return moved_entries_per_device * N_p / D
 
 
 def cheb_iter_time(m: MachineModel, *, D: int, N_p: int, n_b: int, chi: float,

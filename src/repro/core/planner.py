@@ -14,15 +14,24 @@ orthogonal layers of parallelism wins:
   * overlap → the split-phase SpMV engine (``spmv.py overlap=True``)
               replaces the additive χ term of Eq. 12 with
               ``max(T_comm, T_local)`` (``perf_model.cheb_iter_time_overlap``),
-              shifting the stack↔pillar break-even point.
+              shifting the stack↔pillar break-even point,
+  * comm    → the horizontal exchange itself is an axis: the padded
+              ``all_to_all`` moves ``P·L`` entries per device (χ₃-scaled —
+              it physically realizes the imbalance bound), while the
+              compressed neighbor-permute engine
+              (``spmv.py comm="compressed"``) moves ``H = Σ_k L_k``
+              (≈ χ₂-scaled, empty pairs skipped) — on comm-imbalanced
+              patterns (χ₃/χ₂ > 2–3, e.g. the RoadNet family) the
+              compressed engine wins by that factor.
 
 This module enumerates candidate configurations — mesh splits
 ``n_row × n_col`` with ``n_row · n_col = P``, vector layouts
-{stack, panel, pillar}, overlap on/off, redistribution on/off (stack runs
-redistribution-free; panel/pillar pay Eq. 17/18 twice per filter pass,
-amortized per Eqs. 19–21) — scores each with the analytic model, and
-returns a ranked :class:`Plan`. It is wired into the production entry
-points:
+{stack, panel, pillar}, comm engine {a2a, compressed}, overlap on/off,
+redistribution on/off (stack runs redistribution-free; panel/pillar pay
+Eq. 17/18 twice per filter pass, amortized per Eqs. 19–21) — scores each
+with the analytic model fed the **engine-exact** wire bytes predicted by
+:func:`comm_plan`, and returns a ranked :class:`Plan`. It is wired into
+the production entry points:
 
   * ``FDConfig(layout="auto")``          → :func:`plan_for_mesh` inside
     ``FilterDiag`` (choice restricted to layouts the given mesh realizes),
@@ -45,13 +54,27 @@ from . import perf_model as pm
 from .layouts import Layout, panel, pillar
 from .metrics import ChiMetrics, chi_from_nvc
 from .redistribute import redistribution_volume
-from .spmv import Partition
+from .spmv import Partition, neighbor_schedule
 
 __all__ = [
-    "SpmvCommPlan", "Candidate", "Plan", "comm_plan", "default_row_axes",
-    "estimate_nnzr", "plan_layout", "plan_for_mesh", "layout_on_mesh",
-    "DEFAULT_PLAN_DEGREE",
+    "SpmvCommPlan", "Candidate", "Plan", "comm_plan", "exact_comm_default",
+    "default_row_axes", "estimate_nnzr", "plan_layout", "plan_for_mesh",
+    "layout_on_mesh", "DEFAULT_PLAN_DEGREE",
 ]
+
+
+def exact_comm_default(matrix) -> bool:
+    """Whether the exact per-pair pattern pass is affordable for
+    ``matrix`` — the single policy behind ``comm_plan(exact=None)`` and
+    the dry-run's schedule building: CSR inputs, small instances, and
+    reach-limited families (whose ``_remote_cols`` scan is windowed to
+    block boundaries) are exact; unbounded generators at paper scale fall
+    back to the n_vc estimate (no compressed-engine ranking)."""
+    from ..matrices.sparse import CSR as _CSR
+
+    D = matrix.shape[0] if isinstance(matrix, _CSR) else matrix.D
+    return (isinstance(matrix, _CSR) or D <= 2_000_000
+            or getattr(matrix, "reach", None) is not None)
 
 #: Planning-time Chebyshev degree when the caller has not run the filter
 #: selector yet. FD filter degrees are O(100) at paper tolerances (Table 4),
@@ -66,15 +89,23 @@ DEFAULT_PLAN_DEGREE = 100
 
 @dataclasses.dataclass(frozen=True)
 class SpmvCommPlan:
-    """Pattern-derived stats of the SpMV engine's all_to_all at ``n_row``
+    """Pattern-derived stats of the SpMV engines' exchanges at ``n_row``
     horizontal shards.
 
-    ``L`` is the padded per-(sender, receiver) slot count the engine uses
-    (``build_dist_ell``): with ``exact=True`` it is the true maximum
+    ``L`` is the padded per-(sender, receiver) slot count the a2a engine
+    uses (``build_dist_ell``): with ``exact=True`` it is the true maximum
     pair volume, so :meth:`a2a_bytes_per_device` equals the HLO-measured
     per-chip all_to_all operand of ``make_spmv`` bit-for-bit; with
     ``exact=False`` it is the χ-based estimate ``ceil(max n_vc / (P-1))``
     (the same convention as the dry-run's bandwidth-matched surrogate).
+
+    ``pair_counts`` (exact path only) are the true per-pair volumes L_qp,
+    from which :meth:`permute_schedule` reproduces the compressed engine's
+    neighbor rounds — :meth:`permute_bytes_per_device` then equals the
+    HLO-measured per-chip collective-permute volume bit-for-bit. Without
+    pair counts the compressed volume is conservatively estimated as
+    ``max n_vc`` (the best any per-round-padded schedule can do when one
+    receiver concentrates the traffic).
     """
 
     n_row: int
@@ -83,6 +114,7 @@ class SpmvCommPlan:
     n_vc: np.ndarray
     exact: bool
     d_pad: int | None = None
+    pair_counts: np.ndarray | None = None  # [P, P] L_qp (sender q -> recv p)
 
     @property
     def chi(self) -> ChiMetrics:
@@ -95,6 +127,42 @@ class SpmvCommPlan:
         if self.n_row <= 1:
             return 0
         return self.n_row * self.L * n_b * S_d
+
+    def permute_schedule(self) -> tuple[tuple[int, ...], tuple[int, ...]]:
+        """(shifts, round_L) of the compressed engine: the nonempty cyclic
+        shifts and their per-round pads, via the same
+        ``spmv.neighbor_schedule`` the engine itself uses — predicted and
+        executed schedules cannot diverge."""
+        if self.pair_counts is None:
+            raise ValueError("permute_schedule needs exact pair counts")
+        return neighbor_schedule(self.pair_counts)
+
+    def moved_entries_per_device(self, comm: str = "a2a") -> int:
+        """Vector entries one device moves per SpMV column: ``P·L`` for the
+        padded all_to_all, ``H = Σ_k L_k`` for the compressed schedule.
+
+        Without exact pair counts the compressed volume is a *lower bound*
+        (``max n_vc`` — what a per-round-padded schedule can never beat);
+        the planner refuses to rank compressed candidates on that bound
+        (see :func:`plan_layout`), so it is diagnostics-only.
+        """
+        if self.n_row <= 1:
+            return 0
+        if comm == "a2a":
+            return self.n_row * self.L
+        if comm != "compressed":
+            raise ValueError(f"unknown comm engine {comm!r}")
+        if self.pair_counts is not None:
+            return int(sum(self.permute_schedule()[1]))
+        return int(self.n_vc.max())  # estimated-path lower bound
+
+    def permute_bytes_per_device(self, n_b: int, S_d: int) -> int:
+        """Total ppermute operand bytes of one SpMV on each device."""
+        return self.moved_entries_per_device("compressed") * n_b * S_d
+
+    def comm_bytes_per_device(self, comm: str, n_b: int, S_d: int) -> int:
+        """Predicted per-device SpMV exchange bytes of engine ``comm``."""
+        return self.moved_entries_per_device(comm) * n_b * S_d
 
 
 def _remote_cols(matrix, a: int, b: int, chunk: int = 2_000_000) -> np.ndarray:
@@ -123,9 +191,12 @@ def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
     ``exact`` controls whether ``L`` comes from true per-pair distinct
     counts (matches ``build_dist_ell`` exactly; cost ~ one pattern pass) or
     from the aggregate n_vc counts (cheap at any D via the family's
-    streamed/structured ``n_vc``). Default: exact for CSR inputs and small
-    instances, estimated above D = 2·10⁶. A precomputed ``n_vc`` (on the
-    same ``Partition(D, n_row, d_pad)`` boundaries) skips the pattern pass
+    streamed/structured ``n_vc``). Default: exact for CSR inputs, small
+    instances, and reach-limited families (their pattern pass is windowed
+    to block boundaries); estimated otherwise above D = 2·10⁶. Only the
+    exact path carries per-pair counts, so only it can rank the
+    compressed engine. A precomputed ``n_vc`` (on the same
+    ``Partition(D, n_row, d_pad)`` boundaries) skips the pattern pass
     entirely and implies the estimated-L path.
     """
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
@@ -138,22 +209,24 @@ def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
         L = max(-(-int(n_vc.max()) // (n_row - 1)), 1)
         return SpmvCommPlan(n_row, D, L, n_vc, False, d_pad)
     if exact is None:
-        exact = isinstance(matrix, CSR) or D <= 2_000_000
+        exact = exact_comm_default(matrix)
     if not exact:
         n_vc = matrix.n_vc(bnds)
         L = max(-(-int(n_vc.max()) // (n_row - 1)), 1)
         return SpmvCommPlan(n_row, D, L, n_vc, False, d_pad)
     L = 1
     n_vc = np.zeros(n_row, dtype=np.int64)
+    pair_counts = np.zeros((n_row, n_row), dtype=np.int64)
     for p in range(n_row):
         a, b = int(bnds[p]), int(bnds[p + 1])
         cols = _remote_cols(matrix, a, b)
         if not cols.size:
             continue
         n_vc[p] = cols.size
-        pair = np.bincount(part.owner(cols), minlength=n_row)
-        L = max(L, int(pair.max()))
-    return SpmvCommPlan(n_row, D, L, n_vc, True, d_pad)
+        pair_counts[:, p] = np.bincount(part.owner(cols), minlength=n_row)
+        L = max(L, int(pair_counts[:, p].max()))
+    return SpmvCommPlan(n_row, D, L, n_vc, True, d_pad,
+                        pair_counts=pair_counts)
 
 
 def estimate_nnzr(matrix, probe_rows: int = 4096) -> float:
@@ -179,24 +252,27 @@ class Candidate:
     n_row: int         # horizontal layer width (D split)
     n_col: int         # vertical layer width (bundle split)
     overlap: bool      # split-phase SpMV engine on
+    comm: str          # "a2a" (padded all_to_all) | "compressed" (ppermute)
     redistribute: bool # pays Eq. 17/18 twice per filter pass (n_col > 1)
     chi1: float        # χ₁ of the filter layout's row partition
     chi2: float
+    chi_eng: float     # effective χ of the comm engine (exact wire volume)
     t_iter: float      # one Chebyshev iteration [s] (Eq. 12 / overlap model)
     t_redist: float    # one redistribution [s] (Eq. 17/18 over b_c)
     t_pass: float      # degree·t_iter + 2·t_redist [s]
-    a2a_bytes_per_device: int  # predicted SpMV all_to_all operand bytes
+    comm_bytes_per_device: int  # predicted SpMV exchange operand bytes
 
     @property
     def name(self) -> str:
-        """Layout name with the dry-run's ``+ov`` overlap suffix."""
-        return self.layout + ("+ov" if self.overlap else "")
+        """Layout name with the dry-run's ``+cmp``/``+ov`` engine suffixes."""
+        return (self.layout + ("+cmp" if self.comm == "compressed" else "")
+                + ("+ov" if self.overlap else ""))
 
     def describe(self) -> str:
         return f"{self.name}({self.n_row}x{self.n_col})"
 
     def row(self) -> str:
-        return (f"{self.describe():18s} {self.chi1:7.2f} "
+        return (f"{self.describe():22s} {self.chi1:7.2f} {self.chi_eng:7.2f} "
                 f"{self.t_iter * 1e3:9.3f} {self.t_redist * 1e3:9.3f} "
                 f"{self.t_pass * 1e3:10.2f}")
 
@@ -219,11 +295,12 @@ class Plan:
 
     @property
     def baseline(self) -> Candidate:
-        """Speedup reference: the additive stack candidate (n_col = 1, no
-        overlap — the paper's reference point) when it was enumerated,
-        otherwise the slowest candidate (``report()`` says which)."""
+        """Speedup reference: the additive a2a stack candidate (n_col = 1,
+        no overlap, padded all_to_all — the paper's reference point) when
+        it was enumerated, otherwise the slowest candidate (``report()``
+        says which)."""
         for c in self.candidates:
-            if c.n_col == 1 and not c.overlap:
+            if c.n_col == 1 and not c.overlap and c.comm == "a2a":
                 return c
         return max(self.candidates, key=lambda c: c.t_pass)
 
@@ -233,13 +310,15 @@ class Plan:
 
     def report(self) -> str:
         base = self.baseline
-        vs = ("additive stack" if base.n_col == 1 and not base.overlap
+        vs = ("additive a2a stack"
+              if base.n_col == 1 and not base.overlap and base.comm == "a2a"
               else f"slowest candidate {base.describe()}")
         lines = [
             f"layout plan: {self.matrix}  D={self.D}  P={self.n_devices}  "
             f"N_s={self.n_search}  degree={self.degree}  machine={self.machine}",
-            f"{'config':18s} {'chi1':>7s} {'t_iter':>9s} {'t_redist':>9s} "
-            f"{'t_pass':>10s} {'speedup':>8s}   (ms; speedup vs {vs})",
+            f"{'config':22s} {'chi1':>7s} {'chi_eng':>7s} {'t_iter':>9s} "
+            f"{'t_redist':>9s} {'t_pass':>10s} {'speedup':>8s}   "
+            f"(ms; speedup vs {vs})",
         ]
         for i, c in enumerate(self.candidates):
             mark = " <- best" if i == 0 else ""
@@ -257,21 +336,30 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 degree: int = DEFAULT_PLAN_DEGREE,
                 machine: pm.MachineModel = pm.TPU_V5E,
                 overlap: tuple[bool, ...] = (False, True),
+                comm: tuple[str, ...] = ("a2a", "compressed"),
                 splits=None, S_d: int | None = None,
                 n_nzr: float | None = None, d_pad: int | None = None,
                 exact_comm: bool | None = None,
-                n_vc_by_row: dict | None = None) -> Plan:
-    """Enumerate and rank layout/overlap configurations for ``matrix`` on
+                n_vc_by_row: dict | None = None,
+                comm_plan_by_row: dict | None = None) -> Plan:
+    """Enumerate and rank layout/engine configurations for ``matrix`` on
     ``n_devices`` devices with an ``n_search``-wide vector bundle.
 
     ``splits`` restricts the candidate ``(n_row, n_col)`` meshes (default:
-    every n_col dividing both P and n_search). ``overlap`` selects which
-    SpMV engines to consider; overlap variants are only generated where
-    they differ from the additive model (χ > 0). The ranking key is the
-    predicted time of one filter pass, ``degree`` Chebyshev iterations
-    plus two redistributions (Alg. 1 steps 7/9). ``n_vc_by_row`` maps
-    n_row -> precomputed n_vc counts (on ``Partition(D, n_row, d_pad)``
-    boundaries) so callers that already paid the pattern pass — e.g. the
+    every n_col dividing both P and n_search). ``overlap`` and ``comm``
+    select which SpMV engines to consider — the full grid is
+    {a2a, compressed} × {additive, overlap}; variants are only generated
+    where they differ from the additive a2a model (χ > 0). Every candidate
+    is scored with its **engine-exact** wire volume: ``comm_plan`` predicts
+    the padded all_to_all's ``P·L`` (χ₃-scaled) or the neighbor-permute
+    schedule's ``H = Σ_k L_k`` (χ₂-scaled) moved entries, which become the
+    effective χ of the iteration-time model (``perf_model.engine_chi``).
+    The ranking key is the predicted time of one filter pass, ``degree``
+    Chebyshev iterations plus two redistributions (Alg. 1 steps 7/9).
+    ``n_vc_by_row`` maps n_row -> precomputed n_vc counts (on
+    ``Partition(D, n_row, d_pad)`` boundaries) and ``comm_plan_by_row``
+    maps n_row -> a full precomputed :class:`SpmvCommPlan` (same
+    ``d_pad``), so callers that already paid the pattern pass — e.g. the
     dry-run — are not charged again.
     """
     P = int(n_devices)
@@ -287,7 +375,7 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     if not splits:
         raise ValueError(f"no (n_row, n_col) split of P={P} divides n_search={n_search}")
 
-    plans: dict[int, SpmvCommPlan] = {}
+    plans: dict[int, SpmvCommPlan] = dict(comm_plan_by_row or {})
     cands: list[Candidate] = []
     for n_row, n_col in splits:
         if n_row * n_col != P:
@@ -307,25 +395,41 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
             # spread over P devices) through the inter-process bandwidth
             t_red = (redistribution_volume(D, n_search, P, n_col, S_d)
                      ["bytes_total"] / P / machine.b_c)
-        kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi1, n_nzr=n_nzr, S_d=S_d)
-        for ov in sorted(set(overlap)):
-            if ov and chi1 <= 0.0:
-                continue  # overlap engine is a no-op without a halo exchange
-            t_iter = (pm.cheb_iter_time_overlap(machine, **kw) if ov
-                      else pm.cheb_iter_time(machine, **kw))
-            cands.append(Candidate(
-                layout=name, n_row=n_row, n_col=n_col, overlap=ov,
-                redistribute=n_col > 1, chi1=chi1, chi2=chim.chi2,
-                t_iter=t_iter, t_redist=t_red,
-                t_pass=degree * t_iter + 2.0 * t_red,
-                a2a_bytes_per_device=cp.a2a_bytes_per_device(n_b, S_d),
-            ))
+        for eng in sorted(set(comm)):
+            if eng not in ("a2a", "compressed"):
+                raise ValueError(f"unknown comm engine {eng!r}")
+            if eng == "compressed" and chi1 <= 0.0:
+                continue  # no halo exchange: compressed degenerates to a2a
+            if eng == "compressed" and cp.pair_counts is None:
+                # estimated-path n_vc gives only a lower bound on the
+                # schedule volume — never claim a compressed win the
+                # pattern hasn't proven
+                continue
+            chi_eng = pm.engine_chi(cp.moved_entries_per_device(eng), D, n_row)
+            kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi_eng, n_nzr=n_nzr,
+                      S_d=S_d)
+            for ov in sorted(set(overlap)):
+                if ov and chi1 <= 0.0:
+                    continue  # overlap is a no-op without a halo exchange
+                t_iter = (pm.cheb_iter_time_overlap(machine, **kw) if ov
+                          else pm.cheb_iter_time(machine, **kw))
+                cands.append(Candidate(
+                    layout=name, n_row=n_row, n_col=n_col, overlap=ov,
+                    comm=eng, redistribute=n_col > 1, chi1=chi1,
+                    chi2=chim.chi2, chi_eng=chi_eng,
+                    t_iter=t_iter, t_redist=t_red,
+                    t_pass=degree * t_iter + 2.0 * t_red,
+                    comm_bytes_per_device=cp.comm_bytes_per_device(
+                        eng, n_b, S_d),
+                ))
     if not cands:
         raise ValueError(
             f"no candidate survived for P={P}, n_search={n_search}, "
             f"overlap={overlap}, splits={splits} — overlap-only planning "
             f"needs at least one split with chi > 0 (n_row > 1)")
-    cands.sort(key=lambda c: (c.t_pass, c.overlap, c.n_col))
+    # ties prefer the simpler engine: a2a before compressed, additive
+    # before overlap, fewer bundles before more
+    cands.sort(key=lambda c: (c.t_pass, c.comm != "a2a", c.overlap, c.n_col))
     return Plan(matrix=_matrix_label(matrix), D=D, n_devices=P,
                 n_search=n_search, degree=degree, machine=machine.name,
                 candidates=tuple(cands))

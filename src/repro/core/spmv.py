@@ -43,6 +43,27 @@ engine accumulates local entries (ascending column) before halo entries,
 which is exactly the unsplit ELL slot order, so baseline and overlapped
 engines agree bit-for-bit up to associativity-free summation order.
 
+Sparsity-compressed execution model (``make_spmv(..., comm="compressed")``):
+the single padded ``all_to_all`` physically realizes the paper's χ₃ — every
+(sender, receiver) pair moves L slots even when its true volume L_qp is
+tiny or zero, so each device pays ``P * L`` entries per vector column
+regardless of the imbalance factor χ₃/χ₂. The compressed engine instead
+walks a *neighbor schedule* derived from the per-pair true volumes
+(:meth:`DistEll.neighbor_plan`): one ``lax.ppermute`` round per cyclic
+shift k with a nonzero pair, each round padded only to that round's max
+pair volume L_k = max_q L_{q -> q+k}, and empty rounds skipped entirely.
+Total moved entries drop from ``P * L`` (χ₃-scaled) to ``H = Σ_k L_k``
+(≈ χ₂-scaled when the per-shift volumes are balanced across devices) — the
+node-aware idea of Bienz, Gropp & Olson (arXiv:1612.08060): exchange only
+what the pattern requires, with actual neighbors. The halo columns are
+re-based into the compact round-concatenated receive buffer **without
+re-sorting the ELL slots**, so the accumulation order per output row is
+identical to the a2a engines and all four engines ({a2a, compressed} x
+{plain, overlap}) agree bit-for-bit. ``comm="compressed"`` composes with
+``overlap=True``: the permute rounds launch first, the local block
+contracts while the bytes are in flight, and the halo block contracts
+against the compact buffer last.
+
 The vertical (``col``) mesh axes shard the vector bundle; no SpMV
 communication crosses them (the paper's central point).
 """
@@ -62,7 +83,36 @@ from ..matrices.families import MatrixFamily
 from ..matrices.sparse import CSR, csr_to_ell
 from .layouts import Layout
 
-__all__ = ["Partition", "DistEll", "build_dist_ell", "make_spmv", "make_fused_cheb_step"]
+__all__ = ["Partition", "DistEll", "NeighborPlan", "build_dist_ell",
+           "make_spmv", "make_fused_cheb_step", "neighbor_schedule",
+           "SPMV_COMM_ENGINES"]
+
+#: Horizontal-layer communication engines of ``make_spmv``.
+SPMV_COMM_ENGINES = ("a2a", "compressed")
+
+
+def neighbor_schedule(pair_counts: np.ndarray) -> tuple[tuple[int, ...],
+                                                        tuple[int, ...]]:
+    """(shifts, round_L) of the compressed engine for true per-pair
+    volumes ``pair_counts[q, p]`` (sender q -> receiver p): one round per
+    cyclic shift k with a nonzero pair, padded to that shift's max pair
+    volume ``L_k = max_q L_{q -> (q+k) % P}``, empty shifts skipped.
+
+    Single source of truth for the round derivation — the engine
+    (``DistEll.neighbor_plan``) and the planner's byte prediction
+    (``planner.SpmvCommPlan.permute_schedule``) both call it, which is
+    what keeps predicted == HLO-measured exact.
+    """
+    pc = np.asarray(pair_counts)
+    P = pc.shape[0]
+    q = np.arange(P)
+    shifts, round_L = [], []
+    for k in range(1, P):
+        Lk = int(pc[q, (q + k) % P].max())
+        if Lk:
+            shifts.append(k)
+            round_L.append(Lk)
+    return tuple(shifts), tuple(round_L)
 
 
 # --------------------------------------------------------------------------
@@ -102,6 +152,33 @@ class Partition:
 
 
 @dataclasses.dataclass
+class NeighborPlan:
+    """Static schedule of the compressed (neighbor-permute) halo exchange.
+
+    One ``lax.ppermute`` round per cyclic shift ``k`` in ``shifts``: shard
+    ``p`` sends ``round_L[i]`` slots to shard ``(p + shifts[i]) % P`` and
+    receives as many from ``(p - shifts[i]) % P``. Shifts whose max pair
+    volume is zero are absent — those pairs move no bytes at all. The
+    receive buffers concatenate in round order into a compact halo region
+    of ``H = sum(round_L)`` entries (vs ``P * L`` for the padded a2a).
+    ``cols_halo_nbr`` is only needed by the overlap variant and is filled
+    lazily (``DistEll.neighbor_plan(split_halo=True)``) so the plain
+    compressed engine never materializes the local/halo split.
+    """
+
+    shifts: tuple[int, ...]   # cyclic shifts with at least one nonempty pair
+    round_L: tuple[int, ...]  # per-round pad: max pair volume at that shift
+    send_nbr: jax.Array       # [P, H] int32 local rows to ship, round-major
+    cols_nbr: jax.Array       # [P, R, W] combined cols, halo re-based to [R, R+H)
+    cols_halo_nbr: jax.Array | None = None  # [P, R, W_halo] split halo cols in [0, H)
+
+    @property
+    def H(self) -> int:
+        """Per-device moved entries per vector column (Σ_k L_k)."""
+        return int(sum(self.round_L))
+
+
+@dataclasses.dataclass
 class DistEll:
     """Pytree of device arrays for the distributed ELL SpMV.
 
@@ -109,7 +186,10 @@ class DistEll:
     mesh axes inside ``make_spmv``. The four ``*_loc`` / ``*_halo`` fields
     are the split-phase form consumed by the overlap engine; they are
     populated on demand by :meth:`split` (or eagerly with
-    ``build_dist_ell(..., split_halo=True)``).
+    ``build_dist_ell(..., split_halo=True)``). ``pair_counts`` holds the
+    true per-(sender, receiver) volumes L_qp behind the comm plan;
+    :meth:`neighbor_plan` turns them into the compressed engine's
+    ppermute schedule (lazily, cached).
     """
 
     cols: jax.Array  # [P, R, W] int32, remapped columns
@@ -120,10 +200,12 @@ class DistEll:
     P: int = dataclasses.field(metadata=dict(static=True))
     D: int = dataclasses.field(metadata=dict(static=True))
     n_vc: np.ndarray | None = None  # exact per-shard remote counts (diagnostics)
+    pair_counts: np.ndarray | None = None  # [P, P] true volumes L_qp (q -> p)
     cols_loc: jax.Array | None = None   # [P, R, W_loc] columns in [0, R)
     vals_loc: jax.Array | None = None   # [P, R, W_loc]
     cols_halo: jax.Array | None = None  # [P, R, W_halo] columns in [0, P*L)
     vals_halo: jax.Array | None = None  # [P, R, W_halo]
+    nbr: NeighborPlan | None = None     # compressed-engine schedule (cached)
 
     @property
     def comm_bytes_per_spmv(self) -> int:
@@ -132,11 +214,17 @@ class DistEll:
 
     @property
     def halo_nnz_fraction(self) -> float:
-        """Fraction of stored nonzeros in the halo part (perf-model input)."""
-        cl, vl, ch, vh = self.split()
-        n_halo = int(np.count_nonzero(np.asarray(vh)))
-        n_loc = int(np.count_nonzero(np.asarray(vl)))
-        return n_halo / max(n_halo + n_loc, 1)
+        """Fraction of stored nonzeros in the halo part (perf-model input).
+
+        Computed directly from masks on the combined ``cols``/``vals`` —
+        no local/halo device arrays are materialized for a count.
+        """
+        cols = np.asarray(self.cols)
+        vals = np.asarray(self.vals)
+        stored = vals != 0
+        n_halo = int(np.count_nonzero(stored & (cols >= self.R)))
+        n_all = int(np.count_nonzero(stored))
+        return n_halo / max(n_all, 1)
 
     def split(self):
         """Split the combined ELL into (cols_loc, vals_loc, cols_halo,
@@ -182,6 +270,81 @@ class DistEll:
         self.vals_halo = jnp.asarray(vals_halo)
         return self.cols_loc, self.vals_loc, self.cols_halo, self.vals_halo
 
+    # ------------------------------------------------- compressed engine --
+
+    def _shift_offsets(self):
+        """(shifts, round_L, off_by_shift): the nonempty cyclic shifts, the
+        per-round pad L_k = max_q L_{q -> (q+k) % P}, and each scheduled
+        shift's offset into the concatenated receive buffer (-1 = skipped).
+        """
+        if self.pair_counts is None:
+            raise ValueError(
+                "compressed engine needs per-pair volumes; rebuild the "
+                "operator with build_dist_ell (pair_counts=None)")
+        shifts, round_L = neighbor_schedule(self.pair_counts)
+        off_by_shift = np.full(self.P, -1, dtype=np.int64)
+        H = 0
+        for k, Lk in zip(shifts, round_L):
+            off_by_shift[k] = H
+            H += Lk
+        return shifts, round_L, off_by_shift
+
+    def _rebase_halo(self, cols, vals, halo_mask_base, off_by_shift, base):
+        """Re-base halo columns ``halo_mask_base + q*L + slot`` (a2a receive
+        layout) into ``base + off(shift) + slot`` (compact round buffer),
+        touching only stored entries — the ELL slot layout is unchanged, so
+        the compressed contraction accumulates in the baseline's order."""
+        out = []
+        for p in range(self.P):
+            cp = cols[p].copy()
+            halo = (vals[p] != 0) & (cp >= halo_mask_base)
+            if halo.any():
+                c = cp[halo] - halo_mask_base
+                q, slot = c // self.L, c % self.L
+                off = off_by_shift[(p - q) % self.P]
+                assert (off >= 0).all(), "stored halo entry in a skipped round"
+                cp[halo] = (base + off + slot).astype(cp.dtype)
+            out.append(cp)
+        return np.stack(out)
+
+    def neighbor_plan(self, split_halo: bool = False) -> NeighborPlan:
+        """Compressed-engine schedule + re-based device arrays; cached.
+
+        ``send_nbr[p]`` concatenates, round-major, the first L_k send slots
+        of pair p -> (p+k) % P; ``cols_nbr`` is the combined ELL with halo
+        columns re-based into ``[R, R + H)``. ``split_halo=True``
+        additionally fills ``cols_halo_nbr`` (the split-phase halo block
+        re-based into ``[0, H)``) for the overlap variant — the plain
+        compressed engine skips the split entirely.
+        """
+        if self.nbr is None:
+            shifts, round_L, off_by_shift = self._shift_offsets()
+            P = self.P
+            send_idx = np.asarray(self.send_idx)
+            H = int(sum(round_L))
+            send_nbr = np.zeros((P, max(H, 1)), dtype=np.int32)
+            for k, Lk in zip(shifts, round_L):
+                off = int(off_by_shift[k])
+                for q in range(P):
+                    send_nbr[q, off:off + Lk] = send_idx[q, (q + k) % P, :Lk]
+            cols_nbr = self._rebase_halo(np.asarray(self.cols),
+                                         np.asarray(self.vals),
+                                         self.R, off_by_shift, self.R)
+            self.nbr = NeighborPlan(
+                shifts=shifts, round_L=round_L,
+                send_nbr=jnp.asarray(send_nbr),
+                cols_nbr=jnp.asarray(cols_nbr),
+            )
+        if split_halo and self.nbr.cols_halo_nbr is None:
+            _, _, ch, vh = self.split()
+            _, _, off_by_shift = self._shift_offsets()
+            # split halo cols already sit at base 0 (values q*L + slot)
+            ch_nbr = (self._rebase_halo(np.asarray(ch), np.asarray(vh),
+                                        0, off_by_shift, 0)
+                      if ch.shape[2] else np.asarray(ch))
+            self.nbr.cols_halo_nbr = jnp.asarray(ch_nbr)
+        return self.nbr
+
 
 def _pattern_chunks(matrix, rows):
     r, c, v = matrix.row_entries(rows)
@@ -225,9 +388,14 @@ def build_dist_ell(
     L = max((len(v) for d in need for v in d.values()), default=0)
     L = max(L, 1)  # keep shapes non-degenerate
 
+    # true per-pair volumes L_qp (sender q -> receiver p) — the compressed
+    # engine's neighbor schedule and the planner's χ₂-scaled byte
+    # prediction both derive from these
+    pair_counts = np.zeros((P_row, P_row), dtype=np.int64)
     send_idx = np.zeros((P_row, P_row, L), dtype=np.int32)
     for p, d in enumerate(need):
         for q, glob in d.items():
+            pair_counts[q, p] = len(glob)
             send_idx[q, p, : len(glob)] = (glob - q * R).astype(np.int32)
 
     # local ELL with remapped columns
@@ -273,6 +441,7 @@ def build_dist_ell(
         P=P_row,
         D=D,
         n_vc=n_vc,
+        pair_counts=pair_counts,
     )
     if split_halo:
         ell.split()
@@ -350,17 +519,137 @@ def _local_spmv_overlap(cols_loc, vals_loc, cols_halo, vals_halo, send_idx, x,
     return acc
 
 
+def _halo_exchange_nbr(x, send_nbr, dist_axes, P_row, shifts, round_L):
+    """Compressed halo exchange: one ``ppermute`` round per scheduled
+    cyclic shift, each padded to that round's max pair volume only; the
+    received segments concatenate into the compact [H, nb] halo buffer.
+    Every round is independent of the others (and of any contraction), so
+    async-collective backends pipeline them freely."""
+    nb = x.shape[1]
+    parts = []
+    off = 0
+    for k, Lk in zip(shifts, round_L):
+        seg = jnp.take(x, send_nbr[off:off + Lk], axis=0)  # [Lk, nb]
+        parts.append(lax.ppermute(
+            seg, dist_axes,
+            perm=[(j, (j + k) % P_row) for j in range(P_row)]))
+        off += Lk
+    if not parts:
+        return jnp.zeros((0, nb), dtype=x.dtype)
+    return jnp.concatenate(parts, axis=0)
+
+
+def _local_spmv_nbr(cols_nbr, vals, send_nbr, x, dist_axes, P_row, nbr: NeighborPlan,
+                    use_kernel=False):
+    """Compressed per-device body: neighbor-permute rounds + combined ELL
+    contraction against ``[x_local ‖ compact halo]``. The ELL slot layout
+    equals the baseline's, so the accumulation order (and hence the result,
+    bit-for-bit) matches the a2a engine."""
+    R, W = cols_nbr.shape
+    nb = x.shape[1]
+    if P_row > 1 and nbr.H:
+        halo = _halo_exchange_nbr(x, send_nbr, dist_axes, P_row,
+                                  nbr.shifts, nbr.round_L)
+        xfull = jnp.concatenate([x, halo], axis=0)
+    else:
+        xfull = x
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        return kops.ell_spmv(cols_nbr, vals, xfull)
+    acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals.dtype, x.dtype))
+    return _ell_contract(acc0, cols_nbr, vals, xfull)
+
+
+def _local_spmv_nbr_overlap(cols_loc, vals_loc, cols_halo_nbr, vals_halo,
+                            send_nbr, x, dist_axes, P_row, nbr: NeighborPlan,
+                            use_kernel=False):
+    """Compressed split-phase body: launch the permute rounds, contract the
+    local ELL while the (χ₂-proportional) bytes are in flight, contract the
+    halo ELL against the compact receive buffer last — the overlap
+    execution model ``T = max(T_comm, T_local) + T_halo`` with the comm
+    term scaled by Σ_k L_k instead of P·L."""
+    R = cols_loc.shape[0]
+    nb = x.shape[1]
+    if P_row > 1 and nbr.H:
+        halo = _halo_exchange_nbr(x, send_nbr, dist_axes, P_row,
+                                  nbr.shifts, nbr.round_L)
+    else:
+        halo = jnp.zeros((0, nb), dtype=x.dtype)
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        return kops.ell_spmv_split(cols_loc, vals_loc, cols_halo_nbr,
+                                   vals_halo, x, halo)
+    acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals_loc.dtype, x.dtype))
+    acc = _ell_contract(acc0, cols_loc, vals_loc, x)  # overlaps the rounds
+    if cols_halo_nbr.shape[1]:
+        acc = _ell_contract(acc, cols_halo_nbr, vals_halo, halo)
+    return acc
+
+
 def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
-              overlap: bool = False):
+              overlap: bool = False, comm: str = "a2a"):
     """Return spmv(x) on the global padded array X [D_pad, N_s'] where the
     layout's dist axes shard D and bundle axes shard N_s.
 
     ``overlap=True`` selects the split-phase engine that issues the halo
-    all_to_all before the local contraction so communication can hide
-    behind local work (identical results; summation order preserved)."""
+    exchange before the local contraction so communication can hide
+    behind local work (identical results; summation order preserved).
+    ``comm`` picks the horizontal-layer exchange: ``"a2a"`` (one
+    all_to_all padded to the global max pair volume L — moved bytes scale
+    with χ₃) or ``"compressed"`` (neighbor ppermute rounds padded per
+    round — moved bytes ≈ χ₂-scaled, empty pairs skipped). All four
+    engine combinations agree bit-for-bit."""
+    if comm not in SPMV_COMM_ENGINES:
+        raise ValueError(f"unknown comm engine {comm!r} "
+                         f"(expected one of {SPMV_COMM_ENGINES})")
     dist = layout.dist_axes
     vec_spec = layout.vec_pspec()
     plan_spec = P(dist if dist else None, None, None)
+
+    if comm == "compressed":
+        nbr = ell.neighbor_plan(split_halo=overlap)
+        send_spec = P(dist if dist else None, None)
+
+        if overlap:
+            cols_loc, vals_loc, _, vals_halo = ell.split()
+
+            def local_fn_cmp_ov(cl, vl, ch, vh, send_nbr, x):
+                return _local_spmv_nbr_overlap(
+                    cl[0], vl[0], ch[0], vh[0], send_nbr[0], x, dist,
+                    ell.P, nbr, use_kernel)
+
+            fn = shard_map(
+                local_fn_cmp_ov,
+                mesh=mesh,
+                in_specs=(plan_spec,) * 4 + (send_spec, vec_spec),
+                out_specs=vec_spec,
+                check_rep=False,
+            )
+
+            def spmv_cmp_ov(x):
+                return fn(cols_loc, vals_loc, nbr.cols_halo_nbr, vals_halo,
+                          nbr.send_nbr, x)
+
+            return spmv_cmp_ov
+
+        def local_fn_cmp(cols_nbr, vals, send_nbr, x):
+            return _local_spmv_nbr(cols_nbr[0], vals[0], send_nbr[0], x,
+                                   dist, ell.P, nbr, use_kernel)
+
+        fn = shard_map(
+            local_fn_cmp,
+            mesh=mesh,
+            in_specs=(plan_spec, plan_spec, send_spec, vec_spec),
+            out_specs=vec_spec,
+            check_rep=False,
+        )
+
+        def spmv_cmp(x):
+            return fn(nbr.cols_nbr, ell.vals, nbr.send_nbr, x)
+
+        return spmv_cmp
 
     if overlap:
         cols_loc, vals_loc, cols_halo, vals_halo = ell.split()
@@ -406,14 +695,72 @@ def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = Fa
 
 
 def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
-                         overlap: bool = False):
+                         overlap: bool = False, comm: str = "a2a"):
     """w2' = 2a (A w1) + 2b w1 - w2 — the paper's fused SpMV+axpy kernel
     (Alg. 2 step 7), computed in one shard_map body so XLA (or the Pallas
     kernel) fuses the axpy with the contraction (κ = 5, not 6). With
-    ``overlap=True`` the SpMV inside uses the split-phase engine."""
+    ``overlap=True`` the SpMV inside uses the split-phase engine; with
+    ``comm="compressed"`` it uses the neighbor-permute halo exchange
+    (same options as :func:`make_spmv`)."""
+    if comm not in SPMV_COMM_ENGINES:
+        raise ValueError(f"unknown comm engine {comm!r} "
+                         f"(expected one of {SPMV_COMM_ENGINES})")
     dist = layout.dist_axes
     vec_spec = layout.vec_pspec()
     plan_spec = P(dist if dist else None, None, None)
+
+    if comm == "compressed":
+        nbr = ell.neighbor_plan(split_halo=overlap)
+        send_spec = P(dist if dist else None, None)
+
+        if overlap:
+            cols_loc, vals_loc, _, vals_halo = ell.split()
+
+            def local_fn_cmp_ov(cl, vl, ch, vh, send_nbr, w1, w2, a, b):
+                y = _local_spmv_nbr_overlap(cl[0], vl[0], ch[0], vh[0],
+                                            send_nbr[0], w1, dist, ell.P,
+                                            nbr, use_kernel)
+                return 2.0 * a * y + 2.0 * b * w1 - w2
+
+            fn = shard_map(
+                local_fn_cmp_ov,
+                mesh=mesh,
+                in_specs=(plan_spec,) * 4 + (send_spec, vec_spec, vec_spec,
+                                             P(), P()),
+                out_specs=vec_spec,
+                check_rep=False,
+            )
+
+            def step_cmp_ov(w1, w2, alpha, beta):
+                rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
+                a = jnp.asarray(alpha, dtype=rdt)
+                b = jnp.asarray(beta, dtype=rdt)
+                return fn(cols_loc, vals_loc, nbr.cols_halo_nbr, vals_halo,
+                          nbr.send_nbr, w1, w2, a, b)
+
+            return step_cmp_ov
+
+        def local_fn_cmp(cols_nbr, vals, send_nbr, w1, w2, a, b):
+            y = _local_spmv_nbr(cols_nbr[0], vals[0], send_nbr[0], w1,
+                                dist, ell.P, nbr, use_kernel)
+            return 2.0 * a * y + 2.0 * b * w1 - w2
+
+        fn = shard_map(
+            local_fn_cmp,
+            mesh=mesh,
+            in_specs=(plan_spec, plan_spec, send_spec, vec_spec, vec_spec,
+                      P(), P()),
+            out_specs=vec_spec,
+            check_rep=False,
+        )
+
+        def step_cmp(w1, w2, alpha, beta):
+            rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
+            a = jnp.asarray(alpha, dtype=rdt)
+            b = jnp.asarray(beta, dtype=rdt)
+            return fn(nbr.cols_nbr, ell.vals, nbr.send_nbr, w1, w2, a, b)
+
+        return step_cmp
 
     if overlap:
         cols_loc, vals_loc, cols_halo, vals_halo = ell.split()

@@ -23,18 +23,23 @@ def prefer_pallas() -> bool:
 
 def ell_spmv(cols, vals, x):
     """Local ELL contraction (scan-of-gathers; the Pallas tile kernel in
-    ell_gather.py is opted in by the operator builder on TPU)."""
+    ell_gather.py is opted in by the operator builder on TPU). Both comm
+    engines dispatch here — the compressed (neighbor-permute) engine only
+    re-bases column values into its compact halo buffer, so the same
+    contraction body serves ``comm="a2a"`` and ``comm="compressed"``."""
     return ref.ell_spmv_ref(cols, vals, x)
 
 
 def ell_spmv_split(cols_loc, vals_loc, cols_halo, vals_halo, x, halo):
-    """Split-phase ELL contraction for the overlap engine.
+    """Split-phase ELL contraction for the overlap engines.
 
     The local block never reads the halo buffer, so the caller can launch
     the halo exchange first and XLA overlaps it with the local contraction.
     The halo block gathers only from the (small) received buffer — on TPU
     it stays VMEM-resident, which is exactly the regime the ell_gather tile
-    kernel wants (one column block, no re-bucketing)."""
+    kernel wants (one column block, no re-bucketing). With the compressed
+    engine the received buffer shrinks further (``Σ_k L_k`` instead of
+    ``P·L`` rows); ``cols_halo`` then indexes that compact buffer."""
     return ref.ell_spmv_split_ref(cols_loc, vals_loc, cols_halo, vals_halo,
                                   x, halo)
 

@@ -10,6 +10,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out cache.json]
   PYTHONPATH=src python -m repro.launch.dryrun --eigen exciton200 --layout pillar
   PYTHONPATH=src python -m repro.launch.dryrun --eigen hubbard16 --layout panel+ov --plan
+  PYTHONPATH=src python -m repro.launch.dryrun --eigen roadnet48k --layout panel \
+      --spmv-comm compressed --plan
+  PYTHONPATH=src python -m repro.launch.dryrun --fit-machine --fit-out machine_fit.json
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -162,7 +165,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False, verbose=True) -> di
 
 def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               n_search: int | None = None, verbose=True,
-              plan: bool = False) -> dict:
+              plan: bool = False, spmv_comm: str = "a2a",
+              machine=None) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
     surrogate with the *exact* χ-derived comm plan of the real matrix.
@@ -172,10 +176,17 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     then also carries the overlap-aware perf-model prediction so the sweep
     can quantify when overlap restores scalability.
 
+    ``spmv_comm="compressed"`` lowers the sparsity-compressed neighbor-
+    permute engine instead of the padded all_to_all: the surrogate carries
+    the real matrix's neighbor schedule (exact per-pair volumes where the
+    pattern pass is affordable — CSR, small D, or finite ``reach`` — and
+    the uniform χ-estimate otherwise), so the HLO-measured
+    collective-permute volume is the engine's true wire footprint.
+
     ``plan=True`` adds the χ-driven planner panel: the full candidate
     ranking (``core/planner.py``) for this matrix on the production mesh,
-    plus the predicted all-to-all volume of the lowered cell next to the
-    HLO-measured one — prediction and measurement in one place."""
+    plus the predicted SpMV collective volume of the lowered cell next to
+    the HLO-measured one — prediction and measurement in one place."""
     from ..configs import get_config as gc
     from ..core import layouts as L
     from ..core.filter_diag import FDConfig
@@ -214,9 +225,10 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     D_pad = -(-D // P_total) * P_total
     dt = jnp.complex64 if fam.is_complex else jnp.float32
 
-    # surrogate distributed operator: exact comm plan (χ-padded all_to_all)
-    # on a bandwidth-matched synthetic ELL. Only ShapeDtypeStructs are
-    # built — the plan arrays are jit *arguments*, nothing is allocated.
+    # surrogate distributed operator: exact comm plan (χ-padded all_to_all
+    # or the compressed neighbor schedule) on a bandwidth-matched synthetic
+    # ELL. Only ShapeDtypeStructs are built — the plan arrays are jit
+    # *arguments*, nothing is allocated.
     n_vc = fam.n_vc(np.minimum(np.arange(N_row + 1) * (D_pad // N_row), D)) if N_row > 1 else np.zeros(1)
     t0 = time.time()
     W = int(round(_nnzr(fam)))
@@ -226,6 +238,24 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     # (halo rows ~ ceil(n_vc / R) entries wide on average)
     W_halo = max(1, -(-int(n_vc.max()) // max(R, 1))) if N_row > 1 else 1
     W_loc = max(1, W - W_halo)
+    compressed = spmv_comm == "compressed" and N_row > 1
+    shifts, round_L = (), ()
+    cp_nbr = None
+    if compressed:
+        # neighbor schedule of the real pattern: exact per-pair volumes
+        # when the pattern pass is affordable, uniform χ-estimate rounds
+        # otherwise (the prediction below always uses THIS schedule, so
+        # predicted == measured stays exact either way)
+        from ..core.planner import comm_plan as _comm_plan
+        from ..core.planner import exact_comm_default
+
+        if exact_comm_default(fam):
+            cp_nbr = _comm_plan(fam, N_row, d_pad=D_pad, exact=True)
+            shifts, round_L = cp_nbr.permute_schedule()
+        else:
+            shifts = tuple(range(1, N_row))
+            round_L = (L,) * (N_row - 1)
+    H = int(sum(round_L))
     ell_spec = dict(
         cols=jax.ShapeDtypeStruct((N_row, R, W), jnp.int32),
         vals=jax.ShapeDtypeStruct((N_row, R, W), dt),
@@ -234,27 +264,40 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         vals_loc=jax.ShapeDtypeStruct((N_row, R, W_loc), dt),
         cols_halo=jax.ShapeDtypeStruct((N_row, R, W_halo), jnp.int32),
         vals_halo=jax.ShapeDtypeStruct((N_row, R, W_halo), dt),
+        send_nbr=jax.ShapeDtypeStruct((N_row, max(H, 1)), jnp.int32),
     )
     tsqr = make_tsqr(mesh, stack_l)
     to_panel, to_stack = make_redistribute(mesh, stack_l, panel_l)
     degree = 32
 
-    def fd_iteration(V, mu, alpha, beta, cols, vals, send_idx):
+    # one surrogate body per engine combination; plan arrays arrive as jit
+    # arguments and are planted pre-split (and pre-scheduled) on the
+    # DistEll so the device code never materializes host data from tracers
+    def make_nbr(send_nbr, cols_nbr, cols_halo_nbr):
+        return spmv_mod.NeighborPlan(shifts=shifts, round_L=round_L,
+                                     send_nbr=send_nbr, cols_nbr=cols_nbr,
+                                     cols_halo_nbr=cols_halo_nbr)
+
+    def fd_iteration(V, mu, alpha, beta, cols, vals, send_idx, send_nbr):
+        nbr = make_nbr(send_nbr, cols, cols) if compressed else None
         ell = spmv_mod.DistEll(cols=cols, vals=vals, send_idx=send_idx,
-                               R=R, L=L, P=N_row, D=D)
-        spmv = spmv_mod.make_spmv(mesh, panel_l, ell)
+                               R=R, L=L, P=N_row, D=D, nbr=nbr)
+        spmv = spmv_mod.make_spmv(mesh, panel_l, ell, comm=spmv_comm)
         Q, _ = tsqr(V)
         Vp = to_panel(Q)
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
         return to_stack(Vp)
 
     def fd_iteration_ov(V, mu, alpha, beta, cols_loc, vals_loc, cols_halo,
-                        vals_halo, send_idx):
+                        vals_halo, send_idx, send_nbr):
+        nbr = make_nbr(send_nbr, cols_loc, cols_halo) if compressed else None
         ell = spmv_mod.DistEll(cols=cols_loc, vals=vals_loc, send_idx=send_idx,
                                R=R, L=L, P=N_row, D=D,
                                cols_loc=cols_loc, vals_loc=vals_loc,
-                               cols_halo=cols_halo, vals_halo=vals_halo)
-        spmv = spmv_mod.make_spmv(mesh, panel_l, ell, overlap=True)
+                               cols_halo=cols_halo, vals_halo=vals_halo,
+                               nbr=nbr)
+        spmv = spmv_mod.make_spmv(mesh, panel_l, ell, overlap=True,
+                                  comm=spmv_comm)
         Q, _ = tsqr(V)
         Vp = to_panel(Q)
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
@@ -265,25 +308,27 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     dist = panel_l.dist_axes
     from jax.sharding import PartitionSpec as PS
     plan_sh = jax.NamedSharding(mesh, PS(dist if dist else None, None, None))
+    send_sh = jax.NamedSharding(mesh, PS(dist if dist else None, None))
     scalar = jax.ShapeDtypeStruct((), jnp.float32)
     with mesh:
         vsh = jax.NamedSharding(mesh, stack_l.vec_pspec())
         if overlap:
             jitted = jax.jit(fd_iteration_ov,
-                             in_shardings=(vsh, None, None, None) + (plan_sh,) * 5,
+                             in_shardings=(vsh, None, None, None)
+                             + (plan_sh,) * 5 + (send_sh,),
                              out_shardings=vsh, donate_argnums=(0,))
             lowered = jitted.lower(V, mu, scalar, scalar,
                                    ell_spec["cols_loc"], ell_spec["vals_loc"],
                                    ell_spec["cols_halo"], ell_spec["vals_halo"],
-                                   ell_spec["send_idx"])
+                                   ell_spec["send_idx"], ell_spec["send_nbr"])
         else:
             jitted = jax.jit(fd_iteration,
                              in_shardings=(vsh, None, None, None,
-                                           plan_sh, plan_sh, plan_sh),
+                                           plan_sh, plan_sh, plan_sh, send_sh),
                              out_shardings=vsh, donate_argnums=(0,))
             lowered = jitted.lower(V, mu, scalar, scalar,
                                    ell_spec["cols"], ell_spec["vals"],
-                                   ell_spec["send_idx"])
+                                   ell_spec["send_idx"], ell_spec["send_nbr"])
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -295,12 +340,14 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         roof = rl.analyze(compiled, useful, mesh.devices.size)
     rec = {
         "arch": name,
-        "shape": f"fd_iter[{layout_name}{'+ov' if overlap else ''},Ns={n_s},deg={degree}]",
+        "shape": (f"fd_iter[{layout_name}{'+cmp' if compressed else ''}"
+                  f"{'+ov' if overlap else ''},Ns={n_s},deg={degree}]"),
         "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": mesh.devices.size,
         "status": "ok", "t_lower_s": round(t_lower, 1),
         "t_compile_s": round(t_compile, 1), "memory": mem,
         "model_flops": useful, **roof.row(),
         "chi_comm_plan_L": int(L), "n_vc_max": int(n_vc.max()) if N_row > 1 else 0,
+        "spmv_comm": spmv_comm, "nbr_H": H, "nbr_rounds": len(shifts),
     }
     # perf-model per-Chebyshev-iteration prediction for this cell: additive
     # Eq. 12 vs the overlap engine's max(T_comm, T_local) + T_halo — the
@@ -327,46 +374,77 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
 
         P_t = mesh.devices.size
         S_cell = jnp.dtype(dt).itemsize
+        from ..core import perf_model as _pm
+        from ..core.planner import exact_comm_default
+
+        # exact pair counts (and hence compressed candidates) whenever the
+        # pattern pass is windowed/cheap; unbounded generators at paper
+        # scale reuse the n_vc already computed above (estimated path —
+        # the planner then only ranks the a2a engines, by design). A
+        # comm plan already built for the compressed schedule is handed
+        # through so the lowered n_row's pattern pass is never paid twice
+        exact_ok = exact_comm_default(fam)
         lp = plan_for_mesh(fam, mesh, n_search=n_s, row_axes=("model",),
-                           degree=degree, S_d=S_cell, exact_comm=False,
+                           degree=degree, S_d=S_cell,
+                           exact_comm=None if exact_ok else False,
                            d_pad=D_pad, n_nzr=_nnzr(fam),
-                           # the lowered layout's n_vc was already computed
-                           # above — don't pay the pattern pass twice
-                           n_vc_by_row={N_row: n_vc} if N_row > 1 else None)
-        # predicted per-chip all-to-all operand bytes of THIS cell:
-        #   degree SpMV halo exchanges ([N_row, L, n_b] send buffer) +
-        #   2 redistributions (full local slice; Eq. 17/18 is the moved
-        #   subset — XLA prints either convention, so report both)
-        pred_spmv = degree * N_row * L * (n_s // max(n_col, 1)) * S_cell \
-            if N_row > 1 else 0
+                           machine=machine or _pm.TPU_V5E,
+                           comm_plan_by_row=None if cp_nbr is None
+                           else {N_row: cp_nbr},
+                           n_vc_by_row=None if exact_ok or N_row <= 1
+                           else {N_row: n_vc})
+        # predicted per-chip SpMV collective operand bytes of THIS cell:
+        # degree halo exchanges — the [N_row, L, n_b] all_to_all send
+        # buffer, or the compressed engine's Σ_k L_k ppermute segments —
+        # plus 2 redistributions (full local slice; Eq. 17/18 is the moved
+        # subset — XLA prints either convention, so report both)
+        n_b_cell = n_s // max(n_col, 1)
+        spmv_entries = (H if compressed else N_row * L) if N_row > 1 else 0
+        pred_spmv = degree * spmv_entries * n_b_cell * S_cell
+        # TSQR butterfly: log2(P) ppermute rounds of the N_s x N_s R factor
+        # (orthogonalize.py) — counted with the SpMV permutes by the HLO
+        # parse, so predict it too
+        pred_tsqr = P_t.bit_length() - 1 if P_t & (P_t - 1) == 0 \
+            else int(np.ceil(np.log2(P_t)))
+        pred_tsqr *= n_s * n_s * S_cell
         pred_red_full = 2 * (D_pad // P_t) * n_s * S_cell if n_col > 1 else 0
         pred_red_moved = 2 * int(redistribution_volume(
             D_pad, n_s, P_t, n_col, S_cell)["bytes_total"] / P_t) \
             if n_col > 1 else 0
-        meas = int(roof.coll_breakdown.get("all-to-all", 0))
-        # two honest conventions for the redistribution operand (XLA may
-        # print the full local slice or only the moved subset) — report
-        # BOTH ratios; agreement means one of them is ~1, and the spmv
-        # term (the χ prediction proper) is identical in both
-        pred_full = pred_spmv + pred_red_full
-        pred_moved = pred_spmv + pred_red_moved
+        meas_a2a = int(roof.coll_breakdown.get("all-to-all", 0))
+        meas_perm = int(roof.coll_breakdown.get("collective-permute", 0))
+        # the compressed engine's SpMV bytes are collective-permutes; the
+        # redistribution stays an all_to_all — sum both kinds so the
+        # predicted==measured check covers every engine. Two honest
+        # conventions for the redistribution operand (XLA may print the
+        # full local slice or only the moved subset) — report BOTH ratios;
+        # agreement means one of them is ~1, and the spmv term (the χ
+        # prediction proper) is identical in both
+        meas = meas_a2a + meas_perm
+        pred_full = pred_spmv + pred_tsqr + pred_red_full
+        pred_moved = pred_spmv + pred_tsqr + pred_red_moved
         rec["plan_best"] = lp.best.describe()
         rec["plan_chi1"] = lp.best.chi1
+        rec["plan_pred_spmv_bytes"] = pred_spmv
         rec["plan_pred_a2a_bytes_full"] = pred_full
         rec["plan_pred_a2a_bytes_moved"] = pred_moved
-        rec["plan_measured_a2a_bytes"] = meas
+        rec["plan_measured_a2a_bytes"] = meas_a2a
+        rec["plan_measured_permute_bytes"] = meas_perm
         if verbose:
             print(lp.report())
             r_full = meas / pred_full if pred_full else float("nan")
             r_moved = meas / pred_moved if pred_moved else float("nan")
-            print(f"[plan] cell a2a/chip predicted: spmv {degree}x"
-                  f"{pred_spmv // max(degree, 1)} + redist(full) "
-                  f"{pred_red_full} = {pred_full} | redist(moved) "
-                  f"{pred_red_moved} = {pred_moved}  measured {meas}  "
+            kind = "permute" if compressed else "a2a"
+            print(f"[plan] cell spmv({kind})/chip predicted: {degree}x"
+                  f"{pred_spmv // max(degree, 1)} + tsqr {pred_tsqr} "
+                  f"+ redist(full) {pred_red_full} = {pred_full} | "
+                  f"redist(moved) {pred_red_moved} = {pred_moved}  measured "
+                  f"a2a {meas_a2a} + permute {meas_perm}  "
                   f"ratio full {r_full:.3f} / moved {r_moved:.3f}")
     if verbose:
         print(f"[dryrun-eigen] {name} "
-              f"[{layout_name}{'+ov' if overlap else ''}] on {rec['mesh']}: OK "
+              f"[{layout_name}{'+cmp' if compressed else ''}"
+              f"{'+ov' if overlap else ''}] on {rec['mesh']}: OK "
               f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
         if "overlap_model_speedup" in rec:
             print(f"  perf model/iter: additive={rec['t_model_additive_s']*1e3:.2f}ms "
@@ -383,6 +461,99 @@ def _nnzr(fam) -> float:
     probe = np.arange(0, min(fam.D, 4096), dtype=np.int64)
     r, _ = fam.row_cols(probe)
     return len(r) / len(probe)
+
+
+# -------------------------------------------------- machine-model fitting --
+
+def fit_machine(eigen: str | None = None, out_path: str = "machine_fit.json",
+                n_devices: int = 8, n_search: int = 16, reps: int = 20,
+                verbose: bool = True):
+    """Calibrate the planner's machine constants from *measured* dry-run
+    iteration times (ROADMAP "feed measured dry-run times back").
+
+    Runs the real fused Chebyshev step (baseline a2a engine) of a small
+    matrix instance across several mesh splits on ``n_devices`` local
+    devices, times each, and least-squares fits b_c and κ via
+    ``MachineModel.fit`` (b_m is kept from the TPU_V5E base — the paper
+    fixes b_m from STREAM and fits the rest the same way). The fitted
+    model is saved as JSON for ``solve --machine <path>`` /
+    ``dryrun --plan --machine <path>``, so planner rankings can use
+    calibrated constants instead of the hardcoded MEGGIE/TPU_V5E numbers.
+    """
+    from ..core import perf_model as pm
+    from ..core import spmv as spmv_mod
+    from ..core.layouts import make_solver_mesh, panel, stack
+    from ..core.planner import comm_plan, estimate_nnzr
+    from ..matrices import SpinChainXXZ, get_family
+
+    if eigen:
+        mspec = dict(get_smoke_matrix(eigen))
+        fam = get_family(mspec.pop("family"), **mspec)
+    else:
+        fam = SpinChainXXZ(12, 6)
+    csr = fam.build_csr()
+    D = csr.shape[0]
+    n_nzr = estimate_nnzr(csr)
+    S_d = None  # set from the dtype the engine actually runs (see below)
+    devices = jax.devices()[:n_devices]
+    samples = []
+    base = pm.TPU_V5E
+    if verbose:
+        print(f"[fit-machine] timing {fam.describe()} fused Chebyshev steps "
+              f"on {n_devices} devices")
+    splits = sorted({n for n in (n_devices, n_devices // 2, n_devices // 4)
+                     if n >= 1}, reverse=True)
+    for n_row in splits:
+        n_col = n_devices // n_row
+        if n_search % n_col:
+            continue
+        mesh = make_solver_mesh(n_row, n_col, devices=devices)
+        lay = stack(mesh) if n_col == 1 else panel(mesh)
+        D_pad = -(-D // n_devices) * n_devices
+        ell = spmv_mod.build_dist_ell(csr, n_row, d_pad=D_pad)
+        # Eq. 12's S_d must describe the elements the timed engine moves:
+        # without jax_enable_x64 (this module never sets it) the operator
+        # and vectors run in float32/complex64, not the host float64
+        S_d = int(ell.vals.dtype.itemsize)
+        cp = comm_plan(csr, n_row, d_pad=D_pad)
+        chi_eng = pm.engine_chi(cp.moved_entries_per_device("a2a"), D, n_row)
+        rng = np.random.default_rng(0)
+        W1 = np.zeros((D_pad, n_search))
+        W1[:D] = rng.standard_normal((D, n_search))
+        W2 = np.zeros_like(W1)
+        W2[:D] = rng.standard_normal((D, n_search))
+        with mesh:
+            sh = lay.vec_sharding(mesh)
+            w1 = jax.device_put(jnp.asarray(W1), sh)
+            w2 = jax.device_put(jnp.asarray(W2), sh)
+            step = jax.jit(spmv_mod.make_fused_cheb_step(mesh, lay, ell))
+            y = step(w1, w2, 0.7, -0.2)
+            jax.block_until_ready(y)  # compile outside the timing
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                y = step(w1, w2, 0.7, -0.2)
+            jax.block_until_ready(y)
+        t = (time.perf_counter() - t0) / reps
+        samples.append(dict(t=t, D=D, N_p=n_row, n_b=n_search // n_col,
+                            chi=chi_eng, n_nzr=n_nzr, S_d=S_d))
+        if verbose:
+            print(f"[fit-machine] {n_row}x{n_col}: chi_eng={chi_eng:.3f} "
+                  f"t={t * 1e6:.1f}us")
+    fitted = pm.MachineModel.fit(samples, b_m=base.b_m, name="fitted-local")
+    pm.save_machine(fitted, out_path)
+    if verbose:
+        bc = fitted.b_c / 1e9 if fitted.b_c != float("inf") else float("inf")
+        print(f"[fit-machine] fitted b_c={bc:.2f} GB/s kappa={fitted.kappa:.2f} "
+              f"(b_m fixed at {fitted.b_m/1e9:.0f} GB/s) -> {out_path}")
+    return fitted
+
+
+def get_smoke_matrix(eigen: str) -> dict:
+    """Matrix spec of a config's reduced SMOKE instance (fit-machine runs
+    real iterations, so the full paper-scale instance is out of reach)."""
+    from ..configs import get_smoke_config
+
+    return get_smoke_config(eigen)["matrix"]
 
 
 # ------------------------------------------------------------------ main --
@@ -406,10 +577,29 @@ def main(argv=None):
                          "engine (halo all_to_all issued before the local "
                          "contraction — the --spmv-overlap flag of "
                          "repro.launch.solve)")
+    ap.add_argument("--spmv-comm", default="a2a",
+                    choices=["a2a", "compressed"],
+                    help="halo-exchange engine for --eigen cells: 'a2a' "
+                         "(padded all_to_all, chi3-scaled bytes) or "
+                         "'compressed' (neighbor ppermute rounds with "
+                         "per-round padding, chi2-scaled bytes — the "
+                         "'+cmp' shape suffix; --spmv-comm of "
+                         "repro.launch.solve)")
     ap.add_argument("--plan", action="store_true",
                     help="with --eigen: print the χ-driven planner ranking "
                          "(core/planner.py) and the predicted vs HLO-measured "
-                         "all-to-all volume of the lowered cell")
+                         "SpMV collective volume of the lowered cell")
+    ap.add_argument("--fit-machine", action="store_true",
+                    help="time real fused Chebyshev iterations of a small "
+                         "instance across mesh splits on local devices, fit "
+                         "b_c and kappa (MachineModel.fit), and save the "
+                         "calibrated model to --fit-out for "
+                         "`solve --machine <path>` planner rankings")
+    ap.add_argument("--fit-out", default="machine_fit.json",
+                    help="JSON path for the --fit-machine result")
+    ap.add_argument("--machine", default="tpu-v5e",
+                    help="machine model for the --plan ranking: 'tpu-v5e', "
+                         "'meggie', or a JSON path saved by --fit-machine")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None, help="append JSON records here")
@@ -417,9 +607,17 @@ def main(argv=None):
 
     records = []
     try:
+        if args.fit_machine:
+            fit_machine(args.eigen, args.fit_out)
+            return records
         if args.eigen:
+            from ..core import perf_model as pm
+
+            machine = pm.resolve_machine(args.machine)
             records.append(run_eigen(args.eigen, args.layout, args.multi_pod,
-                                     plan=args.plan))
+                                     plan=args.plan,
+                                     spmv_comm=args.spmv_comm,
+                                     machine=machine))
         elif args.all:
             for arch, shape, cell in iter_cells():
                 if cell is None:

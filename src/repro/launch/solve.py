@@ -7,10 +7,13 @@ vector layout (the paper's production entry point).
 
 ``--layout auto`` hands the choice to the χ-driven planner
 (``core/planner.py``): it enumerates every (n_row x n_col) mesh split,
-layout, and overlap-engine option, scores each with the analytic perf
-model from the sparsity pattern alone, prints the ranking, and runs the
+layout, comm engine (padded ``a2a`` vs sparsity-``compressed`` neighbor
+ppermute), and overlap option, scores each with the analytic perf model
+from the sparsity pattern alone, prints the ranking, and runs the
 minimum-predicted-time configuration (``--n-row/--n-col`` are then
-ignored; ``--spmv-overlap`` is decided by the plan).
+ignored; ``--spmv-overlap`` and ``--spmv-comm`` are decided by the
+plan). ``--machine`` points the planner at calibrated constants
+(``dryrun --fit-machine``) instead of the built-in TPU-v5e model.
 
 ``--degraded-ok`` continues with a reduced search space if a column group
 is lost (the vertical layer is fault-isolating: bundles of search vectors
@@ -43,27 +46,32 @@ def parse_params(s: str) -> dict:
 
 
 def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
-          verbose: bool = True, degraded_ok: bool = False):
+          verbose: bool = True, degraded_ok: bool = False,
+          machine=None):
     jax.config.update("jax_enable_x64", True)
     n_dev = len(jax.devices())
     mat = get_family(family, **params)
     if fd.layout == "auto":
-        # χ-driven planner: pick the mesh split AND the overlap engine from
-        # the sparsity pattern before any mesh is built (core/planner.py).
-        # The caller's config is left untouched so it can be reused for
-        # another matrix (the plan depends on the pattern).
+        # χ-driven planner: pick the mesh split AND both SpMV engine axes
+        # (overlap, comm) from the sparsity pattern before any mesh is
+        # built (core/planner.py). The caller's config is left untouched
+        # so it can be reused for another matrix (the plan depends on the
+        # pattern).
+        from ..core import perf_model as pm
         from ..core.planner import plan_layout
 
         plan = plan_layout(mat, n_dev, n_search=fd.n_search,
-                           d_pad=-(-mat.D // n_dev) * n_dev)
+                           d_pad=-(-mat.D // n_dev) * n_dev,
+                           machine=machine or pm.TPU_V5E)
         best = plan.best
         if verbose:
             print(plan.report())
             print(f"[auto] running {best.describe()} "
-                  f"(spmv_overlap={best.overlap})")
+                  f"(spmv_overlap={best.overlap}, spmv_comm={best.comm})")
         n_row, n_col = best.n_row, best.n_col
         # the chosen split realizes the planned layout
-        fd = dataclasses.replace(fd, layout="panel", spmv_overlap=best.overlap)
+        fd = dataclasses.replace(fd, layout="panel", spmv_overlap=best.overlap,
+                                 spmv_comm=best.comm)
     if n_row * n_col > n_dev:
         raise RuntimeError(f"mesh {n_row}x{n_col} needs {n_row*n_col} devices, "
                            f"have {n_dev}")
@@ -109,17 +117,36 @@ def main(argv=None):
                          "pattern (overrides --n-row/--n-col/--spmv-overlap)")
     ap.add_argument("--spmv-overlap", action="store_true",
                     help="split-phase SpMV engine: issue the halo "
-                         "all_to_all first and contract the local ELL block "
+                         "exchange first and contract the local ELL block "
                          "while the bytes are in flight (the dry-run's "
                          "'+ov' layout suffix; T = max(T_comm, T_local) + "
                          "T_halo instead of additive Eq. 12)")
+    ap.add_argument("--spmv-comm", default="a2a",
+                    choices=["a2a", "compressed"],
+                    help="halo-exchange engine: 'a2a' (one all_to_all "
+                         "padded to the global max pair volume — moved "
+                         "bytes scale with chi3) or 'compressed' "
+                         "(neighbor ppermute rounds padded per round, "
+                         "empty pairs skipped — moved bytes ~ chi2; the "
+                         "dry-run's '+cmp' suffix; decided by --layout "
+                         "auto)")
+    ap.add_argument("--machine", default="tpu-v5e",
+                    help="machine model for --layout auto planning: "
+                         "'tpu-v5e', 'meggie', or a path to a JSON model "
+                         "saved by `dryrun --fit-machine` (calibrated "
+                         "b_c/kappa)")
     ap.add_argument("--degraded-ok", action="store_true")
     args = ap.parse_args(argv)
+    from ..core import perf_model as pm
+
+    machine = pm.resolve_machine(args.machine)
     fd = FDConfig(n_target=args.n_target, n_search=args.n_search,
                   target=args.target, tol=args.tol, max_iters=args.max_iters,
-                  layout=args.layout, spmv_overlap=args.spmv_overlap)
+                  layout=args.layout, spmv_overlap=args.spmv_overlap,
+                  spmv_comm=args.spmv_comm)
     res = solve(args.family, parse_params(args.params), fd,
-                args.n_row, args.n_col, degraded_ok=args.degraded_ok)
+                args.n_row, args.n_col, degraded_ok=args.degraded_ok,
+                machine=machine)
     print(f"converged {res.n_converged} eigenpairs in {res.iterations} "
           f"iterations / {res.total_spmvs} SpMVs "
           f"({res.redistributions} redistributions, "

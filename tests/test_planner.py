@@ -14,7 +14,8 @@ from repro.matrices import Exciton, Hubbard, SpinChainXXZ
 
 
 def test_comm_plan_matches_engine():
-    """Pattern-only L and n_vc equal build_dist_ell's, for families & CSR."""
+    """Pattern-only L, n_vc, pair counts, and the compressed neighbor
+    schedule equal build_dist_ell's, for families & CSR."""
     for mat, P in ((SpinChainXXZ(10, 5), 4),
                    (Hubbard(8, 4, U=2.0, ranpot=0.5), 8),
                    (Exciton(L=4), 4)):
@@ -22,13 +23,20 @@ def test_comm_plan_matches_engine():
         D = csr.shape[0]
         D_pad = -(-D // P) * P
         ell = build_dist_ell(csr, P, d_pad=D_pad)
+        nbr = ell.neighbor_plan()
         for src in (mat, csr):
             cp = comm_plan(src, P, d_pad=D_pad)
             assert cp.exact
             assert cp.L == ell.L, (mat.name, cp.L, ell.L)
             assert (cp.n_vc == ell.n_vc).all()
+            assert (cp.pair_counts == np.asarray(ell.pair_counts)).all()
+            assert cp.permute_schedule() == (nbr.shifts, nbr.round_L)
+            assert cp.moved_entries_per_device("compressed") == nbr.H
             nb, S_d = 8, ell.vals.dtype.itemsize
             assert cp.a2a_bytes_per_device(nb, S_d) == P * ell.L * nb * S_d
+            assert cp.permute_bytes_per_device(nb, S_d) == nbr.H * nb * S_d
+            assert cp.permute_bytes_per_device(nb, S_d) <= \
+                cp.a2a_bytes_per_device(nb, S_d)
 
 
 def test_comm_plan_chi_matches_bruteforce():
@@ -97,31 +105,51 @@ def test_planner_picks_pillar_when_it_fits():
 def test_planner_picks_panel_overlap_when_pillar_excluded():
     """Same high-χ matrix, but n_search not divisible by P so the pillar
     does not fit -> panel with the overlap engine wins, and overlap beats
-    every additive candidate at the same split."""
+    the additive candidate of the same split and comm engine."""
     mat = Hubbard(8, 4, U=2.0, ranpot=0.5)
     plan = plan_layout(mat, 8, n_search=12)
     assert all(c.n_col < 8 for c in plan.candidates)
     best = plan.best
     assert best.layout == "panel" and best.overlap, plan.report()
-    by_key = {(c.n_row, c.n_col, c.overlap): c for c in plan.candidates}
-    add = by_key[(best.n_row, best.n_col, False)]
+    by_key = {(c.n_row, c.n_col, c.comm, c.overlap): c
+              for c in plan.candidates}
+    add = by_key[(best.n_row, best.n_col, best.comm, False)]
     assert best.t_pass < add.t_pass
 
 
 def test_planner_ranking_is_model_consistent():
-    """Candidate times reproduce the perf model they claim to evaluate."""
+    """Candidate times reproduce the perf model fed each comm engine's
+    exact wire volume (engine_chi of the comm_plan bytes)."""
     mat = SpinChainXXZ(10, 5)
     n_nzr = estimate_nnzr(mat)
     plan = plan_layout(mat, 8, n_search=16, degree=50)
     assert plan.degree == 50
     for c in plan.candidates:
+        if c.n_row > 1:
+            cp = comm_plan(mat, c.n_row)
+            moved = cp.moved_entries_per_device(c.comm)
+            assert c.chi_eng == pytest.approx(
+                pm.engine_chi(moved, mat.D, c.n_row))
+            assert c.comm_bytes_per_device == cp.comm_bytes_per_device(
+                c.comm, plan.n_search // c.n_col, mat.S_d)
+        else:
+            assert c.chi_eng == 0.0 and c.comm_bytes_per_device == 0
         kw = dict(D=mat.D, N_p=c.n_row, n_b=plan.n_search // c.n_col,
-                  chi=c.chi1, n_nzr=n_nzr, S_d=mat.S_d)
+                  chi=c.chi_eng, n_nzr=n_nzr, S_d=mat.S_d)
         t_ref = (pm.cheb_iter_time_overlap(pm.TPU_V5E, **kw) if c.overlap
                  else pm.cheb_iter_time(pm.TPU_V5E, **kw))
         assert c.t_iter == pytest.approx(t_ref)
         assert c.t_pass == pytest.approx(50 * c.t_iter + 2 * c.t_redist)
         assert c.redistribute == (c.n_col > 1)
+    # the compressed engine never predicts MORE wire bytes than a2a at
+    # the same split, and both engine variants are enumerated
+    by_key = {(c.n_row, c.n_col, c.comm, c.overlap): c
+              for c in plan.candidates}
+    assert any(c.comm == "compressed" for c in plan.candidates)
+    for c in plan.candidates:
+        if c.comm == "compressed":
+            a2a = by_key[(c.n_row, c.n_col, "a2a", c.overlap)]
+            assert c.comm_bytes_per_device <= a2a.comm_bytes_per_device
     # stack pays no redistribution
     stack = [c for c in plan.candidates if c.n_col == 1]
     assert stack and all(c.t_redist == 0.0 for c in stack)
@@ -140,15 +168,18 @@ mesh = make_solver_mesh(4, 2)
 cfg = FDConfig(n_target=4, n_search=16, layout="auto")
 with mesh:
     fdd = FilterDiag(mat, mesh, cfg)
-cand = [c for c in fdd.plan.candidates
-        if (c.n_row, c.n_col) == (4, 2) and not c.overlap][0]
-# the engine operator the (4,2) panel candidate would run: same global
+cands = {c.comm: c for c in fdd.plan.candidates
+         if (c.n_row, c.n_col) == (4, 2) and not c.overlap}
+# the engine operators the (4,2) panel candidates would run: same global
 # padding as FilterDiag (d_pad = ceil(D/8)*8), 4 row shards
 ell42 = build_dist_ell(mat.build_csr(), 4, d_pad=-(-mat.D // 8) * 8)
 engine = ell42.P * ell42.L * (16 // 2) * mat.S_d
-assert cand.a2a_bytes_per_device == engine, (cand.a2a_bytes_per_device,
-                                             engine, ell42.L)
-print("AUTO PLAN PARTITION OK", engine)
+assert cands["a2a"].comm_bytes_per_device == engine, (
+    cands["a2a"].comm_bytes_per_device, engine, ell42.L)
+engine_cmp = ell42.neighbor_plan().H * (16 // 2) * mat.S_d
+assert cands["compressed"].comm_bytes_per_device == engine_cmp, (
+    cands["compressed"].comm_bytes_per_device, engine_cmp)
+print("AUTO PLAN PARTITION OK", engine, engine_cmp)
 """)
     assert "AUTO PLAN PARTITION OK" in out
 
