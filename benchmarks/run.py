@@ -18,12 +18,15 @@ def main() -> None:
                     help="include the 1e8-dimension χ instances (minutes)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table5,fig4,fig5,table3,table4,"
-                         "spmv_overlap,spmv_comm,planner,roofline")
+                         "spmv_overlap,spmv_comm,spmv_schedule,planner,"
+                         "roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable perf artifact (e.g. "
                          "BENCH_spmv.json): per family x engine predicted "
                          "vs HLO-measured bytes and wall time, plus the "
-                         "CSV rows")
+                         "CSV rows. An existing artifact is merged, not "
+                         "clobbered: records of tables NOT rerun are kept, "
+                         "records of rerun tables are replaced")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -38,30 +41,55 @@ def main() -> None:
         "table4": tables.table4_fd_end_to_end,
         "spmv_overlap": tables.spmv_overlap,
         "spmv_comm": tables.spmv_comm,
+        "spmv_schedule": tables.spmv_schedule,
         "planner": tables.planner_table,
         "roofline": tables.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     rows = []
+    row_bench = []  # which bench produced each row (for the --json merge)
     for name, fn in benches.items():
         if name in only:
-            rows.extend(fn())
+            new = fn()
+            rows.extend(new)
+            row_bench.extend([name] * len(new))
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
+        ran = sorted(only & set(benches))
+        records = list(tables.RECORDS)
+        out_rows = [{"bench": b, "name": n, "us_per_call": u, "derived": d}
+                    for b, (n, u, d) in zip(row_bench, rows)]
+        benches_out = set(ran)
+        if os.path.exists(args.json):
+            # merge with the existing trajectory artifact: records AND
+            # rows of benches that were not rerun are kept, those of
+            # rerun benches are replaced (rows predating the per-row
+            # `bench` tag cannot be attributed and are dropped)
+            try:
+                prev = json.load(open(args.json))
+            except (OSError, ValueError):
+                prev = None
+            if prev and prev.get("schema") == "bench-spmv/v1":
+                rerun = {r.get("table") for r in records} | set(ran)
+                records = [r for r in prev.get("records", [])
+                           if r.get("table") not in rerun] + records
+                out_rows = [r for r in prev.get("rows", [])
+                            if r.get("bench") not in rerun | {None}] + out_rows
+                benches_out |= set(prev.get("benches", []))
         artifact = {
             "schema": "bench-spmv/v1",
             "generated_unix": int(time.time()),
-            "benches": sorted(only & set(benches)),
-            "records": tables.RECORDS,
-            "rows": [{"name": n, "us_per_call": u, "derived": d}
-                     for n, u, d in rows],
+            "benches": sorted(benches_out),
+            "records": records,
+            "rows": out_rows,
         }
         with open(args.json, "w") as f:
             json.dump(artifact, f, indent=1)
-        print(f"[bench] wrote {len(tables.RECORDS)} records + "
-              f"{len(rows)} rows -> {args.json}")
+        print(f"[bench] wrote {len(records)} records "
+              f"({len(tables.RECORDS)} new) + {len(out_rows)} rows "
+              f"-> {args.json}")
 
 
 if __name__ == "__main__":

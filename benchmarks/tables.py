@@ -361,37 +361,22 @@ print(f"HALO_FRAC {ell.halo_nnz_fraction:.4f}")
     return rows
 
 
-def spmv_comm():
-    """§Compressed engine: padded a2a vs sparsity-compressed neighbor
-    ppermute across a structured and a comm-imbalanced family.
-
-    For each family x engine the table shows the pattern-predicted
-    per-device SpMV exchange bytes (``planner.comm_plan``), the
-    HLO-measured bytes of the compiled engine (must match exactly), and
-    the measured µs/call on 8 fake CPU devices (correctness+overhead
-    check; the byte columns are the hardware story — χ₂- vs χ₃-scaled
-    wire volume). Every row also lands in :data:`RECORDS` for the
-    ``run.py --json`` trajectory artifact."""
-    import subprocess
-    import sys
-
-    rows = []
-    fams = [("spinchain", "SpinChainXXZ(12, 6)"),
-            ("roadnet", "RoadNet(n=4000, w=2, m=256, k=4)")]
-    print("\n=== SpMV comm engines (8 fake devices, panel 4x2) ===")
-    print(f"{'family':10s} {'engine':8s} {'pred B/dev':>11s} {'meas B/dev':>11s} "
-          f"{'us/call':>9s} {'imb':>5s}")
-    script_tmpl = """
+#: Shared harness of the spmv_comm / spmv_schedule tables: compile every
+#: requested make_spmv engine on 8 fake CPU devices (panel 4x2), HLO-parse
+#: the collective bytes, time the call, and assert all engines agree with
+#: the first one. ``engines`` rows are (name, comm, schedule, overlap).
+_ENGINE_BENCH_SCRIPT = """
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import time
 import numpy as np
 import jax, jax.numpy as jnp
 jax.config.update('jax_enable_x64', True)
-from repro.matrices import RoadNet, SpinChainXXZ
+from repro.matrices import HubNet, RoadNet, SpinChainXXZ
 from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
 from repro.launch.hlo_analysis import analyze_hlo
 mat = {family}
+engines = {engines}
 csr = mat.build_csr()
 D = csr.shape[0]
 mesh = make_solver_mesh(4, 2)
@@ -403,10 +388,9 @@ X = np.zeros((D_pad, 8)); X[:D] = rng.standard_normal((D, 8))
 ys = {{}}
 with mesh:
     Xs = jax.device_put(jnp.asarray(X), lay.vec_sharding(mesh))
-    for name, comm, ov in (("a2a", "a2a", False), ("a2a+ov", "a2a", True),
-                           ("cmp", "compressed", False),
-                           ("cmp+ov", "compressed", True)):
-        f = jax.jit(make_spmv(mesh, lay, ell, comm=comm, overlap=ov))
+    for name, comm, sched, ov in engines:
+        f = jax.jit(make_spmv(mesh, lay, ell, comm=comm, schedule=sched,
+                              overlap=ov))
         c = f.lower(Xs).compile()
         h = analyze_hlo(c.as_text())
         meas = int(h.coll_breakdown["all-to-all"]
@@ -419,20 +403,67 @@ with mesh:
         jax.block_until_ready(y)
         ys[name] = np.asarray(y)
         print(f"ROW {{name}} {{(time.perf_counter() - t0) / n * 1e6:.1f}} {{meas}}")
-for name in ("a2a+ov", "cmp", "cmp+ov"):
-    assert np.abs(ys[name] - ys["a2a"]).max() < 1e-11, name
+ref = engines[0][0]
+for name, *_ in engines[1:]:
+    assert np.abs(ys[name] - ys[ref]).max() < 1e-11, name
 print("AGREE OK")
 """
+
+
+def _measure_spmv_engines(ctor: str, engines, table: str, label: str):
+    """Run :data:`_ENGINE_BENCH_SCRIPT` for one matrix-ctor string and
+    return ``{engine_name: (us_per_call, measured_bytes)}``, or ``None``
+    on subprocess failure (already printed). The ctor string is the
+    single source of truth for the instance: it is pasted into the
+    measuring subprocess AND evaluated by the caller for the host-side
+    prediction, so the two sides can never diverge."""
+    import subprocess
+    import sys
+
     env = dict(os.environ, PYTHONPATH=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
     env.pop("XLA_FLAGS", None)
+    script = _ENGINE_BENCH_SCRIPT.format(family=ctor,
+                                         engines=repr(list(engines)))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    if r.returncode != 0:
+        print(f"{table} subprocess failed for {label}:\n{r.stderr[-1500:]}")
+        return None
+    assert "AGREE OK" in r.stdout
+    out = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW "):
+            _, name, us, meas = line.split()
+            out[name] = (float(us), int(meas))
+    return out
+
+
+def spmv_comm():
+    """§Compressed engine: padded a2a vs sparsity-compressed neighbor
+    ppermute across a structured and a comm-imbalanced family.
+
+    For each family x engine the table shows the pattern-predicted
+    per-device SpMV exchange bytes (``planner.comm_plan``), the
+    HLO-measured bytes of the compiled engine (must match exactly), and
+    the measured µs/call on 8 fake CPU devices (correctness+overhead
+    check; the byte columns are the hardware story — χ₂- vs χ₃-scaled
+    wire volume). Every row also lands in :data:`RECORDS` for the
+    ``run.py --json`` trajectory artifact."""
+    rows = []
+    fams = [("spinchain", "SpinChainXXZ(12, 6)"),
+            ("roadnet", "RoadNet(n=4000, w=2, m=256, k=4)")]
+    engines = [("a2a", "a2a", "cyclic", False),
+               ("a2a+ov", "a2a", "cyclic", True),
+               ("cmp", "compressed", "cyclic", False),
+               ("cmp+ov", "compressed", "cyclic", True)]
+    print("\n=== SpMV comm engines (8 fake devices, panel 4x2) ===")
+    print(f"{'family':10s} {'engine':8s} {'pred B/dev':>11s} {'meas B/dev':>11s} "
+          f"{'us/call':>9s} {'imb':>5s}")
     from repro.core.metrics import chi_metrics
     from repro.core.planner import comm_plan
     from repro.matrices import RoadNet, SpinChainXXZ
 
-    # the ctor string is the single source of truth for each instance:
-    # it is pasted into the measuring subprocess AND evaluated here for
-    # the host-side prediction, so the two sides can never diverge
     ctors = {"RoadNet": RoadNet, "SpinChainXXZ": SpinChainXXZ}
     for label, ctor in fams:
         mat = eval(ctor, {"__builtins__": {}}, ctors)
@@ -441,28 +472,21 @@ print("AGREE OK")
         chim = chi_metrics(mat, 4)
         pred = {"a2a": cp.a2a_bytes_per_device(4, 8),
                 "compressed": cp.permute_bytes_per_device(4, 8)}
-        r = subprocess.run([sys.executable, "-c",
-                            script_tmpl.format(family=ctor)], env=env,
-                           capture_output=True, text=True, timeout=900)
-        if r.returncode != 0:
-            print(f"spmv_comm subprocess failed for {label}:\n{r.stderr[-1500:]}")
+        meas_by_eng = _measure_spmv_engines(ctor, engines, "spmv_comm", label)
+        if meas_by_eng is None:
             rows.append((f"spmv_comm_{label}", 0.0, "status=fail"))
             continue
-        assert "AGREE OK" in r.stdout
-        for line in r.stdout.splitlines():
-            if not line.startswith("ROW "):
-                continue
-            _, name, us, meas = line.split()
+        for name, (us, meas) in meas_by_eng.items():
             p = pred["compressed" if name.startswith("cmp") else "a2a"]
-            assert int(meas) == p, (label, name, meas, p)
-            print(f"{label:10s} {name:8s} {p:11d} {int(meas):11d} "
-                  f"{float(us):9.1f} {chim.imbalance:5.2f}")
-            rows.append((f"spmv_comm_{label}_{name}", float(us),
+            assert meas == p, (label, name, meas, p)
+            print(f"{label:10s} {name:8s} {p:11d} {meas:11d} "
+                  f"{us:9.1f} {chim.imbalance:5.2f}")
+            rows.append((f"spmv_comm_{label}_{name}", us,
                          f"pred={p} meas={meas}"))
             RECORDS.append(dict(
                 table="spmv_comm", family=label, engine=name,
-                pred_bytes_per_device=int(p), meas_bytes_per_device=int(meas),
-                us_per_call=float(us), chi2=chim.chi2, chi3=chim.chi3,
+                pred_bytes_per_device=int(p), meas_bytes_per_device=meas,
+                us_per_call=us, chi2=chim.chi2, chi3=chim.chi3,
                 imbalance=chim.imbalance))
         ratio = pred["a2a"] / max(pred["compressed"], 1)
         print(f"{label:10s} compressed moves {ratio:.2f}x fewer bytes "
@@ -492,6 +516,75 @@ print("AGREE OK")
     return rows
 
 
+def spmv_schedule():
+    """§Schedule axis: cyclic vs matching rounds of the compressed halo
+    exchange, per family, next to the padded a2a reference.
+
+    For each family x schedule the table shows the pattern-predicted
+    per-device SpMV exchange bytes (``planner.comm_plan`` with the
+    engine's own ``neighbor_schedule`` rounds), the HLO-measured bytes
+    of the compiled engine (must match exactly), the round count, and
+    the measured µs/call on 8 fake CPU devices (correctness+overhead
+    check; the byte columns are the hardware story — on the
+    hub-and-spoke HubNet family the cyclic rounds saturate toward the
+    a2a volume while a matching packs all corridors into O(1) rounds).
+    Every row also lands in :data:`RECORDS` for the ``run.py --json``
+    trajectory artifact."""
+    rows = []
+    fams = [("spinchain", "SpinChainXXZ(12, 6)"),
+            ("roadnet", "RoadNet(n=4000, w=2, m=256, k=4)"),
+            ("hubnet", "HubNet(n=4000, w=2, h=4, m=192, k=4)")]
+    engines = [("a2a", "a2a", "cyclic", False),
+               ("cyc", "compressed", "cyclic", False),
+               ("mat", "compressed", "matching", False)]
+    print("\n=== SpMV neighbor schedules (8 fake devices, panel 4x2) ===")
+    print(f"{'family':10s} {'engine':8s} {'rounds':>6s} {'pred B/dev':>11s} "
+          f"{'meas B/dev':>11s} {'us/call':>9s}")
+    from repro.core.metrics import chi_metrics
+    from repro.core.planner import comm_plan
+    from repro.matrices import HubNet, RoadNet, SpinChainXXZ
+
+    ctors = {"HubNet": HubNet, "RoadNet": RoadNet,
+             "SpinChainXXZ": SpinChainXXZ}
+    for label, ctor in fams:
+        mat = eval(ctor, {"__builtins__": {}}, ctors)
+        D_pad = -(-mat.D // 8) * 8
+        cp = comm_plan(mat, 4, d_pad=D_pad)
+        chim = chi_metrics(mat, 4)
+        pred = {"a2a": cp.a2a_bytes_per_device(4, 8)}
+        n_rounds = {"a2a": 1}
+        for name, sched in (("cyc", "cyclic"), ("mat", "matching")):
+            pred[name] = cp.permute_bytes_per_device(4, 8, sched)
+            n_rounds[name] = len(cp.permute_schedule(sched)[0])
+        meas_by_eng = _measure_spmv_engines(ctor, engines, "spmv_schedule",
+                                            label)
+        if meas_by_eng is None:
+            rows.append((f"spmv_schedule_{label}", 0.0, "status=fail"))
+            continue
+        for name, (us, meas) in meas_by_eng.items():
+            p = pred[name]
+            assert meas == p, (label, name, meas, p)
+            print(f"{label:10s} {name:8s} {n_rounds[name]:6d} {p:11d} "
+                  f"{meas:11d} {us:9.1f}")
+            rows.append((f"spmv_schedule_{label}_{name}", us,
+                         f"pred={p} meas={meas} rounds={n_rounds[name]}"))
+            RECORDS.append(dict(
+                table="spmv_schedule", family=label, engine=name,
+                schedule={"a2a": None, "cyc": "cyclic",
+                          "mat": "matching"}[name],
+                rounds=n_rounds[name], pred_bytes_per_device=int(p),
+                meas_bytes_per_device=meas, us_per_call=us,
+                chi2=chim.chi2, chi3=chim.chi3,
+                imbalance=chim.imbalance))
+        win = pred["cyc"] / max(pred["mat"], 1)
+        print(f"{label:10s} matching moves {win:.2f}x fewer bytes than "
+              f"cyclic ({n_rounds['mat']} vs {n_rounds['cyc']} rounds)")
+        rows.append((f"spmv_schedule_{label}_win", 0.0,
+                     f"cyc_over_mat={win:.2f} "
+                     f"rounds={n_rounds['cyc']}->{n_rounds['mat']}"))
+    return rows
+
+
 def planner_table():
     """§Planner: χ-driven layout choice across the bundled matrix families.
 
@@ -502,7 +595,8 @@ def planner_table():
     instance (``exact_comm=False``: χ via the family's streamed/structured
     n_vc, no per-pair scan) — the path used at paper scale (D ~ 1e8)."""
     from repro.core.planner import plan_layout
-    from repro.matrices import Exciton, Hubbard, RoadNet, SpinChainXXZ, TopIns
+    from repro.matrices import (Exciton, Hubbard, HubNet, RoadNet,
+                                SpinChainXXZ, TopIns)
 
     rows = []
     P, Ns = 32, 64
@@ -512,6 +606,7 @@ def planner_table():
         ("spinchain", SpinChainXXZ(14, 7), {}),
         ("topins", TopIns(12), {}),
         ("roadnet", RoadNet(), {}),
+        ("hubnet", HubNet(), {}),
         ("matfree", Exciton(L=24), dict(exact_comm=False)),
     ]
     print(f"\n=== Planner: chi-driven layout choice (P={P}, Ns={Ns}, v5e) ===")
@@ -527,11 +622,13 @@ def planner_table():
         print(f"{label:10s} {plan.D:9d} {b.describe():16s} {b.chi1:6.2f} "
               f"{b.t_pass * 1e3:11.3f} {plan.speedup(b):8.2f}  {others}")
         rows.append((f"planner_{label}", us,
-                     f"best={b.describe()} comm={b.comm} ov={int(b.overlap)} "
+                     f"best={b.describe()} comm={b.comm} sched={b.schedule} "
+                     f"ov={int(b.overlap)} "
                      f"chi1={b.chi1:.2f} s={plan.speedup(b):.2f}"))
         RECORDS.append(dict(
             table="planner", family=label, best=b.describe(), comm=b.comm,
-            overlap=b.overlap, chi1=b.chi1, chi_eng=b.chi_eng,
+            schedule=b.schedule, overlap=b.overlap, chi1=b.chi1,
+            chi_eng=b.chi_eng,
             pred_bytes_per_device=b.comm_bytes_per_device,
             t_pass_s=b.t_pass, speedup=plan.speedup(b), plan_us=us))
     return rows

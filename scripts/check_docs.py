@@ -4,13 +4,21 @@
 Verifies, without importing any heavy modules:
 
   1. every module under ``src/repro/`` has a module docstring,
-  2. every ``--flag`` used by a README bash snippet exists in the argparse
-     parser of the CLI the snippet invokes (``repro.launch.solve``,
-     ``repro.launch.dryrun``, ``benchmarks.run``),
+  2. every ``--flag`` used by a README or ``docs/`` bash snippet exists
+     in the argparse parser of the CLI the snippet invokes
+     (``repro.launch.solve``, ``repro.launch.dryrun``,
+     ``benchmarks.run``),
   3. every repo-relative ``*.py``/``*.md`` path referenced in the README
-     exists,
+     or ``docs/`` exists,
   4. every function/class name the README's cross-reference table pins to
-     a file is actually defined in that file.
+     a file is actually defined in that file,
+  5. every ``FDConfig`` field and every ``--flag`` declared by the
+     ``solve``/``dryrun`` CLIs is documented somewhere in the README or
+     ``docs/`` — a field or flag added without documentation fails the
+     gate,
+  6. every internal markdown cross-link in ``docs/`` (and README links
+     into ``docs/``) resolves: the target file exists and, when an
+     ``#anchor`` is given, a heading with that GitHub slug exists in it.
 
 Run standalone::
 
@@ -27,6 +35,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 README = os.path.join(ROOT, "README.md")
+DOCS_DIR = os.path.join(ROOT, "docs")
 
 #: README CLI module -> source file holding its argparse definitions
 CLI_SOURCES = {
@@ -41,11 +50,26 @@ CLI_SOURCES = {
 #: dropped from either side fails the gate.
 REQUIRED_FLAGS = {
     "repro.launch.solve": ["--layout", "--spmv-overlap", "--spmv-comm",
-                           "--machine"],
+                           "--spmv-schedule", "--machine"],
     "repro.launch.dryrun": ["--layout", "--plan", "--spmv-comm",
-                            "--fit-machine"],
+                            "--spmv-schedule", "--fit-machine"],
     "benchmarks.run": ["--only", "--json"],
 }
+
+#: CLIs whose *every* declared flag must be documented in README/docs
+#: (check 5). benchmarks.run is covered by REQUIRED_FLAGS only.
+DOCUMENTED_CLIS = ("repro.launch.solve", "repro.launch.dryrun")
+
+
+def _doc_files() -> list[tuple[str, str]]:
+    """(path, text) of README.md plus every docs/*.md."""
+    out = [(README, open(README).read())]
+    if os.path.isdir(DOCS_DIR):
+        for fn in sorted(os.listdir(DOCS_DIR)):
+            if fn.endswith(".md"):
+                path = os.path.join(DOCS_DIR, fn)
+                out.append((path, open(path).read()))
+    return out
 
 
 def check_module_docstrings() -> list[str]:
@@ -87,22 +111,22 @@ def _declared_flags(src_path: str) -> set[str]:
 
 
 def check_readme_flags() -> list[str]:
-    """README bash snippets may only use flags the CLIs declare."""
+    """README and docs/ bash snippets may only use flags the CLIs declare."""
     errors = []
-    with open(README) as f:
-        text = f.read()
-    for cmd in _bash_commands(text):
-        target = next((m for m in CLI_SOURCES
-                       if f"-m {m}" in cmd or CLI_SOURCES[m] in cmd), None)
-        if target is None:
-            continue
-        declared = _declared_flags(CLI_SOURCES[target])
-        # flags preceded by whitespace (so VAR=--xla... env values don't count)
-        for flag in re.findall(r"(?<=\s)--[a-zA-Z][\w-]*", cmd):
-            if flag not in declared:
-                errors.append(
-                    f"README: `{flag}` not a flag of {target} "
-                    f"(declared: {sorted(declared)})")
+    for path, text in _doc_files():
+        label = os.path.relpath(path, ROOT)
+        for cmd in _bash_commands(text):
+            target = next((m for m in CLI_SOURCES
+                           if f"-m {m}" in cmd or CLI_SOURCES[m] in cmd), None)
+            if target is None:
+                continue
+            declared = _declared_flags(CLI_SOURCES[target])
+            # flags preceded by whitespace (so VAR=--xla... env values don't count)
+            for flag in re.findall(r"(?<=\s)--[a-zA-Z][\w-]*", cmd):
+                if flag not in declared:
+                    errors.append(
+                        f"{label}: `{flag}` not a flag of {target} "
+                        f"(declared: {sorted(declared)})")
     return errors
 
 
@@ -131,14 +155,15 @@ def check_required_flags() -> list[str]:
 
 
 def check_readme_paths() -> list[str]:
-    """Repo-relative paths in backticks must exist."""
+    """Repo-relative paths in backticks must exist (README and docs/)."""
     errors = []
-    with open(README) as f:
-        text = f.read()
-    for ref in set(re.findall(r"`((?:src|benchmarks|tests|scripts|examples)"
-                              r"/[\w/.\-]+?\.(?:py|md))`", text)):
-        if not os.path.exists(os.path.join(ROOT, ref)):
-            errors.append(f"README: referenced path `{ref}` does not exist")
+    for path, text in _doc_files():
+        label = os.path.relpath(path, ROOT)
+        for ref in set(re.findall(
+                r"`((?:src|benchmarks|tests|scripts|examples|docs)"
+                r"/[\w/.\-]+?\.(?:py|md))`", text)):
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                errors.append(f"{label}: referenced path `{ref}` does not exist")
     return errors
 
 
@@ -165,6 +190,90 @@ def check_readme_symbols() -> list[str]:
     return errors
 
 
+def check_config_and_flags_documented() -> list[str]:
+    """Every FDConfig field and every flag the solve/dryrun CLIs declare
+    must appear somewhere in README.md or docs/ — adding a config knob
+    without documenting it fails the gate."""
+    errors = []
+    corpus = "\n".join(text for _, text in _doc_files())
+    fd_path = os.path.join(ROOT, "src", "repro", "core", "filter_diag.py")
+    with open(fd_path) as f:
+        tree = ast.parse(f.read())
+    fields: list[str] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "FDConfig":
+            fields = [st.target.id for st in node.body
+                      if isinstance(st, ast.AnnAssign)]
+    if not fields:
+        errors.append("check_docs: FDConfig dataclass not found in "
+                      "src/repro/core/filter_diag.py")
+    for field in fields:
+        if not re.search(rf"\b{re.escape(field)}\b", corpus):
+            errors.append(f"docs: FDConfig field `{field}` appears nowhere "
+                          "in README.md or docs/")
+    for module in DOCUMENTED_CLIS:
+        for flag in sorted(_declared_flags(CLI_SOURCES[module])):
+            if flag not in corpus:
+                errors.append(f"docs: {module} flag `{flag}` appears "
+                              "nowhere in README.md or docs/")
+    return errors
+
+
+def _heading_slugs(text: str) -> set[str]:
+    """GitHub anchor slugs of every markdown heading in ``text``:
+    fenced code blocks are skipped (a ``# comment`` inside one is not a
+    heading) and duplicate headings get the ``-1``, ``-2``… suffixes
+    GitHub appends to later occurrences."""
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in text.splitlines():
+        if re.match(r"\s*(```|~~~)", line):
+            in_fence = not in_fence
+            continue
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m and not in_fence:
+            h = m.group(1).strip().lower()
+            h = re.sub(r"[^\w\s-]", "", h)
+            slug = re.sub(r"\s", "-", h)
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_docs_links() -> list[str]:
+    """Internal markdown links in README/docs/ resolve: the target file
+    exists and a given #anchor matches a heading slug in it."""
+    errors = []
+    texts = {path: text for path, text in _doc_files()}
+    for path, text in texts.items():
+        label = os.path.relpath(path, ROOT)
+        for target in re.findall(r"\[[^\]]*\]\(([^)\s]+)\)", text):
+            if re.match(r"[a-z]+:", target):  # http:, https:, mailto:
+                continue
+            dest, _, anchor = target.partition("#")
+            full = (path if not dest
+                    else os.path.normpath(os.path.join(os.path.dirname(path),
+                                                       dest)))
+            if not os.path.exists(full):
+                errors.append(f"{label}: link target `{target}` does not "
+                              "exist")
+                continue
+            if anchor:
+                if full not in texts:
+                    try:
+                        texts[full] = open(full).read()
+                    except OSError:
+                        errors.append(f"{label}: link target `{target}` "
+                                      "is unreadable")
+                        continue
+                if anchor not in _heading_slugs(texts[full]):
+                    errors.append(f"{label}: anchor `#{anchor}` matches no "
+                                  f"heading in {os.path.relpath(full, ROOT)}")
+    return errors
+
+
 def run_all() -> list[str]:
     errors = []
     errors += check_module_docstrings()
@@ -172,6 +281,8 @@ def run_all() -> list[str]:
     errors += check_required_flags()
     errors += check_readme_paths()
     errors += check_readme_symbols()
+    errors += check_config_and_flags_documented()
+    errors += check_docs_links()
     return errors
 
 
@@ -182,7 +293,8 @@ def main() -> int:
     if errors:
         print(f"[check_docs] FAILED ({len(errors)} problems)")
         return 1
-    print("[check_docs] OK — docstrings, README flags/paths/symbols consistent")
+    print("[check_docs] OK — docstrings, README/docs flags/paths/symbols, "
+          "FDConfig+CLI documentation coverage, and docs links consistent")
     return 0
 
 

@@ -19,7 +19,7 @@ ARCHS = [
     "rwkv6-1.6b",
 ]
 
-EIGEN_CONFIGS = ["exciton200", "hubbard16", "roadnet48k"]
+EIGEN_CONFIGS = ["exciton200", "hubbard16", "roadnet48k", "hubnet48k"]
 
 _MODULES = {
     "deepseek-67b": "deepseek_67b",
@@ -35,6 +35,7 @@ _MODULES = {
     "exciton200": "exciton200",
     "hubbard16": "hubbard16",
     "roadnet48k": "roadnet48k",
+    "hubnet48k": "hubnet48k",
 }
 
 

@@ -15,11 +15,14 @@ The filter layout is picked by ``FDConfig.layout``: an explicit name
 ``"auto"``, which runs the χ-driven planner (``core/planner.py``) over
 the layouts the mesh realizes and adopts the minimum-predicted-time
 configuration — including whether to use the split-phase overlap SpMV
-engine and which halo-exchange engine to run (``FDConfig.spmv_overlap``
-and ``FDConfig.spmv_comm`` are then set from the plan; ``spmv_comm=
-"compressed"`` replaces the padded all_to_all with per-pair-sized
-ppermute rounds). A ``panel_layout`` passed explicitly to ``FilterDiag``
-overrides both.
+engine, which halo-exchange engine to run, and how the compressed
+engine's permute rounds are scheduled (``FDConfig.spmv_overlap``,
+``FDConfig.spmv_comm``, and ``FDConfig.spmv_schedule`` are then set from
+the plan; ``spmv_comm="compressed"`` replaces the padded all_to_all with
+per-pair-sized ppermute rounds, and ``spmv_schedule="matching"`` derives
+those rounds from greedy max-weight matchings instead of cyclic shifts).
+A ``panel_layout`` passed explicitly to ``FilterDiag`` overrides all of
+them.
 """
 from __future__ import annotations
 
@@ -60,6 +63,7 @@ class FDConfig:
     layout: str = "panel"       # filter layout: stack | panel | pillar | auto
     spmv_overlap: bool = False  # split-phase SpMV: hide halo exchange
     spmv_comm: str = "a2a"      # halo exchange: a2a | compressed (ppermute)
+    spmv_schedule: str = "cyclic"  # compressed rounds: cyclic | matching
     dtype: str = "float64"
     seed: int = 7
 
@@ -127,9 +131,10 @@ class FilterDiag:
     # ------------------------------------------------------------------
     def _resolve_layout(self, matrix, mesh: Mesh, cfg: FDConfig) -> Layout:
         """Materialize ``cfg.layout`` on the mesh; ``"auto"`` runs the
-        χ-driven planner over {stack, panel, pillar} × {a2a, compressed}
-        × {overlap on/off} and also decides ``cfg.spmv_overlap`` and
-        ``cfg.spmv_comm``."""
+        χ-driven planner over {stack, panel, pillar} × {a2a,
+        compressed-cyclic, compressed-matching} × {overlap on/off} and
+        also decides ``cfg.spmv_overlap``, ``cfg.spmv_comm``, and
+        ``cfg.spmv_schedule``."""
         from .planner import layout_on_mesh, plan_for_mesh
 
         if cfg.layout == "auto":
@@ -145,6 +150,7 @@ class FilterDiag:
             best = self.plan.best
             cfg.spmv_overlap = best.overlap
             cfg.spmv_comm = best.comm
+            cfg.spmv_schedule = best.schedule
             return layout_on_mesh(mesh, best.layout)
         if cfg.layout in ("stack", "panel", "pillar"):
             return layout_on_mesh(mesh, cfg.layout)
@@ -155,10 +161,12 @@ class FilterDiag:
         mesh, cfg = self.mesh, self.cfg
         self.spmv_stack = make_spmv(mesh, self.stack_layout, self.ell_stack,
                                     overlap=cfg.spmv_overlap,
-                                    comm=cfg.spmv_comm)
+                                    comm=cfg.spmv_comm,
+                                    schedule=cfg.spmv_schedule)
         self.spmv_panel = (
             make_spmv(mesh, self.panel_layout, self.ell_panel,
-                      overlap=cfg.spmv_overlap, comm=cfg.spmv_comm)
+                      overlap=cfg.spmv_overlap, comm=cfg.spmv_comm,
+                      schedule=cfg.spmv_schedule)
             if self.N_col > 1 else self.spmv_stack
         )
         if cfg.ortho == "tsqr":

@@ -14,10 +14,14 @@ The χ argument of both iteration-time models is the *effective* χ of a
 concrete comm engine — the vector entries it actually moves per device,
 normalized like Eq. 8 (:func:`engine_chi`). The padded all_to_all engine
 moves ``P·L`` entries (χ₃-scaled: every pair pays the global max pair
-volume); the compressed neighbor-permute engine moves ``H = Σ_k L_k``
-(χ₂-scaled: per-round padding, empty pairs skipped). Feeding each
-engine's exact wire volume through the same Eq. 12 / overlap form is how
-the planner ranks the {a2a, compressed} × {additive, overlap} grid.
+volume); the compressed neighbor-permute engine moves ``H = Σ_r L_r``,
+the round-sum of its schedule's per-round pads (cyclic-shift or
+greedy-matching rounds, ``spmv.neighbor_schedule``) — equivalently the
+round-sum cost ``T_comm = Σ_r L_r·S_d/b_c`` of
+:func:`schedule_comm_time`. Feeding each engine's exact wire volume
+through the same Eq. 12 / overlap form is how the planner ranks the
+{a2a, compressed-cyclic, compressed-matching} × {additive, overlap}
+grid.
 
 ``MachineModel.fit`` calibrates b_c and κ from measured iteration times
 (``dryrun --fit-machine``) so rankings can use the machine actually under
@@ -31,6 +35,7 @@ import json
 import numpy as np
 
 __all__ = ["MachineModel", "MEGGIE", "TPU_V5E", "engine_chi",
+           "schedule_comm_time",
            "cheb_iter_time", "cheb_iter_time_overlap", "overlap_speedup",
            "panel_speedup", "redistribution_factor", "amortized_speedup",
            "break_even_degree", "pillar_condition", "parallel_efficiency_bound",
@@ -152,6 +157,24 @@ def engine_chi(moved_entries_per_device: float, D: int, N_p: int) -> float:
     if N_p <= 1:
         return 0.0
     return moved_entries_per_device * N_p / D
+
+
+def schedule_comm_time(m: MachineModel, round_L, *, n_b: int,
+                       S_d: int) -> float:
+    """Round-sum communication cost of a neighbor-permute schedule:
+
+        T_comm = Σ_r L_r · n_b · S_d / b_c
+
+    where ``round_L[r]`` is round r's pad (the max scheduled pair volume,
+    ``spmv.neighbor_schedule``) — each round's permute moves exactly
+    ``L_r · n_b · S_d`` operand bytes per device. This is *identical* to
+    the Eq. 12 comm term evaluated at the engine's effective χ:
+    ``engine_chi(H, D, N_p) · S_d / b_c · (n_b · D / N_p)`` with
+    ``H = Σ_r L_r`` — the planner's χ-based ranking and the round-sum
+    view of the schedule cannot disagree (asserted in
+    tests/test_spmv_schedule.py).
+    """
+    return float(sum(round_L)) * n_b * S_d / m.b_c
 
 
 def cheb_iter_time(m: MachineModel, *, D: int, N_p: int, n_b: int, chi: float,

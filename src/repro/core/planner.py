@@ -19,19 +19,27 @@ orthogonal layers of parallelism wins:
               ``all_to_all`` moves ``P·L`` entries per device (χ₃-scaled —
               it physically realizes the imbalance bound), while the
               compressed neighbor-permute engine
-              (``spmv.py comm="compressed"``) moves ``H = Σ_k L_k``
+              (``spmv.py comm="compressed"``) moves ``H = Σ_r L_r``
               (≈ χ₂-scaled, empty pairs skipped) — on comm-imbalanced
               patterns (χ₃/χ₂ > 2–3, e.g. the RoadNet family) the
-              compressed engine wins by that factor.
+              compressed engine wins by that factor,
+  * schedule → *how* the compressed engine derives its permute rounds
+              (``spmv.neighbor_schedule``): ``"cyclic"`` pays one round
+              per nonzero cyclic shift (pad = that shift's max pair),
+              ``"matching"`` extracts greedy max-weight matchings so hot
+              pairs of different shifts share one round's pad — on
+              hub-and-spoke patterns (the HubNet family) the cyclic
+              rounds each carry a full hub corridor while a matching
+              packs them all into O(1) rounds.
 
 This module enumerates candidate configurations — mesh splits
 ``n_row × n_col`` with ``n_row · n_col = P``, vector layouts
-{stack, panel, pillar}, comm engine {a2a, compressed}, overlap on/off,
-redistribution on/off (stack runs redistribution-free; panel/pillar pay
-Eq. 17/18 twice per filter pass, amortized per Eqs. 19–21) — scores each
-with the analytic model fed the **engine-exact** wire bytes predicted by
-:func:`comm_plan`, and returns a ranked :class:`Plan`. It is wired into
-the production entry points:
+{stack, panel, pillar}, comm engine {a2a, compressed-cyclic,
+compressed-matching}, overlap on/off, redistribution on/off (stack runs
+redistribution-free; panel/pillar pay Eq. 17/18 twice per filter pass,
+amortized per Eqs. 19–21) — scores each with the analytic model fed the
+**engine-exact** wire bytes predicted by :func:`comm_plan`, and returns
+a ranked :class:`Plan`. It is wired into the production entry points:
 
   * ``FDConfig(layout="auto")``          → :func:`plan_for_mesh` inside
     ``FilterDiag`` (choice restricted to layouts the given mesh realizes),
@@ -54,7 +62,8 @@ from . import perf_model as pm
 from .layouts import Layout, panel, pillar
 from .metrics import ChiMetrics, chi_from_nvc
 from .redistribute import redistribution_volume
-from .spmv import Partition, neighbor_schedule
+from .spmv import (SPMV_COMM_ENGINES, SPMV_SCHEDULES, Partition,
+                   neighbor_schedule)
 
 __all__ = [
     "SpmvCommPlan", "Candidate", "Plan", "comm_plan", "exact_comm_default",
@@ -101,7 +110,8 @@ class SpmvCommPlan:
 
     ``pair_counts`` (exact path only) are the true per-pair volumes L_qp,
     from which :meth:`permute_schedule` reproduces the compressed engine's
-    neighbor rounds — :meth:`permute_bytes_per_device` then equals the
+    neighbor rounds for either scheduler (cyclic shifts or greedy
+    matchings) — :meth:`permute_bytes_per_device` then equals the
     HLO-measured per-chip collective-permute volume bit-for-bit. Without
     pair counts the compressed volume is conservatively estimated as
     ``max n_vc`` (the best any per-round-padded schedule can do when one
@@ -115,6 +125,11 @@ class SpmvCommPlan:
     exact: bool
     d_pad: int | None = None
     pair_counts: np.ndarray | None = None  # [P, P] L_qp (sender q -> recv p)
+    #: schedule name -> (perms, round_L) memo — the greedy matching
+    #: decomposition is O(P² log P), and plan_layout asks for it several
+    #: times per candidate
+    _sched_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                           compare=False)
 
     @property
     def chi(self) -> ChiMetrics:
@@ -128,18 +143,25 @@ class SpmvCommPlan:
             return 0
         return self.n_row * self.L * n_b * S_d
 
-    def permute_schedule(self) -> tuple[tuple[int, ...], tuple[int, ...]]:
-        """(shifts, round_L) of the compressed engine: the nonempty cyclic
-        shifts and their per-round pads, via the same
-        ``spmv.neighbor_schedule`` the engine itself uses — predicted and
-        executed schedules cannot diverge."""
+    def permute_schedule(self, schedule: str = "cyclic",
+                         ) -> tuple[tuple[tuple[tuple[int, int], ...], ...],
+                                    tuple[int, ...]]:
+        """(perms, round_L) of the compressed engine under ``schedule``
+        (``"cyclic"`` shifts or greedy ``"matching"`` rounds), via the
+        same ``spmv.neighbor_schedule`` the engine itself uses —
+        predicted and executed schedules cannot diverge."""
         if self.pair_counts is None:
             raise ValueError("permute_schedule needs exact pair counts")
-        return neighbor_schedule(self.pair_counts)
+        if schedule not in self._sched_cache:
+            self._sched_cache[schedule] = neighbor_schedule(
+                self.pair_counts, schedule)
+        return self._sched_cache[schedule]
 
-    def moved_entries_per_device(self, comm: str = "a2a") -> int:
+    def moved_entries_per_device(self, comm: str = "a2a",
+                                 schedule: str = "cyclic") -> int:
         """Vector entries one device moves per SpMV column: ``P·L`` for the
-        padded all_to_all, ``H = Σ_k L_k`` for the compressed schedule.
+        padded all_to_all, ``H = Σ_r L_r`` of the ``schedule`` rounds for
+        the compressed engine.
 
         Without exact pair counts the compressed volume is a *lower bound*
         (``max n_vc`` — what a per-round-padded schedule can never beat);
@@ -153,16 +175,20 @@ class SpmvCommPlan:
         if comm != "compressed":
             raise ValueError(f"unknown comm engine {comm!r}")
         if self.pair_counts is not None:
-            return int(sum(self.permute_schedule()[1]))
+            return int(sum(self.permute_schedule(schedule)[1]))
         return int(self.n_vc.max())  # estimated-path lower bound
 
-    def permute_bytes_per_device(self, n_b: int, S_d: int) -> int:
+    def permute_bytes_per_device(self, n_b: int, S_d: int,
+                                 schedule: str = "cyclic") -> int:
         """Total ppermute operand bytes of one SpMV on each device."""
-        return self.moved_entries_per_device("compressed") * n_b * S_d
+        return self.moved_entries_per_device("compressed", schedule) \
+            * n_b * S_d
 
-    def comm_bytes_per_device(self, comm: str, n_b: int, S_d: int) -> int:
-        """Predicted per-device SpMV exchange bytes of engine ``comm``."""
-        return self.moved_entries_per_device(comm) * n_b * S_d
+    def comm_bytes_per_device(self, comm: str, n_b: int, S_d: int,
+                              schedule: str = "cyclic") -> int:
+        """Predicted per-device SpMV exchange bytes of engine ``comm``
+        with compressed rounds derived by ``schedule``."""
+        return self.moved_entries_per_device(comm, schedule) * n_b * S_d
 
 
 def _remote_cols(matrix, a: int, b: int, chunk: int = 2_000_000) -> np.ndarray:
@@ -253,6 +279,7 @@ class Candidate:
     n_col: int         # vertical layer width (bundle split)
     overlap: bool      # split-phase SpMV engine on
     comm: str          # "a2a" (padded all_to_all) | "compressed" (ppermute)
+    schedule: str      # compressed rounds: "cyclic" | "matching"
     redistribute: bool # pays Eq. 17/18 twice per filter pass (n_col > 1)
     chi1: float        # χ₁ of the filter layout's row partition
     chi2: float
@@ -264,9 +291,15 @@ class Candidate:
 
     @property
     def name(self) -> str:
-        """Layout name with the dry-run's ``+cmp``/``+ov`` engine suffixes."""
-        return (self.layout + ("+cmp" if self.comm == "compressed" else "")
-                + ("+ov" if self.overlap else ""))
+        """Layout name with the dry-run's ``+cmp``/``+mat``/``+ov`` engine
+        suffixes (``+cmp`` = compressed-cyclic, ``+mat`` = compressed with
+        the matching scheduler)."""
+        suffix = ""
+        if self.comm == "compressed":
+            suffix += "+cmp" if self.schedule == "cyclic" else "+mat"
+        if self.overlap:
+            suffix += "+ov"
+        return self.layout + suffix
 
     def describe(self) -> str:
         return f"{self.name}({self.n_row}x{self.n_col})"
@@ -337,6 +370,7 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 machine: pm.MachineModel = pm.TPU_V5E,
                 overlap: tuple[bool, ...] = (False, True),
                 comm: tuple[str, ...] = ("a2a", "compressed"),
+                schedule: tuple[str, ...] = ("cyclic", "matching"),
                 splits=None, S_d: int | None = None,
                 n_nzr: float | None = None, d_pad: int | None = None,
                 exact_comm: bool | None = None,
@@ -346,21 +380,22 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     ``n_devices`` devices with an ``n_search``-wide vector bundle.
 
     ``splits`` restricts the candidate ``(n_row, n_col)`` meshes (default:
-    every n_col dividing both P and n_search). ``overlap`` and ``comm``
-    select which SpMV engines to consider — the full grid is
-    {a2a, compressed} × {additive, overlap}; variants are only generated
-    where they differ from the additive a2a model (χ > 0). Every candidate
-    is scored with its **engine-exact** wire volume: ``comm_plan`` predicts
-    the padded all_to_all's ``P·L`` (χ₃-scaled) or the neighbor-permute
-    schedule's ``H = Σ_k L_k`` (χ₂-scaled) moved entries, which become the
-    effective χ of the iteration-time model (``perf_model.engine_chi``).
-    The ranking key is the predicted time of one filter pass, ``degree``
-    Chebyshev iterations plus two redistributions (Alg. 1 steps 7/9).
-    ``n_vc_by_row`` maps n_row -> precomputed n_vc counts (on
-    ``Partition(D, n_row, d_pad)`` boundaries) and ``comm_plan_by_row``
-    maps n_row -> a full precomputed :class:`SpmvCommPlan` (same
-    ``d_pad``), so callers that already paid the pattern pass — e.g. the
-    dry-run — are not charged again.
+    every n_col dividing both P and n_search). ``overlap``, ``comm``, and
+    ``schedule`` select which SpMV engines to consider — the full grid is
+    {a2a, compressed-cyclic, compressed-matching} × {additive, overlap};
+    variants are only generated where they differ from the additive a2a
+    model (χ > 0). Every candidate is scored with its **engine-exact**
+    wire volume: ``comm_plan`` predicts the padded all_to_all's ``P·L``
+    (χ₃-scaled) or the neighbor-permute schedule's ``H = Σ_r L_r``
+    (per-round pads of the cyclic or matching rounds) moved entries,
+    which become the effective χ of the iteration-time model
+    (``perf_model.engine_chi``). The ranking key is the predicted time of
+    one filter pass, ``degree`` Chebyshev iterations plus two
+    redistributions (Alg. 1 steps 7/9). ``n_vc_by_row`` maps n_row ->
+    precomputed n_vc counts (on ``Partition(D, n_row, d_pad)``
+    boundaries) and ``comm_plan_by_row`` maps n_row -> a full precomputed
+    :class:`SpmvCommPlan` (same ``d_pad``), so callers that already paid
+    the pattern pass — e.g. the dry-run — are not charged again.
     """
     P = int(n_devices)
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
@@ -374,6 +409,11 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                   if P % c == 0 and n_search % c == 0]
     if not splits:
         raise ValueError(f"no (n_row, n_col) split of P={P} divides n_search={n_search}")
+    for sch in set(schedule):
+        # validated up front so a typo is caught even when the comm axis
+        # happens to exclude "compressed"
+        if sch not in SPMV_SCHEDULES:
+            raise ValueError(f"unknown schedule {sch!r}")
 
     plans: dict[int, SpmvCommPlan] = dict(comm_plan_by_row or {})
     cands: list[Candidate] = []
@@ -395,9 +435,16 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
             # spread over P devices) through the inter-process bandwidth
             t_red = (redistribution_volume(D, n_search, P, n_col, S_d)
                      ["bytes_total"] / P / machine.b_c)
+        engines: list[tuple[str, str]] = []
         for eng in sorted(set(comm)):
-            if eng not in ("a2a", "compressed"):
+            if eng not in SPMV_COMM_ENGINES:
                 raise ValueError(f"unknown comm engine {eng!r}")
+            if eng == "a2a":
+                engines.append((eng, "cyclic"))  # schedule axis is a no-op
+                continue
+            for sch in sorted(set(schedule)):
+                engines.append((eng, sch))
+        for eng, sch in engines:
             if eng == "compressed" and chi1 <= 0.0:
                 continue  # no halo exchange: compressed degenerates to a2a
             if eng == "compressed" and cp.pair_counts is None:
@@ -405,7 +452,8 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 # schedule volume — never claim a compressed win the
                 # pattern hasn't proven
                 continue
-            chi_eng = pm.engine_chi(cp.moved_entries_per_device(eng), D, n_row)
+            chi_eng = pm.engine_chi(
+                cp.moved_entries_per_device(eng, sch), D, n_row)
             kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi_eng, n_nzr=n_nzr,
                       S_d=S_d)
             for ov in sorted(set(overlap)):
@@ -415,21 +463,22 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                           else pm.cheb_iter_time(machine, **kw))
                 cands.append(Candidate(
                     layout=name, n_row=n_row, n_col=n_col, overlap=ov,
-                    comm=eng, redistribute=n_col > 1, chi1=chi1,
-                    chi2=chim.chi2, chi_eng=chi_eng,
+                    comm=eng, schedule=sch, redistribute=n_col > 1,
+                    chi1=chi1, chi2=chim.chi2, chi_eng=chi_eng,
                     t_iter=t_iter, t_redist=t_red,
                     t_pass=degree * t_iter + 2.0 * t_red,
                     comm_bytes_per_device=cp.comm_bytes_per_device(
-                        eng, n_b, S_d),
+                        eng, n_b, S_d, sch),
                 ))
     if not cands:
         raise ValueError(
             f"no candidate survived for P={P}, n_search={n_search}, "
             f"overlap={overlap}, splits={splits} — overlap-only planning "
             f"needs at least one split with chi > 0 (n_row > 1)")
-    # ties prefer the simpler engine: a2a before compressed, additive
-    # before overlap, fewer bundles before more
-    cands.sort(key=lambda c: (c.t_pass, c.comm != "a2a", c.overlap, c.n_col))
+    # ties prefer the simpler engine: a2a before compressed, cyclic
+    # rounds before matching, additive before overlap, fewer bundles
+    cands.sort(key=lambda c: (c.t_pass, c.comm != "a2a",
+                              c.schedule != "cyclic", c.overlap, c.n_col))
     return Plan(matrix=_matrix_label(matrix), D=D, n_devices=P,
                 n_search=n_search, degree=degree, machine=machine.name,
                 candidates=tuple(cands))

@@ -49,16 +49,36 @@ the single padded ``all_to_all`` physically realizes the paper's χ₃ — every
 tiny or zero, so each device pays ``P * L`` entries per vector column
 regardless of the imbalance factor χ₃/χ₂. The compressed engine instead
 walks a *neighbor schedule* derived from the per-pair true volumes
-(:meth:`DistEll.neighbor_plan`): one ``lax.ppermute`` round per cyclic
-shift k with a nonzero pair, each round padded only to that round's max
-pair volume L_k = max_q L_{q -> q+k}, and empty rounds skipped entirely.
-Total moved entries drop from ``P * L`` (χ₃-scaled) to ``H = Σ_k L_k``
-(≈ χ₂-scaled when the per-shift volumes are balanced across devices) — the
-node-aware idea of Bienz, Gropp & Olson (arXiv:1612.08060): exchange only
-what the pattern requires, with actual neighbors. The halo columns are
-re-based into the compact round-concatenated receive buffer **without
-re-sorting the ELL slots**, so the accumulation order per output row is
-identical to the a2a engines and all four engines ({a2a, compressed} x
+(:meth:`DistEll.neighbor_plan`): a sequence of ``lax.ppermute`` rounds,
+each round an arbitrary (partial) permutation of the shards padded only
+to that round's max scheduled pair volume, with empty pairs never
+scheduled at all. Total moved entries drop from ``P * L`` (χ₃-scaled) to
+``H = Σ_r L_r`` — the node-aware idea of Bienz, Gropp & Olson
+(arXiv:1612.08060): exchange only what the pattern requires, with actual
+neighbors.
+
+*How the rounds are derived is itself an axis* (:func:`neighbor_schedule`,
+``schedule={"cyclic", "matching"}``):
+
+  * ``"cyclic"`` — one round per cyclic shift k with a nonzero pair; the
+    round's perm is the full shift permutation and its pad is that
+    shift's max pair volume ``L_k = max_q L_{q -> q+k}``. Simple and
+    contention-free, but one hot receiver at shift k taxes all P pairs
+    of that round.
+  * ``"matching"`` — greedy max-weight matchings extracted from the
+    pair-volume matrix (in the spirit of Birkhoff decompositions): hot
+    pairs from *different* shifts share one round's pad whenever their
+    endpoints are disjoint, so ``H_matching <= H_cyclic`` always (the
+    scheduler falls back to the cyclic rounds if greedy packing ever
+    paid more — see :func:`neighbor_schedule`). On hub-and-spoke
+    patterns (``matrices/hubnet.py``) the cyclic schedule pays one
+    full-sized round per hub shift while a matching packs all hub
+    corridors into O(1) rounds.
+
+The halo columns are re-based into the compact round-concatenated
+receive buffer **without re-sorting the ELL slots**, so the accumulation
+order per output row is identical to the a2a engine and all six engine
+combinations ({a2a, compressed-cyclic, compressed-matching} x
 {plain, overlap}) agree bit-for-bit. ``comm="compressed"`` composes with
 ``overlap=True``: the permute rounds launch first, the local block
 contracts while the bytes are in flight, and the halo block contracts
@@ -85,18 +105,45 @@ from .layouts import Layout
 
 __all__ = ["Partition", "DistEll", "NeighborPlan", "build_dist_ell",
            "make_spmv", "make_fused_cheb_step", "neighbor_schedule",
-           "SPMV_COMM_ENGINES"]
+           "SPMV_COMM_ENGINES", "SPMV_SCHEDULES"]
 
 #: Horizontal-layer communication engines of ``make_spmv``.
 SPMV_COMM_ENGINES = ("a2a", "compressed")
 
+#: Round schedulers of the compressed engine (``make_spmv(schedule=...)``).
+SPMV_SCHEDULES = ("cyclic", "matching")
 
-def neighbor_schedule(pair_counts: np.ndarray) -> tuple[tuple[int, ...],
-                                                        tuple[int, ...]]:
-    """(shifts, round_L) of the compressed engine for true per-pair
-    volumes ``pair_counts[q, p]`` (sender q -> receiver p): one round per
-    cyclic shift k with a nonzero pair, padded to that shift's max pair
-    volume ``L_k = max_q L_{q -> (q+k) % P}``, empty shifts skipped.
+
+def neighbor_schedule(pair_counts: np.ndarray, schedule: str = "cyclic",
+                      ) -> tuple[tuple[tuple[tuple[int, int], ...], ...],
+                                 tuple[int, ...]]:
+    """Decompose the pair-volume matrix into the compressed engine's
+    permutation rounds.
+
+    Returns ``(perms, round_L)`` for true per-pair volumes
+    ``pair_counts[q, p]`` (sender q -> receiver p): ``perms[r]`` is round
+    r's ``lax.ppermute`` permutation — a tuple of ``(src, dst)`` device
+    pairs in which every device appears at most once as source and at
+    most once as destination — and ``round_L[r]`` is the round's pad,
+    the max volume among its scheduled nonzero pairs. Every round moves
+    exactly ``round_L[r]`` slots per device, so per-device moved entries
+    are ``H = sum(round_L)``; pairs with zero volume are never given a
+    round of their own.
+
+    ``schedule="cyclic"``: one round per cyclic shift k with at least one
+    nonzero pair; the perm is the full shift permutation
+    ``j -> (j + k) % P`` and the pad is that shift's max pair volume
+    ``L_k = max_q L_{q -> (q+k) % P}`` — one hot receiver taxes all P
+    pairs of its round.
+
+    ``schedule="matching"``: greedy max-weight matching decomposition (in
+    the spirit of Birkhoff decompositions / node-aware SpMV schedules):
+    nonzero pairs are taken in descending volume and placed first-fit
+    into the earliest round where both endpoints are still free, so hot
+    pairs from *different* cyclic shifts share one round's pad instead
+    of each taxing its own round. Should greedy packing ever pay more
+    than the cyclic rounds, the cyclic decomposition is returned
+    instead — ``H_matching <= H_cyclic`` holds by construction.
 
     Single source of truth for the round derivation — the engine
     (``DistEll.neighbor_plan``) and the planner's byte prediction
@@ -106,13 +153,41 @@ def neighbor_schedule(pair_counts: np.ndarray) -> tuple[tuple[int, ...],
     pc = np.asarray(pair_counts)
     P = pc.shape[0]
     q = np.arange(P)
-    shifts, round_L = [], []
+    cyc_perms, cyc_L = [], []
     for k in range(1, P):
         Lk = int(pc[q, (q + k) % P].max())
         if Lk:
-            shifts.append(k)
-            round_L.append(Lk)
-    return tuple(shifts), tuple(round_L)
+            cyc_perms.append(tuple((j, int((j + k) % P)) for j in range(P)))
+            cyc_L.append(Lk)
+    cyclic = (tuple(cyc_perms), tuple(cyc_L))
+    if schedule == "cyclic":
+        return cyclic
+    if schedule != "matching":
+        raise ValueError(f"unknown schedule {schedule!r} "
+                         f"(expected one of {SPMV_SCHEDULES})")
+    # first-fit-descending greedy matchings: the (volume desc, src, dst)
+    # key makes the decomposition deterministic, and descending order
+    # makes each round's pad the volume of the pair that opened it
+    pairs = sorted(((int(pc[s, d]), s, d)
+                    for s in range(P) for d in range(P)
+                    if s != d and pc[s, d]),
+                   key=lambda t: (-t[0], t[1], t[2]))
+    rounds: list[dict] = []
+    for w, s, d in pairs:
+        for r in rounds:
+            if s not in r["src"] and d not in r["dst"]:
+                break
+        else:
+            r = dict(src=set(), dst=set(), pairs=[], L=w)
+            rounds.append(r)
+        r["src"].add(s)
+        r["dst"].add(d)
+        r["pairs"].append((s, d))
+    perms = tuple(tuple(sorted(r["pairs"])) for r in rounds)
+    round_L = tuple(r["L"] for r in rounds)
+    if sum(round_L) > sum(cyc_L):
+        return cyclic  # never schedule worse than the cyclic rounds
+    return perms, round_L
 
 
 # --------------------------------------------------------------------------
@@ -155,26 +230,30 @@ class Partition:
 class NeighborPlan:
     """Static schedule of the compressed (neighbor-permute) halo exchange.
 
-    One ``lax.ppermute`` round per cyclic shift ``k`` in ``shifts``: shard
-    ``p`` sends ``round_L[i]`` slots to shard ``(p + shifts[i]) % P`` and
-    receives as many from ``(p - shifts[i]) % P``. Shifts whose max pair
-    volume is zero are absent — those pairs move no bytes at all. The
-    receive buffers concatenate in round order into a compact halo region
-    of ``H = sum(round_L)`` entries (vs ``P * L`` for the padded a2a).
-    ``cols_halo_nbr`` is only needed by the overlap variant and is filled
-    lazily (``DistEll.neighbor_plan(split_halo=True)``) so the plain
-    compressed engine never materializes the local/halo split.
+    One ``lax.ppermute`` round per entry of ``perms``: round ``r``
+    applies the (partial) permutation ``perms[r]`` — a tuple of
+    ``(src, dst)`` device pairs produced by :func:`neighbor_schedule`
+    (the full shift permutation for the cyclic scheduler, only the
+    matched pairs for the matching scheduler) — with every send segment
+    padded to ``round_L[r]`` slots. A device absent from a round's
+    permutation receives zeros there and references none of those slots.
+    Pairs with zero volume are never scheduled, so they move no bytes at
+    all. The receive buffers concatenate in round order into a compact
+    halo region of ``H = sum(round_L)`` entries (vs ``P * L`` for the
+    padded a2a). ``cols_halo_nbr`` is only needed by the overlap variant
+    and is filled lazily (``DistEll.neighbor_plan(split_halo=True)``) so
+    the plain compressed engine never materializes the local/halo split.
     """
 
-    shifts: tuple[int, ...]   # cyclic shifts with at least one nonempty pair
-    round_L: tuple[int, ...]  # per-round pad: max pair volume at that shift
+    perms: tuple[tuple[tuple[int, int], ...], ...]  # per-round (src, dst)
+    round_L: tuple[int, ...]  # per-round pad: max scheduled pair volume
     send_nbr: jax.Array       # [P, H] int32 local rows to ship, round-major
     cols_nbr: jax.Array       # [P, R, W] combined cols, halo re-based to [R, R+H)
     cols_halo_nbr: jax.Array | None = None  # [P, R, W_halo] split halo cols in [0, H)
 
     @property
     def H(self) -> int:
-        """Per-device moved entries per vector column (Σ_k L_k)."""
+        """Per-device moved entries per vector column (Σ_r L_r)."""
         return int(sum(self.round_L))
 
 
@@ -189,7 +268,8 @@ class DistEll:
     ``build_dist_ell(..., split_halo=True)``). ``pair_counts`` holds the
     true per-(sender, receiver) volumes L_qp behind the comm plan;
     :meth:`neighbor_plan` turns them into the compressed engine's
-    ppermute schedule (lazily, cached).
+    ppermute schedule — cyclic-shift or matching rounds — lazily, cached
+    per scheduler in ``nbr``.
     """
 
     cols: jax.Array  # [P, R, W] int32, remapped columns
@@ -205,7 +285,7 @@ class DistEll:
     vals_loc: jax.Array | None = None   # [P, R, W_loc]
     cols_halo: jax.Array | None = None  # [P, R, W_halo] columns in [0, P*L)
     vals_halo: jax.Array | None = None  # [P, R, W_halo]
-    nbr: NeighborPlan | None = None     # compressed-engine schedule (cached)
+    nbr: dict | None = None  # schedule name -> NeighborPlan (cached)
 
     @property
     def comm_bytes_per_spmv(self) -> int:
@@ -272,26 +352,27 @@ class DistEll:
 
     # ------------------------------------------------- compressed engine --
 
-    def _shift_offsets(self):
-        """(shifts, round_L, off_by_shift): the nonempty cyclic shifts, the
-        per-round pad L_k = max_q L_{q -> (q+k) % P}, and each scheduled
-        shift's offset into the concatenated receive buffer (-1 = skipped).
-        """
+    def _round_offsets(self, schedule: str):
+        """(perms, round_L, off_by_pair): the scheduler's permutation
+        rounds, the per-round pads, and each scheduled (sender, receiver)
+        pair's offset into the concatenated receive buffer (-1 = the pair
+        is in no round, i.e. moves nothing)."""
         if self.pair_counts is None:
             raise ValueError(
                 "compressed engine needs per-pair volumes; rebuild the "
                 "operator with build_dist_ell (pair_counts=None)")
-        shifts, round_L = neighbor_schedule(self.pair_counts)
-        off_by_shift = np.full(self.P, -1, dtype=np.int64)
+        perms, round_L = neighbor_schedule(self.pair_counts, schedule)
+        off_by_pair = np.full((self.P, self.P), -1, dtype=np.int64)
         H = 0
-        for k, Lk in zip(shifts, round_L):
-            off_by_shift[k] = H
+        for perm, Lk in zip(perms, round_L):
+            for s, d in perm:
+                off_by_pair[s, d] = H
             H += Lk
-        return shifts, round_L, off_by_shift
+        return perms, round_L, off_by_pair
 
-    def _rebase_halo(self, cols, vals, halo_mask_base, off_by_shift, base):
+    def _rebase_halo(self, cols, vals, halo_mask_base, off_by_pair, base):
         """Re-base halo columns ``halo_mask_base + q*L + slot`` (a2a receive
-        layout) into ``base + off(shift) + slot`` (compact round buffer),
+        layout) into ``base + off(q, p) + slot`` (compact round buffer),
         touching only stored entries — the ELL slot layout is unchanged, so
         the compressed contraction accumulates in the baseline's order."""
         out = []
@@ -301,49 +382,57 @@ class DistEll:
             if halo.any():
                 c = cp[halo] - halo_mask_base
                 q, slot = c // self.L, c % self.L
-                off = off_by_shift[(p - q) % self.P]
-                assert (off >= 0).all(), "stored halo entry in a skipped round"
+                off = off_by_pair[q, p]
+                assert (off >= 0).all(), "stored halo entry in no round"
                 cp[halo] = (base + off + slot).astype(cp.dtype)
             out.append(cp)
         return np.stack(out)
 
-    def neighbor_plan(self, split_halo: bool = False) -> NeighborPlan:
-        """Compressed-engine schedule + re-based device arrays; cached.
+    def neighbor_plan(self, split_halo: bool = False,
+                      schedule: str = "cyclic") -> NeighborPlan:
+        """Compressed-engine schedule + re-based device arrays; cached per
+        scheduler (``schedule={"cyclic", "matching"}``).
 
-        ``send_nbr[p]`` concatenates, round-major, the first L_k send slots
-        of pair p -> (p+k) % P; ``cols_nbr`` is the combined ELL with halo
-        columns re-based into ``[R, R + H)``. ``split_halo=True``
-        additionally fills ``cols_halo_nbr`` (the split-phase halo block
-        re-based into ``[0, H)``) for the overlap variant — the plain
-        compressed engine skips the split entirely.
+        ``send_nbr[q]`` concatenates, round-major, the first L_r send
+        slots of the pair q is the source of in round r (zeros where q is
+        idle); ``cols_nbr`` is the combined ELL with halo columns re-based
+        into ``[R, R + H)``. ``split_halo=True`` additionally fills
+        ``cols_halo_nbr`` (the split-phase halo block re-based into
+        ``[0, H)``) for the overlap variant — the plain compressed engine
+        skips the split entirely.
         """
         if self.nbr is None:
-            shifts, round_L, off_by_shift = self._shift_offsets()
+            self.nbr = {}
+        plan = self.nbr.get(schedule)
+        if plan is None:
+            perms, round_L, off_by_pair = self._round_offsets(schedule)
             P = self.P
             send_idx = np.asarray(self.send_idx)
             H = int(sum(round_L))
             send_nbr = np.zeros((P, max(H, 1)), dtype=np.int32)
-            for k, Lk in zip(shifts, round_L):
-                off = int(off_by_shift[k])
-                for q in range(P):
-                    send_nbr[q, off:off + Lk] = send_idx[q, (q + k) % P, :Lk]
+            off = 0
+            for perm, Lk in zip(perms, round_L):
+                for s, d in perm:
+                    send_nbr[s, off:off + Lk] = send_idx[s, d, :Lk]
+                off += Lk
             cols_nbr = self._rebase_halo(np.asarray(self.cols),
                                          np.asarray(self.vals),
-                                         self.R, off_by_shift, self.R)
-            self.nbr = NeighborPlan(
-                shifts=shifts, round_L=round_L,
+                                         self.R, off_by_pair, self.R)
+            plan = NeighborPlan(
+                perms=perms, round_L=round_L,
                 send_nbr=jnp.asarray(send_nbr),
                 cols_nbr=jnp.asarray(cols_nbr),
             )
-        if split_halo and self.nbr.cols_halo_nbr is None:
+            self.nbr[schedule] = plan
+        if split_halo and plan.cols_halo_nbr is None:
             _, _, ch, vh = self.split()
-            _, _, off_by_shift = self._shift_offsets()
+            _, _, off_by_pair = self._round_offsets(schedule)
             # split halo cols already sit at base 0 (values q*L + slot)
             ch_nbr = (self._rebase_halo(np.asarray(ch), np.asarray(vh),
-                                        0, off_by_shift, 0)
+                                        0, off_by_pair, 0)
                       if ch.shape[2] else np.asarray(ch))
-            self.nbr.cols_halo_nbr = jnp.asarray(ch_nbr)
-        return self.nbr
+            plan.cols_halo_nbr = jnp.asarray(ch_nbr)
+        return plan
 
 
 def _pattern_chunks(matrix, rows):
@@ -519,20 +608,19 @@ def _local_spmv_overlap(cols_loc, vals_loc, cols_halo, vals_halo, send_idx, x,
     return acc
 
 
-def _halo_exchange_nbr(x, send_nbr, dist_axes, P_row, shifts, round_L):
+def _halo_exchange_nbr(x, send_nbr, dist_axes, perms, round_L):
     """Compressed halo exchange: one ``ppermute`` round per scheduled
-    cyclic shift, each padded to that round's max pair volume only; the
-    received segments concatenate into the compact [H, nb] halo buffer.
-    Every round is independent of the others (and of any contraction), so
+    permutation, each padded to that round's max scheduled pair volume
+    only; the received segments concatenate into the compact [H, nb] halo
+    buffer (devices outside a round's perm receive zeros there). Every
+    round is independent of the others (and of any contraction), so
     async-collective backends pipeline them freely."""
     nb = x.shape[1]
     parts = []
     off = 0
-    for k, Lk in zip(shifts, round_L):
+    for perm, Lk in zip(perms, round_L):
         seg = jnp.take(x, send_nbr[off:off + Lk], axis=0)  # [Lk, nb]
-        parts.append(lax.ppermute(
-            seg, dist_axes,
-            perm=[(j, (j + k) % P_row) for j in range(P_row)]))
+        parts.append(lax.ppermute(seg, dist_axes, perm=list(perm)))
         off += Lk
     if not parts:
         return jnp.zeros((0, nb), dtype=x.dtype)
@@ -548,8 +636,8 @@ def _local_spmv_nbr(cols_nbr, vals, send_nbr, x, dist_axes, P_row, nbr: Neighbor
     R, W = cols_nbr.shape
     nb = x.shape[1]
     if P_row > 1 and nbr.H:
-        halo = _halo_exchange_nbr(x, send_nbr, dist_axes, P_row,
-                                  nbr.shifts, nbr.round_L)
+        halo = _halo_exchange_nbr(x, send_nbr, dist_axes,
+                                  nbr.perms, nbr.round_L)
         xfull = jnp.concatenate([x, halo], axis=0)
     else:
         xfull = x
@@ -572,8 +660,8 @@ def _local_spmv_nbr_overlap(cols_loc, vals_loc, cols_halo_nbr, vals_halo,
     R = cols_loc.shape[0]
     nb = x.shape[1]
     if P_row > 1 and nbr.H:
-        halo = _halo_exchange_nbr(x, send_nbr, dist_axes, P_row,
-                                  nbr.shifts, nbr.round_L)
+        halo = _halo_exchange_nbr(x, send_nbr, dist_axes,
+                                  nbr.perms, nbr.round_L)
     else:
         halo = jnp.zeros((0, nb), dtype=x.dtype)
     if use_kernel:
@@ -589,7 +677,8 @@ def _local_spmv_nbr_overlap(cols_loc, vals_loc, cols_halo_nbr, vals_halo,
 
 
 def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
-              overlap: bool = False, comm: str = "a2a"):
+              overlap: bool = False, comm: str = "a2a",
+              schedule: str = "cyclic"):
     """Return spmv(x) on the global padded array X [D_pad, N_s'] where the
     layout's dist axes shard D and bundle axes shard N_s.
 
@@ -599,17 +688,28 @@ def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = Fa
     ``comm`` picks the horizontal-layer exchange: ``"a2a"`` (one
     all_to_all padded to the global max pair volume L — moved bytes scale
     with χ₃) or ``"compressed"`` (neighbor ppermute rounds padded per
-    round — moved bytes ≈ χ₂-scaled, empty pairs skipped). All four
-    engine combinations agree bit-for-bit."""
+    round — moved bytes ≈ χ₂-scaled, empty pairs skipped). ``schedule``
+    picks how the compressed engine's rounds are derived from the
+    pair-volume matrix: ``"cyclic"`` (one round per nonzero cyclic
+    shift) or ``"matching"`` (greedy max-weight matchings — hot pairs of
+    different shifts share one round's pad; see
+    :func:`neighbor_schedule`). All six engine combinations agree
+    bit-for-bit."""
     if comm not in SPMV_COMM_ENGINES:
         raise ValueError(f"unknown comm engine {comm!r} "
                          f"(expected one of {SPMV_COMM_ENGINES})")
+    if schedule not in SPMV_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r} "
+                         f"(expected one of {SPMV_SCHEDULES})")
+    if comm != "compressed" and schedule != "cyclic":
+        raise ValueError(f"schedule={schedule!r} only applies to "
+                         f"comm='compressed' (got comm={comm!r})")
     dist = layout.dist_axes
     vec_spec = layout.vec_pspec()
     plan_spec = P(dist if dist else None, None, None)
 
     if comm == "compressed":
-        nbr = ell.neighbor_plan(split_halo=overlap)
+        nbr = ell.neighbor_plan(split_halo=overlap, schedule=schedule)
         send_spec = P(dist if dist else None, None)
 
         if overlap:
@@ -695,22 +795,30 @@ def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = Fa
 
 
 def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
-                         overlap: bool = False, comm: str = "a2a"):
+                         overlap: bool = False, comm: str = "a2a",
+                         schedule: str = "cyclic"):
     """w2' = 2a (A w1) + 2b w1 - w2 — the paper's fused SpMV+axpy kernel
     (Alg. 2 step 7), computed in one shard_map body so XLA (or the Pallas
     kernel) fuses the axpy with the contraction (κ = 5, not 6). With
     ``overlap=True`` the SpMV inside uses the split-phase engine; with
-    ``comm="compressed"`` it uses the neighbor-permute halo exchange
-    (same options as :func:`make_spmv`)."""
+    ``comm="compressed"`` it uses the neighbor-permute halo exchange,
+    whose rounds come from the ``schedule`` scheduler (same options as
+    :func:`make_spmv`)."""
     if comm not in SPMV_COMM_ENGINES:
         raise ValueError(f"unknown comm engine {comm!r} "
                          f"(expected one of {SPMV_COMM_ENGINES})")
+    if schedule not in SPMV_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r} "
+                         f"(expected one of {SPMV_SCHEDULES})")
+    if comm != "compressed" and schedule != "cyclic":
+        raise ValueError(f"schedule={schedule!r} only applies to "
+                         f"comm='compressed' (got comm={comm!r})")
     dist = layout.dist_axes
     vec_spec = layout.vec_pspec()
     plan_spec = P(dist if dist else None, None, None)
 
     if comm == "compressed":
-        nbr = ell.neighbor_plan(split_halo=overlap)
+        nbr = ell.neighbor_plan(split_halo=overlap, schedule=schedule)
         send_spec = P(dist if dist else None, None)
 
         if overlap:

@@ -12,6 +12,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --eigen hubbard16 --layout panel+ov --plan
   PYTHONPATH=src python -m repro.launch.dryrun --eigen roadnet48k --layout panel \
       --spmv-comm compressed --plan
+  PYTHONPATH=src python -m repro.launch.dryrun --eigen hubnet48k --layout panel \
+      --spmv-comm compressed --spmv-schedule matching --plan
   PYTHONPATH=src python -m repro.launch.dryrun --fit-machine --fit-out machine_fit.json
 """
 import os
@@ -166,7 +168,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False, verbose=True) -> di
 def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               n_search: int | None = None, verbose=True,
               plan: bool = False, spmv_comm: str = "a2a",
-              machine=None) -> dict:
+              spmv_schedule: str = "cyclic", machine=None) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
     surrogate with the *exact* χ-derived comm plan of the real matrix.
@@ -182,6 +184,10 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     pattern pass is affordable — CSR, small D, or finite ``reach`` — and
     the uniform χ-estimate otherwise), so the HLO-measured
     collective-permute volume is the engine's true wire footprint.
+    ``spmv_schedule`` picks how those rounds are derived — ``"cyclic"``
+    shifts (the ``+cmp`` cell suffix) or greedy ``"matching"`` rounds
+    (``+mat``) — on the exact path; the estimated path always lowers the
+    uniform cyclic rounds.
 
     ``plan=True`` adds the χ-driven planner panel: the full candidate
     ranking (``core/planner.py``) for this matrix on the production mesh,
@@ -239,7 +245,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     W_halo = max(1, -(-int(n_vc.max()) // max(R, 1))) if N_row > 1 else 1
     W_loc = max(1, W - W_halo)
     compressed = spmv_comm == "compressed" and N_row > 1
-    shifts, round_L = (), ()
+    perms, round_L = (), ()
     cp_nbr = None
     if compressed:
         # neighbor schedule of the real pattern: exact per-pair volumes
@@ -251,9 +257,14 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
 
         if exact_comm_default(fam):
             cp_nbr = _comm_plan(fam, N_row, d_pad=D_pad, exact=True)
-            shifts, round_L = cp_nbr.permute_schedule()
+            perms, round_L = cp_nbr.permute_schedule(spmv_schedule)
         else:
-            shifts = tuple(range(1, N_row))
+            # without per-pair counts only the uniform cyclic rounds can
+            # be lowered — relabel so the cell/record never claim a
+            # matching engine that did not run
+            spmv_schedule = "cyclic"
+            perms = tuple(tuple((j, (j + k) % N_row) for j in range(N_row))
+                          for k in range(1, N_row))
             round_L = (L,) * (N_row - 1)
     H = int(sum(round_L))
     ell_spec = dict(
@@ -274,15 +285,17 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     # arguments and are planted pre-split (and pre-scheduled) on the
     # DistEll so the device code never materializes host data from tracers
     def make_nbr(send_nbr, cols_nbr, cols_halo_nbr):
-        return spmv_mod.NeighborPlan(shifts=shifts, round_L=round_L,
+        plan = spmv_mod.NeighborPlan(perms=perms, round_L=round_L,
                                      send_nbr=send_nbr, cols_nbr=cols_nbr,
                                      cols_halo_nbr=cols_halo_nbr)
+        return {spmv_schedule: plan}
 
     def fd_iteration(V, mu, alpha, beta, cols, vals, send_idx, send_nbr):
         nbr = make_nbr(send_nbr, cols, cols) if compressed else None
         ell = spmv_mod.DistEll(cols=cols, vals=vals, send_idx=send_idx,
                                R=R, L=L, P=N_row, D=D, nbr=nbr)
-        spmv = spmv_mod.make_spmv(mesh, panel_l, ell, comm=spmv_comm)
+        spmv = spmv_mod.make_spmv(mesh, panel_l, ell, comm=spmv_comm,
+                                  schedule=spmv_schedule)
         Q, _ = tsqr(V)
         Vp = to_panel(Q)
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
@@ -297,7 +310,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                                cols_halo=cols_halo, vals_halo=vals_halo,
                                nbr=nbr)
         spmv = spmv_mod.make_spmv(mesh, panel_l, ell, overlap=True,
-                                  comm=spmv_comm)
+                                  comm=spmv_comm, schedule=spmv_schedule)
         Q, _ = tsqr(V)
         Vp = to_panel(Q)
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
@@ -338,17 +351,29 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         useful = degree * 2.0 * nnz * n_s * (4 if fam.is_complex else 1) \
             + 2.0 * D * n_s * n_s
         roof = rl.analyze(compiled, useful, mesh.devices.size)
+    cmp_tag = ("" if not compressed
+               else "+mat" if spmv_schedule == "matching" else "+cmp")
     rec = {
         "arch": name,
-        "shape": (f"fd_iter[{layout_name}{'+cmp' if compressed else ''}"
+        "shape": (f"fd_iter[{layout_name}{cmp_tag}"
                   f"{'+ov' if overlap else ''},Ns={n_s},deg={degree}]"),
         "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": mesh.devices.size,
         "status": "ok", "t_lower_s": round(t_lower, 1),
         "t_compile_s": round(t_compile, 1), "memory": mem,
         "model_flops": useful, **roof.row(),
         "chi_comm_plan_L": int(L), "n_vc_max": int(n_vc.max()) if N_row > 1 else 0,
-        "spmv_comm": spmv_comm, "nbr_H": H, "nbr_rounds": len(shifts),
+        "spmv_comm": spmv_comm, "spmv_schedule": spmv_schedule,
+        "nbr_H": H, "nbr_rounds": len(perms),
     }
+    if compressed:
+        # round-sum comm prediction of the lowered schedule (identical to
+        # the χ-path by construction — perf_model.schedule_comm_time),
+        # priced on the same machine model the --plan ranking uses
+        from ..core import perf_model as _pmsc
+
+        rec["t_comm_schedule_s"] = _pmsc.schedule_comm_time(
+            machine or _pmsc.TPU_V5E, round_L, n_b=n_s // max(n_col, 1),
+            S_d=jnp.dtype(dt).itemsize)
     # perf-model per-Chebyshev-iteration prediction for this cell: additive
     # Eq. 12 vs the overlap engine's max(T_comm, T_local) + T_halo — the
     # sweep uses the ratio to see where overlap restores scalability
@@ -443,7 +468,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                   f"ratio full {r_full:.3f} / moved {r_moved:.3f}")
     if verbose:
         print(f"[dryrun-eigen] {name} "
-              f"[{layout_name}{'+cmp' if compressed else ''}"
+              f"[{layout_name}{cmp_tag}"
               f"{'+ov' if overlap else ''}] on {rec['mesh']}: OK "
               f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
         if "overlap_model_speedup" in rec:
@@ -569,7 +594,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
-    ap.add_argument("--eigen", help="paper config dry-run (exciton200/hubbard16)")
+    ap.add_argument("--eigen", help="paper config dry-run (exciton200/"
+                                    "hubbard16/roadnet48k/hubnet48k)")
     ap.add_argument("--layout", default="pillar",
                     choices=["stack", "panel", "pillar", "panel+ov", "stack+ov"],
                     help="eigensolver vector layout for --eigen cells; the "
@@ -585,6 +611,14 @@ def main(argv=None):
                          "per-round padding, chi2-scaled bytes — the "
                          "'+cmp' shape suffix; --spmv-comm of "
                          "repro.launch.solve)")
+    ap.add_argument("--spmv-schedule", default="cyclic",
+                    choices=["cyclic", "matching"],
+                    help="round scheduler of the compressed halo "
+                         "exchange for --eigen cells: 'cyclic' (one "
+                         "ppermute round per nonzero cyclic shift) or "
+                         "'matching' (greedy max-weight matching "
+                         "rounds, the '+mat' shape suffix; "
+                         "--spmv-schedule of repro.launch.solve)")
     ap.add_argument("--plan", action="store_true",
                     help="with --eigen: print the χ-driven planner ranking "
                          "(core/planner.py) and the predicted vs HLO-measured "
@@ -604,6 +638,9 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None, help="append JSON records here")
     args = ap.parse_args(argv)
+    if args.spmv_schedule != "cyclic" and args.spmv_comm != "compressed":
+        ap.error(f"--spmv-schedule {args.spmv_schedule} requires "
+                 "--spmv-comm compressed")
 
     records = []
     try:
@@ -617,6 +654,7 @@ def main(argv=None):
             records.append(run_eigen(args.eigen, args.layout, args.multi_pod,
                                      plan=args.plan,
                                      spmv_comm=args.spmv_comm,
+                                     spmv_schedule=args.spmv_schedule,
                                      machine=machine))
         elif args.all:
             for arch, shape, cell in iter_cells():

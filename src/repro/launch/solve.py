@@ -8,11 +8,13 @@ vector layout (the paper's production entry point).
 ``--layout auto`` hands the choice to the χ-driven planner
 (``core/planner.py``): it enumerates every (n_row x n_col) mesh split,
 layout, comm engine (padded ``a2a`` vs sparsity-``compressed`` neighbor
-ppermute), and overlap option, scores each with the analytic perf model
-from the sparsity pattern alone, prints the ranking, and runs the
-minimum-predicted-time configuration (``--n-row/--n-col`` are then
-ignored; ``--spmv-overlap`` and ``--spmv-comm`` are decided by the
-plan). ``--machine`` points the planner at calibrated constants
+ppermute), round scheduler (``cyclic`` shifts vs greedy ``matching``
+rounds for the compressed engine), and overlap option, scores each with
+the analytic perf model from the sparsity pattern alone, prints the
+ranking, and runs the minimum-predicted-time configuration
+(``--n-row/--n-col`` are then ignored; ``--spmv-overlap``,
+``--spmv-comm``, and ``--spmv-schedule`` are decided by the plan).
+``--machine`` points the planner at calibrated constants
 (``dryrun --fit-machine``) instead of the built-in TPU-v5e model.
 
 ``--degraded-ok`` continues with a reduced search space if a column group
@@ -67,11 +69,13 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
         if verbose:
             print(plan.report())
             print(f"[auto] running {best.describe()} "
-                  f"(spmv_overlap={best.overlap}, spmv_comm={best.comm})")
+                  f"(spmv_overlap={best.overlap}, spmv_comm={best.comm}, "
+                  f"spmv_schedule={best.schedule})")
         n_row, n_col = best.n_row, best.n_col
         # the chosen split realizes the planned layout
         fd = dataclasses.replace(fd, layout="panel", spmv_overlap=best.overlap,
-                                 spmv_comm=best.comm)
+                                 spmv_comm=best.comm,
+                                 spmv_schedule=best.schedule)
     if n_row * n_col > n_dev:
         raise RuntimeError(f"mesh {n_row}x{n_col} needs {n_row*n_col} devices, "
                            f"have {n_dev}")
@@ -130,6 +134,16 @@ def main(argv=None):
                          "empty pairs skipped — moved bytes ~ chi2; the "
                          "dry-run's '+cmp' suffix; decided by --layout "
                          "auto)")
+    ap.add_argument("--spmv-schedule", default="cyclic",
+                    choices=["cyclic", "matching"],
+                    help="round scheduler of the compressed halo "
+                         "exchange: 'cyclic' (one ppermute round per "
+                         "nonzero cyclic shift, pad = that shift's max "
+                         "pair) or 'matching' (greedy max-weight "
+                         "matchings — hot pairs of different shifts "
+                         "share one round's pad, H_matching <= "
+                         "H_cyclic; the dry-run's '+mat' suffix; "
+                         "decided by --layout auto)")
     ap.add_argument("--machine", default="tpu-v5e",
                     help="machine model for --layout auto planning: "
                          "'tpu-v5e', 'meggie', or a path to a JSON model "
@@ -137,13 +151,19 @@ def main(argv=None):
                          "b_c/kappa)")
     ap.add_argument("--degraded-ok", action="store_true")
     args = ap.parse_args(argv)
+    if args.spmv_schedule != "cyclic" and args.spmv_comm != "compressed" \
+            and args.layout != "auto":
+        ap.error(f"--spmv-schedule {args.spmv_schedule} requires "
+                 "--spmv-comm compressed (or --layout auto, which picks "
+                 "both)")
     from ..core import perf_model as pm
 
     machine = pm.resolve_machine(args.machine)
     fd = FDConfig(n_target=args.n_target, n_search=args.n_search,
                   target=args.target, tol=args.tol, max_iters=args.max_iters,
                   layout=args.layout, spmv_overlap=args.spmv_overlap,
-                  spmv_comm=args.spmv_comm)
+                  spmv_comm=args.spmv_comm,
+                  spmv_schedule=args.spmv_schedule)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok,
                 machine=machine)

@@ -3,6 +3,7 @@ from .families import MatrixFamily, available_families, get_family
 from .sparse import CSR, csr_from_coo, csr_to_ell, uniform_partition
 from .exciton import Exciton
 from .hubbard import Hubbard
+from .hubnet import HubNet
 from .roadnet import RoadNet
 from .spinchain import SpinChainXXZ
 from .topins import TopIns
@@ -17,6 +18,7 @@ __all__ = [
     "uniform_partition",
     "Exciton",
     "Hubbard",
+    "HubNet",
     "RoadNet",
     "SpinChainXXZ",
     "TopIns",

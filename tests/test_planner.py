@@ -15,7 +15,8 @@ from repro.matrices import Exciton, Hubbard, SpinChainXXZ
 
 def test_comm_plan_matches_engine():
     """Pattern-only L, n_vc, pair counts, and the compressed neighbor
-    schedule equal build_dist_ell's, for families & CSR."""
+    schedules (cyclic AND matching rounds) equal build_dist_ell's, for
+    families & CSR."""
     for mat, P in ((SpinChainXXZ(10, 5), 4),
                    (Hubbard(8, 4, U=2.0, ranpot=0.5), 8),
                    (Exciton(L=4), 4)):
@@ -23,20 +24,23 @@ def test_comm_plan_matches_engine():
         D = csr.shape[0]
         D_pad = -(-D // P) * P
         ell = build_dist_ell(csr, P, d_pad=D_pad)
-        nbr = ell.neighbor_plan()
         for src in (mat, csr):
             cp = comm_plan(src, P, d_pad=D_pad)
             assert cp.exact
             assert cp.L == ell.L, (mat.name, cp.L, ell.L)
             assert (cp.n_vc == ell.n_vc).all()
             assert (cp.pair_counts == np.asarray(ell.pair_counts)).all()
-            assert cp.permute_schedule() == (nbr.shifts, nbr.round_L)
-            assert cp.moved_entries_per_device("compressed") == nbr.H
             nb, S_d = 8, ell.vals.dtype.itemsize
             assert cp.a2a_bytes_per_device(nb, S_d) == P * ell.L * nb * S_d
-            assert cp.permute_bytes_per_device(nb, S_d) == nbr.H * nb * S_d
-            assert cp.permute_bytes_per_device(nb, S_d) <= \
-                cp.a2a_bytes_per_device(nb, S_d)
+            for sched in ("cyclic", "matching"):
+                nbr = ell.neighbor_plan(schedule=sched)
+                assert cp.permute_schedule(sched) == (nbr.perms, nbr.round_L)
+                assert cp.moved_entries_per_device("compressed", sched) \
+                    == nbr.H
+                assert cp.permute_bytes_per_device(nb, S_d, sched) \
+                    == nbr.H * nb * S_d
+                assert cp.permute_bytes_per_device(nb, S_d, sched) <= \
+                    cp.a2a_bytes_per_device(nb, S_d)
 
 
 def test_comm_plan_chi_matches_bruteforce():
@@ -127,11 +131,11 @@ def test_planner_ranking_is_model_consistent():
     for c in plan.candidates:
         if c.n_row > 1:
             cp = comm_plan(mat, c.n_row)
-            moved = cp.moved_entries_per_device(c.comm)
+            moved = cp.moved_entries_per_device(c.comm, c.schedule)
             assert c.chi_eng == pytest.approx(
                 pm.engine_chi(moved, mat.D, c.n_row))
             assert c.comm_bytes_per_device == cp.comm_bytes_per_device(
-                c.comm, plan.n_search // c.n_col, mat.S_d)
+                c.comm, plan.n_search // c.n_col, mat.S_d, c.schedule)
         else:
             assert c.chi_eng == 0.0 and c.comm_bytes_per_device == 0
         kw = dict(D=mat.D, N_p=c.n_row, n_b=plan.n_search // c.n_col,
@@ -142,14 +146,22 @@ def test_planner_ranking_is_model_consistent():
         assert c.t_pass == pytest.approx(50 * c.t_iter + 2 * c.t_redist)
         assert c.redistribute == (c.n_col > 1)
     # the compressed engine never predicts MORE wire bytes than a2a at
-    # the same split, and both engine variants are enumerated
-    by_key = {(c.n_row, c.n_col, c.comm, c.overlap): c
+    # the same split, the matching rounds never more than the cyclic
+    # ones, and all engine variants are enumerated
+    by_key = {(c.n_row, c.n_col, c.comm, c.schedule, c.overlap): c
               for c in plan.candidates}
     assert any(c.comm == "compressed" for c in plan.candidates)
+    assert any(c.schedule == "matching" for c in plan.candidates)
+    assert all(c.schedule == "cyclic" for c in plan.candidates
+               if c.comm == "a2a")
     for c in plan.candidates:
         if c.comm == "compressed":
-            a2a = by_key[(c.n_row, c.n_col, "a2a", c.overlap)]
+            a2a = by_key[(c.n_row, c.n_col, "a2a", "cyclic", c.overlap)]
             assert c.comm_bytes_per_device <= a2a.comm_bytes_per_device
+            if c.schedule == "matching":
+                cyc = by_key[(c.n_row, c.n_col, "compressed", "cyclic",
+                              c.overlap)]
+                assert c.comm_bytes_per_device <= cyc.comm_bytes_per_device
     # stack pays no redistribution
     stack = [c for c in plan.candidates if c.n_col == 1]
     assert stack and all(c.t_redist == 0.0 for c in stack)
@@ -168,17 +180,18 @@ mesh = make_solver_mesh(4, 2)
 cfg = FDConfig(n_target=4, n_search=16, layout="auto")
 with mesh:
     fdd = FilterDiag(mat, mesh, cfg)
-cands = {c.comm: c for c in fdd.plan.candidates
+cands = {(c.comm, c.schedule): c for c in fdd.plan.candidates
          if (c.n_row, c.n_col) == (4, 2) and not c.overlap}
 # the engine operators the (4,2) panel candidates would run: same global
 # padding as FilterDiag (d_pad = ceil(D/8)*8), 4 row shards
 ell42 = build_dist_ell(mat.build_csr(), 4, d_pad=-(-mat.D // 8) * 8)
 engine = ell42.P * ell42.L * (16 // 2) * mat.S_d
-assert cands["a2a"].comm_bytes_per_device == engine, (
-    cands["a2a"].comm_bytes_per_device, engine, ell42.L)
-engine_cmp = ell42.neighbor_plan().H * (16 // 2) * mat.S_d
-assert cands["compressed"].comm_bytes_per_device == engine_cmp, (
-    cands["compressed"].comm_bytes_per_device, engine_cmp)
+assert cands[("a2a", "cyclic")].comm_bytes_per_device == engine, (
+    cands[("a2a", "cyclic")].comm_bytes_per_device, engine, ell42.L)
+for sched in ("cyclic", "matching"):
+    engine_cmp = ell42.neighbor_plan(schedule=sched).H * (16 // 2) * mat.S_d
+    got = cands[("compressed", sched)].comm_bytes_per_device
+    assert got == engine_cmp, (sched, got, engine_cmp)
 print("AUTO PLAN PARTITION OK", engine, engine_cmp)
 """)
     assert "AUTO PLAN PARTITION OK" in out

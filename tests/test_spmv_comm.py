@@ -169,12 +169,12 @@ def test_empty_pairs_are_skipped():
     pattern pairs must be absent from the schedule (no wasted rounds)."""
     rn = RoadNet(**ROADNET_SMALL)
     cp = comm_plan(rn, 8)
-    shifts, round_L = cp.permute_schedule()
-    assert len(shifts) < 7  # strictly fewer rounds than all-pairs
+    perms, round_L = cp.permute_schedule()
+    assert len(perms) < 7  # strictly fewer rounds than all-pairs
     assert all(l > 0 for l in round_L)
     ell = build_dist_ell(rn.build_csr(), 8)
     nbr = ell.neighbor_plan()
-    assert nbr.shifts == shifts and nbr.round_L == round_L
+    assert nbr.perms == perms and nbr.round_L == round_L
 
 
 def test_halo_nnz_fraction_mask_only():
