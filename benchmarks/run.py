@@ -18,8 +18,8 @@ def main() -> None:
                     help="include the 1e8-dimension χ instances (minutes)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table5,fig4,fig5,table3,table4,"
-                         "spmv_overlap,spmv_comm,spmv_schedule,planner,"
-                         "roofline")
+                         "spmv_overlap,spmv_comm,spmv_schedule,partition,"
+                         "planner,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable perf artifact (e.g. "
                          "BENCH_spmv.json): per family x engine predicted "
@@ -42,6 +42,7 @@ def main() -> None:
         "spmv_overlap": tables.spmv_overlap,
         "spmv_comm": tables.spmv_comm,
         "spmv_schedule": tables.spmv_schedule,
+        "partition": tables.partition_table,
         "planner": tables.planner_table,
         "roofline": tables.roofline_table,
     }

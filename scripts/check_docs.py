@@ -50,11 +50,19 @@ CLI_SOURCES = {
 #: dropped from either side fails the gate.
 REQUIRED_FLAGS = {
     "repro.launch.solve": ["--layout", "--spmv-overlap", "--spmv-comm",
-                           "--spmv-schedule", "--machine"],
+                           "--spmv-schedule", "--spmv-balance",
+                           "--spmv-reorder", "--machine"],
     "repro.launch.dryrun": ["--layout", "--plan", "--spmv-comm",
-                            "--spmv-schedule", "--fit-machine"],
+                            "--spmv-schedule", "--spmv-balance",
+                            "--spmv-reorder", "--fit-machine"],
     "benchmarks.run": ["--only", "--json"],
 }
+
+#: First-class documentation files: each must exist AND be referenced
+#: from the README — the docs/ subsystem's headline pages cannot
+#: silently drop out of the navigation.
+REQUIRED_DOCS = ("docs/comm-engines.md", "docs/planner.md",
+                 "docs/partitioning.md")
 
 #: CLIs whose *every* declared flag must be documented in README/docs
 #: (check 5). benchmarks.run is covered by REQUIRED_FLAGS only.
@@ -274,6 +282,21 @@ def check_docs_links() -> list[str]:
     return errors
 
 
+def check_required_docs() -> list[str]:
+    """Every REQUIRED_DOCS page exists and is referenced by the README."""
+    errors = []
+    with open(README) as f:
+        text = f.read()
+    root = os.path.dirname(README)
+    for doc in REQUIRED_DOCS:
+        if not os.path.exists(os.path.join(root, doc)):
+            errors.append(f"docs: required page `{doc}` does not exist")
+        if doc not in text:
+            errors.append(f"README: required docs page `{doc}` is never "
+                          "referenced")
+    return errors
+
+
 def run_all() -> list[str]:
     errors = []
     errors += check_module_docstrings()
@@ -282,6 +305,7 @@ def run_all() -> list[str]:
     errors += check_readme_paths()
     errors += check_readme_symbols()
     errors += check_config_and_flags_documented()
+    errors += check_required_docs()
     errors += check_docs_links()
     return errors
 

@@ -5,6 +5,8 @@ driver, the analytic performance model, and the χ-driven layout planner
 that turns the model into the control path)."""
 from .layouts import Layout, make_solver_mesh, panel, pillar, stack
 from .metrics import ChiMetrics, chi_bruteforce, chi_from_nvc, chi_metrics, chi_sweep
+from .partition import (RowMap, SPMV_BALANCES, SPMV_REORDERS,
+                        commvol_boundaries, plan_rowmap, rcm_permutation)
 from .spmv import DistEll, Partition, build_dist_ell, make_fused_cheb_step, make_spmv
 from .chebyshev import chebyshev_filter, kpm_moments, scale_params
 from .filters import FilterPoly, build_filter, degree_for, jackson_damping, window_coeffs
@@ -18,6 +20,8 @@ from . import perf_model
 __all__ = [
     "Layout", "make_solver_mesh", "panel", "pillar", "stack",
     "ChiMetrics", "chi_bruteforce", "chi_from_nvc", "chi_metrics", "chi_sweep",
+    "RowMap", "SPMV_BALANCES", "SPMV_REORDERS",
+    "commvol_boundaries", "plan_rowmap", "rcm_permutation",
     "DistEll", "Partition", "build_dist_ell", "make_fused_cheb_step", "make_spmv",
     "chebyshev_filter", "kpm_moments", "scale_params",
     "FilterPoly", "build_filter", "degree_for", "jackson_damping", "window_coeffs",

@@ -23,6 +23,17 @@ per-pair-sized ppermute rounds, and ``spmv_schedule="matching"`` derives
 those rounds from greedy max-weight matchings instead of cyclic shifts).
 A ``panel_layout`` passed explicitly to ``FilterDiag`` overrides all of
 them.
+
+The row partition itself is part of the engine configuration
+(``FDConfig.spmv_balance`` / ``FDConfig.spmv_reorder``,
+``core/partition.py``): ``spmv_balance="commvol"`` re-balances the
+shard boundaries so hot blocks shrink before scheduling, and
+``spmv_reorder="rcm"`` applies a bandwidth-reducing row order first —
+eigenvalues are unchanged and :meth:`FilterDiag.gather_global`
+un-permutes vectors back to the original row order. Both are planned
+once at the finest level (P_total) so the stack- and panel-level
+operators share one map, and ``layout="auto"`` decides them together
+with the other engine axes.
 """
 from __future__ import annotations
 
@@ -64,6 +75,8 @@ class FDConfig:
     spmv_overlap: bool = False  # split-phase SpMV: hide halo exchange
     spmv_comm: str = "a2a"      # halo exchange: a2a | compressed (ppermute)
     spmv_schedule: str = "cyclic"  # compressed rounds: cyclic | matching
+    spmv_balance: str = "rows"  # row partition: rows | commvol (planned cuts)
+    spmv_reorder: str = "none"  # row order: none | rcm (bandwidth-reducing)
     dtype: str = "float64"
     seed: int = 7
 
@@ -91,7 +104,8 @@ class FilterDiag:
     """
 
     def __init__(self, matrix, mesh: Mesh, cfg: FDConfig,
-                 panel_layout: Layout | None = None):
+                 panel_layout: Layout | None = None,
+                 rowmap=None):
         if panel_layout is None and cfg.layout == "auto":
             # the planner decides spmv_overlap — work on a copy so the
             # caller's config object is not mutated
@@ -99,6 +113,9 @@ class FilterDiag:
         self.cfg = cfg
         self.mesh = mesh
         self.plan = None
+        # an explicitly passed rowmap (e.g. the one the solve CLI's auto
+        # plan already computed) is used verbatim — no re-planning
+        self.rowmap = rowmap
         self.panel_layout = panel_layout or self._resolve_layout(matrix, mesh, cfg)
         # stack shards D over all axes, panel-row axes slowest ("matching")
         self.stack_layout = Layout(
@@ -115,15 +132,31 @@ class FilterDiag:
         self.dtype = dt
         D = matrix.shape[0] if hasattr(matrix, "shape") else matrix.D
         self.D = D
-        # one padded extent for both layouts
-        self.D_pad = -(-D // self.P_total) * self.P_total
+        # planned row decomposition (core/partition.py): the auto planner
+        # may have handed one over; an explicit spmv_balance/spmv_reorder
+        # plans it here, at the finest level P_total, so the stack- and
+        # panel-level operators below share one map
+        if self.rowmap is None and (cfg.spmv_balance, cfg.spmv_reorder) \
+                != ("rows", "none"):
+            from .partition import plan_rowmap
+
+            self.rowmap = plan_rowmap(matrix, self.P_total,
+                                      balance=cfg.spmv_balance,
+                                      reorder=cfg.spmv_reorder)
+            if self.rowmap.identity:
+                self.rowmap = None  # planned map degenerated to equal rows
+        # one padded extent for both layouts (the planned map's when set)
+        self.D_pad = (self.rowmap.D_pad if self.rowmap is not None
+                      else -(-D // self.P_total) * self.P_total)
         self.ell_stack = build_dist_ell(matrix, self.P_total, dtype=dt,
                                         d_pad=self.D_pad,
-                                        split_halo=cfg.spmv_overlap)
+                                        split_halo=cfg.spmv_overlap,
+                                        rowmap=self.rowmap)
         if self.N_col > 1:
             self.ell_panel = build_dist_ell(matrix, self.N_row, dtype=dt,
                                             d_pad=self.D_pad,
-                                            split_halo=cfg.spmv_overlap)
+                                            split_halo=cfg.spmv_overlap,
+                                            rowmap=self.rowmap)
         else:
             self.ell_panel = self.ell_stack
         self._build_fns(matrix)
@@ -132,9 +165,11 @@ class FilterDiag:
     def _resolve_layout(self, matrix, mesh: Mesh, cfg: FDConfig) -> Layout:
         """Materialize ``cfg.layout`` on the mesh; ``"auto"`` runs the
         χ-driven planner over {stack, panel, pillar} × {a2a,
-        compressed-cyclic, compressed-matching} × {overlap on/off} and
-        also decides ``cfg.spmv_overlap``, ``cfg.spmv_comm``, and
-        ``cfg.spmv_schedule``."""
+        compressed-cyclic, compressed-matching} × {overlap on/off} ×
+        {equal-rows, commvol} partitions and also decides
+        ``cfg.spmv_overlap``, ``cfg.spmv_comm``, ``cfg.spmv_schedule``,
+        and ``cfg.spmv_balance``/``cfg.spmv_reorder`` (an explicitly
+        requested reorder widens the planner's reorder axis)."""
         from .planner import layout_on_mesh, plan_for_mesh
 
         if cfg.layout == "auto":
@@ -145,12 +180,20 @@ class FilterDiag:
             for a in mesh.axis_names:
                 P *= mesh.shape[a]
             D = matrix.shape[0] if hasattr(matrix, "shape") else matrix.D
-            self.plan = plan_for_mesh(matrix, mesh, n_search=cfg.n_search,
-                                      d_pad=-(-D // P) * P)
+            self.plan = plan_for_mesh(
+                matrix, mesh, n_search=cfg.n_search,
+                d_pad=-(-D // P) * P,
+                reorder=tuple(dict.fromkeys(("none", cfg.spmv_reorder))))
             best = self.plan.best
             cfg.spmv_overlap = best.overlap
             cfg.spmv_comm = best.comm
             cfg.spmv_schedule = best.schedule
+            cfg.spmv_balance = best.balance
+            cfg.spmv_reorder = best.reorder
+            # the operators below are built from exactly the map the
+            # winning candidate was scored on
+            if self.rowmap is None:
+                self.rowmap = best.rowmap
             return layout_on_mesh(mesh, best.layout)
         if cfg.layout in ("stack", "panel", "pillar"):
             return layout_on_mesh(mesh, cfg.layout)
@@ -209,9 +252,26 @@ class FilterDiag:
     # ------------------------------------------------------------------
     def random_search_vectors(self, key) -> jax.Array:
         cfg = self.cfg
-        V = jax.random.normal(key, (self.D_pad, cfg.n_search)).astype(self.dtype)
-        V = V * (jnp.arange(self.D_pad)[:, None] < self.D)
+        if self.rowmap is None:
+            V = jax.random.normal(key, (self.D_pad, cfg.n_search)).astype(self.dtype)
+            V = V * (jnp.arange(self.D_pad)[:, None] < self.D)
+        else:
+            # planned partition: draw in row space and embed at the map's
+            # positions (interior pads stay exactly zero)
+            V0 = jax.random.normal(key, (self.D, cfg.n_search)).astype(self.dtype)
+            V = jnp.zeros((self.D_pad, cfg.n_search), dtype=self.dtype)
+            V = V.at[jnp.asarray(self.rowmap.pos)].set(V0)
         return jax.device_put(V, self.stack_layout.vec_sharding(self.mesh))
+
+    def gather_global(self, V) -> np.ndarray:
+        """Rows of a padded [D_pad, ...] vector block in the **original**
+        row order [D, ...] — the eigenvector un-permutation of a planned
+        partition (identity gather for the equal-rows layout). The
+        embed→extract round trip is bit-exact."""
+        Vh = np.asarray(V)
+        if self.rowmap is None:
+            return Vh[: self.D]
+        return Vh[self.rowmap.pos]
 
     def _intervals(self, theta, res, lam):
         """Adaptive target & search intervals from the current Ritz data.
@@ -264,7 +324,10 @@ class FilterDiag:
         k0, k1 = jax.random.split(key)
         t_start = time.perf_counter()
         lam = lanczos_interval(
-            self.spmv_stack, self.D, self.D_pad, self.dtype, k0, cfg.lanczos_steps
+            self.spmv_stack, self.D, self.D_pad, self.dtype, k0,
+            cfg.lanczos_steps,
+            mask=(None if self.rowmap is None
+                  else jnp.asarray(self.rowmap.valid_mask())),
         )
         alpha, beta = scale_params(*lam)
         V = self.random_search_vectors(k1)

@@ -14,18 +14,24 @@ __all__ = ["lanczos_interval"]
 
 
 def lanczos_interval(spmv, D: int, D_pad: int, dtype, key, steps: int = 30,
-                     safety: float = 1.05):
+                     safety: float = 1.05, mask=None):
     """Return (lambda_l, lambda_r) enclosing spec(A).
 
     ``spmv`` acts on [D_pad, 1] arrays (any distributed layout); the
     tridiagonal coefficients are accumulated on the host (they are scalars,
     so this costs one tiny transfer per step — the paper's preparatory
-    phase is negligible and we keep it simple). Padding rows [D:D_pad) are
-    kept exactly zero so the padded operator's null modes never enter the
-    Krylov space.
+    phase is negligible and we keep it simple). Padding rows are kept
+    exactly zero so the padded operator's null modes never enter the
+    Krylov space: by default the pad is the tail [D:D_pad) (the
+    equal-rows partition), while a planned row decomposition
+    (``core/partition.py``) passes its own ``mask`` — a [D_pad] bool of
+    valid positions — because its pad rows sit at each block's end, not
+    at the global end.
     """
     v = jax.random.normal(key, (D_pad, 1)).astype(dtype)
-    v = v * (jnp.arange(D_pad)[:, None] < D)
+    if mask is None:
+        mask = jnp.arange(D_pad) < D
+    v = v * jnp.asarray(mask)[:, None]
     v = v / jnp.linalg.norm(v)
     alphas, betas = [], []
     v_prev = jnp.zeros_like(v)

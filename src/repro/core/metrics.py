@@ -10,7 +10,9 @@ partition (uniform by default, Eq. 1).
 
 Equivalences (paper §3.1): χ₁ ≈ χ₃ since n_vm ≈ D/N_p; χ₂ ≈ χ₃ unless the
 communication volume is imbalanced — ``imbalance`` > 2…3 signals that the
-partition should be re-balanced (``balance='commvol'`` in the partitioner).
+partition should be re-balanced: ``balance="commvol"`` in the partition
+planner (``core/partition.py``), whose planned boundaries/block sizes
+feed back into these same metrics via ``planner.comm_plan(rowmap=...)``.
 """
 from __future__ import annotations
 

@@ -30,7 +30,14 @@ orthogonal layers of parallelism wins:
               pairs of different shifts share one round's pad — on
               hub-and-spoke patterns (the HubNet family) the cyclic
               rounds each carry a full hub corridor while a matching
-              packs them all into O(1) rounds.
+              packs them all into O(1) rounds,
+  * partition → the row decomposition itself is a candidate axis
+              (``core/partition.py``): ``balance="commvol"`` plans
+              non-uniform shard boundaries that shrink the hot blocks
+              before any scheduling, ``reorder="rcm"`` re-orders the
+              rows first — χ and every byte prediction are evaluated
+              on the *planned* partition, so the metric edits the
+              layout it measures.
 
 This module enumerates candidate configurations — mesh splits
 ``n_row × n_col`` with ``n_row · n_col = P``, vector layouts
@@ -61,6 +68,8 @@ from ..matrices.sparse import CSR
 from . import perf_model as pm
 from .layouts import Layout, panel, pillar
 from .metrics import ChiMetrics, chi_from_nvc
+from .partition import (SPMV_BALANCES, SPMV_REORDERS, RowMap,
+                        partition_plan_default, plan_rowmap)
 from .redistribute import redistribution_volume
 from .spmv import (SPMV_COMM_ENGINES, SPMV_SCHEDULES, Partition,
                    neighbor_schedule)
@@ -130,11 +139,22 @@ class SpmvCommPlan:
     #: times per candidate
     _sched_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                            compare=False)
+    #: planned row decomposition the counts were computed on (None =
+    #: the equal-rows Partition) — χ is evaluated on ITS block sizes
+    rowmap: RowMap | None = dataclasses.field(default=None, repr=False,
+                                              compare=False)
 
     @property
     def chi(self) -> ChiMetrics:
-        bnds = Partition(self.D, self.n_row, self.d_pad).boundaries()
-        return chi_from_nvc(self.n_vc, np.diff(bnds), self.D)
+        """χ metrics evaluated on the *planned* partition: real rows per
+        block come from the rowmap when one is set (``balance="commvol"``
+        blocks are non-uniform), else from the equal-rows cuts."""
+        if self.rowmap is not None:
+            n_vm = self.rowmap.block_sizes(self.n_row)
+        else:
+            bnds = Partition(self.D, self.n_row, self.d_pad).boundaries()
+            n_vm = np.diff(bnds)
+        return chi_from_nvc(self.n_vc, n_vm, self.D)
 
     def a2a_bytes_per_device(self, n_b: int, S_d: int) -> int:
         """Operand bytes of one SpMV's all_to_all on each device (the
@@ -208,9 +228,23 @@ def _remote_cols(matrix, a: int, b: int, chunk: int = 2_000_000) -> np.ndarray:
     return np.unique(np.concatenate(parts)) if parts else np.empty(0, np.int64)
 
 
+def _mapped_row_cols(matrix, rows: np.ndarray, chunk: int = 2_000_000):
+    """Pattern columns of an arbitrary row set (mapped-partition pass)."""
+    if isinstance(matrix, CSR):
+        from ..matrices.sparse import gather_row_entry_idx
+
+        gather, _ = gather_row_entry_idx(matrix.indptr, rows)
+        yield matrix.indices[gather].astype(np.int64)
+        return
+    for lo in range(0, len(rows), chunk):
+        _, cols = matrix.row_cols(rows[lo: lo + chunk])
+        yield np.asarray(cols, dtype=np.int64)
+
+
 def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
               exact: bool | None = None,
-              n_vc: np.ndarray | None = None) -> SpmvCommPlan:
+              n_vc: np.ndarray | None = None,
+              rowmap: RowMap | None = None) -> SpmvCommPlan:
     """Communication plan of the SpMV engine at ``n_row`` shards, computed
     from the sparsity pattern without building the operator.
 
@@ -224,23 +258,58 @@ def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
     compressed engine. A precomputed ``n_vc`` (on the same
     ``Partition(D, n_row, d_pad)`` boundaries) skips the pattern pass
     entirely and implies the estimated-L path.
+
+    ``rowmap`` evaluates the plan on a *planned* partition
+    (``core/partition.py``: ``balance="commvol"`` boundaries and/or the
+    RCM row order) instead of the equal-rows one — always an exact pass
+    (its per-pair counts are what justify a planned map at all), and
+    :attr:`SpmvCommPlan.chi` is then computed on the planned block
+    sizes. ``L == 0`` (a zero-halo partition) predicts zero bytes, which
+    the engines realize exactly — no phantom 1-entry pad.
     """
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
+    if rowmap is not None and not rowmap.identity:
+        if rowmap.D != D:
+            raise ValueError("rowmap.D does not match the matrix")
+        R = rowmap.level_R(n_row)
+        if n_row <= 1:
+            return SpmvCommPlan(1, D, 0, np.zeros(1, np.int64), True,
+                                rowmap.D_pad, rowmap=rowmap)
+        pos = rowmap.pos
+        L = 0
+        n_vc = np.zeros(n_row, dtype=np.int64)
+        pair_counts = np.zeros((n_row, n_row), dtype=np.int64)
+        for p in range(n_row):
+            rows_g, _ = rowmap.shard_rows(p, n_row)
+            parts = []
+            for cols in _mapped_row_cols(matrix, rows_g):
+                cpos = pos[cols]
+                cpos = cpos[cpos // R != p]
+                if cpos.size:
+                    parts.append(np.unique(cpos))
+            if not parts:
+                continue
+            remote = np.unique(np.concatenate(parts))
+            n_vc[p] = remote.size
+            pair_counts[:, p] = np.bincount(remote // R, minlength=n_row)
+            L = max(L, int(pair_counts[:, p].max()))
+        return SpmvCommPlan(n_row, D, L, n_vc, True, rowmap.D_pad,
+                            pair_counts=pair_counts, rowmap=rowmap)
     part = Partition(D, n_row, d_pad)
     bnds = part.boundaries()
     if n_row <= 1:
         return SpmvCommPlan(1, D, 0, np.zeros(1, np.int64), True, d_pad)
     if n_vc is not None:
         n_vc = np.asarray(n_vc, dtype=np.int64)
-        L = max(-(-int(n_vc.max()) // (n_row - 1)), 1)
+        L = -(-int(n_vc.max()) // (n_row - 1))
         return SpmvCommPlan(n_row, D, L, n_vc, False, d_pad)
     if exact is None:
         exact = exact_comm_default(matrix)
     if not exact:
         n_vc = matrix.n_vc(bnds)
-        L = max(-(-int(n_vc.max()) // (n_row - 1)), 1)
+        L = -(-int(n_vc.max()) // (n_row - 1))
         return SpmvCommPlan(n_row, D, L, n_vc, False, d_pad)
-    L = 1
+    L = 0
     n_vc = np.zeros(n_row, dtype=np.int64)
     pair_counts = np.zeros((n_row, n_row), dtype=np.int64)
     for p in range(n_row):
@@ -288,13 +357,27 @@ class Candidate:
     t_redist: float    # one redistribution [s] (Eq. 17/18 over b_c)
     t_pass: float      # degree·t_iter + 2·t_redist [s]
     comm_bytes_per_device: int  # predicted SpMV exchange operand bytes
+    balance: str = "rows"   # row partition: "rows" | "commvol"
+    reorder: str = "none"   # row order: "none" | "rcm"
+    #: the planned RowMap behind a non-default balance/reorder (shared by
+    #: every candidate of that combo; None for the equal-rows partition).
+    #: FilterDiag builds its operators from exactly this map, so the
+    #: scored χ/bytes are the ones the engines realize.
+    rowmap: RowMap | None = dataclasses.field(default=None, repr=False,
+                                              compare=False)
 
     @property
     def name(self) -> str:
-        """Layout name with the dry-run's ``+cmp``/``+mat``/``+ov`` engine
-        suffixes (``+cmp`` = compressed-cyclic, ``+mat`` = compressed with
-        the matching scheduler)."""
+        """Layout name with the dry-run's ``+cv``/``+rcm`` partition and
+        ``+cmp``/``+mat``/``+ov`` engine suffixes (``+cv`` = commvol
+        boundaries, ``+rcm`` = RCM row order, ``+cmp`` =
+        compressed-cyclic, ``+mat`` = compressed with the matching
+        scheduler)."""
         suffix = ""
+        if self.balance == "commvol":
+            suffix += "+cv"
+        if self.reorder == "rcm":
+            suffix += "+rcm"
         if self.comm == "compressed":
             suffix += "+cmp" if self.schedule == "cyclic" else "+mat"
         if self.overlap:
@@ -328,12 +411,13 @@ class Plan:
 
     @property
     def baseline(self) -> Candidate:
-        """Speedup reference: the additive a2a stack candidate (n_col = 1,
-        no overlap, padded all_to_all — the paper's reference point) when
-        it was enumerated, otherwise the slowest candidate (``report()``
-        says which)."""
+        """Speedup reference: the additive a2a stack candidate on the
+        equal-rows partition (n_col = 1, no overlap, padded all_to_all —
+        the paper's reference point) when it was enumerated, otherwise
+        the slowest candidate (``report()`` says which)."""
         for c in self.candidates:
-            if c.n_col == 1 and not c.overlap and c.comm == "a2a":
+            if c.n_col == 1 and not c.overlap and c.comm == "a2a" \
+                    and c.balance == "rows" and c.reorder == "none":
                 return c
         return max(self.candidates, key=lambda c: c.t_pass)
 
@@ -371,6 +455,8 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 overlap: tuple[bool, ...] = (False, True),
                 comm: tuple[str, ...] = ("a2a", "compressed"),
                 schedule: tuple[str, ...] = ("cyclic", "matching"),
+                balance: tuple[str, ...] = ("rows", "commvol"),
+                reorder: tuple[str, ...] = ("none",),
                 splits=None, S_d: int | None = None,
                 n_nzr: float | None = None, d_pad: int | None = None,
                 exact_comm: bool | None = None,
@@ -391,11 +477,25 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     which become the effective χ of the iteration-time model
     (``perf_model.engine_chi``). The ranking key is the predicted time of
     one filter pass, ``degree`` Chebyshev iterations plus two
-    redistributions (Alg. 1 steps 7/9). ``n_vc_by_row`` maps n_row ->
-    precomputed n_vc counts (on ``Partition(D, n_row, d_pad)``
-    boundaries) and ``comm_plan_by_row`` maps n_row -> a full precomputed
-    :class:`SpmvCommPlan` (same ``d_pad``), so callers that already paid
-    the pattern pass — e.g. the dry-run — are not charged again.
+    redistributions (Alg. 1 steps 7/9).
+
+    ``balance`` × ``reorder`` is the fifth axis — the **row partition
+    itself** (``core/partition.py``): each non-default combination plans
+    one :class:`~repro.core.partition.RowMap` at the finest level P and
+    scores every split on that map's grouped boundaries with the same
+    engine-exact byte predictions (``comm_plan(rowmap=...)``), so the χ
+    the planner ranks is the χ the built operator realizes. Planned
+    combinations need the full per-row pattern pass and are skipped when
+    it is unaffordable (``partition.partition_plan_default``) or when a
+    split has no halo exchange at all. Ties prefer the equal-rows,
+    natural-order partition.
+
+    ``n_vc_by_row`` maps n_row -> precomputed n_vc counts (on
+    ``Partition(D, n_row, d_pad)`` boundaries) and ``comm_plan_by_row``
+    maps n_row -> a full precomputed :class:`SpmvCommPlan` (same
+    ``d_pad``), so callers that already paid the pattern pass — e.g. the
+    dry-run — are not charged again; both apply to the equal-rows combo
+    only.
     """
     P = int(n_devices)
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
@@ -414,71 +514,123 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
         # happens to exclude "compressed"
         if sch not in SPMV_SCHEDULES:
             raise ValueError(f"unknown schedule {sch!r}")
+    partitions: list[tuple[str, str]] = []
+    for bal in dict.fromkeys(balance):
+        if bal not in SPMV_BALANCES:
+            raise ValueError(f"unknown balance {bal!r} "
+                             f"(expected one of {SPMV_BALANCES})")
+        for ro in dict.fromkeys(reorder):
+            if ro not in SPMV_REORDERS:
+                raise ValueError(f"unknown reorder {ro!r} "
+                                 f"(expected one of {SPMV_REORDERS})")
+            partitions.append((bal, ro))
+    plan_ok = partition_plan_default(matrix, P)
 
     plans: dict[int, SpmvCommPlan] = dict(comm_plan_by_row or {})
+    mapped_plans: dict[tuple[str, str, int], SpmvCommPlan] = {}
+    rowmaps: dict[tuple[str, str], RowMap] = {}
+    pattern = None  # one pattern pass shared by every planned combo
     cands: list[Candidate] = []
-    for n_row, n_col in splits:
-        if n_row * n_col != P:
-            raise ValueError(f"split {n_row}x{n_col} != P={P}")
-        if n_row not in plans:
-            plans[n_row] = comm_plan(
-                matrix, n_row, d_pad=d_pad, exact=exact_comm,
-                n_vc=(n_vc_by_row or {}).get(n_row))
-        cp = plans[n_row]
-        chim = cp.chi
-        chi1 = chim.chi1 if n_row > 1 else 0.0
-        n_b = n_search // n_col
-        name = "stack" if n_col == 1 else ("pillar" if n_col == P else "panel")
-        t_red = 0.0
-        if n_col > 1:
-            # per-device moved bytes of one redistribution (Eq. 18 total
-            # spread over P devices) through the inter-process bandwidth
-            t_red = (redistribution_volume(D, n_search, P, n_col, S_d)
-                     ["bytes_total"] / P / machine.b_c)
-        engines: list[tuple[str, str]] = []
-        for eng in sorted(set(comm)):
-            if eng not in SPMV_COMM_ENGINES:
-                raise ValueError(f"unknown comm engine {eng!r}")
-            if eng == "a2a":
-                engines.append((eng, "cyclic"))  # schedule axis is a no-op
+    for bal, ro in partitions:
+        default_part = bal == "rows" and ro == "none"
+        if not default_part:
+            if not plan_ok:
+                continue  # per-row pattern pass unaffordable at this D
+            if (bal, ro) not in rowmaps:
+                if pattern is None:
+                    from .partition import _pattern_csr
+
+                    pattern = _pattern_csr(matrix)
+                rowmaps[(bal, ro)] = plan_rowmap(matrix, P, balance=bal,
+                                                 reorder=ro,
+                                                 pattern=pattern)
+            rowmap = rowmaps[(bal, ro)]
+            if rowmap.identity:
+                continue  # the planned map degenerated to equal rows —
+                # its candidates would be pure duplicates
+        for n_row, n_col in splits:
+            if n_row * n_col != P:
+                raise ValueError(f"split {n_row}x{n_col} != P={P}")
+            if default_part:
+                if n_row not in plans:
+                    plans[n_row] = comm_plan(
+                        matrix, n_row, d_pad=d_pad, exact=exact_comm,
+                        n_vc=(n_vc_by_row or {}).get(n_row))
+                cp = plans[n_row]
+            else:
+                key = (bal, ro, n_row)
+                if key not in mapped_plans:
+                    mapped_plans[key] = comm_plan(matrix, n_row,
+                                                  rowmap=rowmap)
+                cp = mapped_plans[key]
+            chim = cp.chi
+            chi1 = chim.chi1 if n_row > 1 else 0.0
+            if not default_part and chi1 <= 0.0:
+                # no halo exchange to re-balance: the planned partition
+                # is a pure duplicate of the equal-rows candidate
                 continue
-            for sch in sorted(set(schedule)):
-                engines.append((eng, sch))
-        for eng, sch in engines:
-            if eng == "compressed" and chi1 <= 0.0:
-                continue  # no halo exchange: compressed degenerates to a2a
-            if eng == "compressed" and cp.pair_counts is None:
-                # estimated-path n_vc gives only a lower bound on the
-                # schedule volume — never claim a compressed win the
-                # pattern hasn't proven
-                continue
-            chi_eng = pm.engine_chi(
-                cp.moved_entries_per_device(eng, sch), D, n_row)
-            kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi_eng, n_nzr=n_nzr,
-                      S_d=S_d)
-            for ov in sorted(set(overlap)):
-                if ov and chi1 <= 0.0:
-                    continue  # overlap is a no-op without a halo exchange
-                t_iter = (pm.cheb_iter_time_overlap(machine, **kw) if ov
-                          else pm.cheb_iter_time(machine, **kw))
-                cands.append(Candidate(
-                    layout=name, n_row=n_row, n_col=n_col, overlap=ov,
-                    comm=eng, schedule=sch, redistribute=n_col > 1,
-                    chi1=chi1, chi2=chim.chi2, chi_eng=chi_eng,
-                    t_iter=t_iter, t_redist=t_red,
-                    t_pass=degree * t_iter + 2.0 * t_red,
-                    comm_bytes_per_device=cp.comm_bytes_per_device(
-                        eng, n_b, S_d, sch),
-                ))
+            n_b = n_search // n_col
+            name = "stack" if n_col == 1 else (
+                "pillar" if n_col == P else "panel")
+            t_red = 0.0
+            if n_col > 1:
+                # per-device moved bytes of one redistribution (Eq. 18
+                # total spread over P devices) through the inter-process
+                # bandwidth
+                t_red = (redistribution_volume(D, n_search, P, n_col, S_d)
+                         ["bytes_total"] / P / machine.b_c)
+            engines: list[tuple[str, str]] = []
+            for eng in sorted(set(comm)):
+                if eng not in SPMV_COMM_ENGINES:
+                    raise ValueError(f"unknown comm engine {eng!r}")
+                if eng == "a2a":
+                    engines.append((eng, "cyclic"))  # schedule is a no-op
+                    continue
+                for sch in sorted(set(schedule)):
+                    engines.append((eng, sch))
+            for eng, sch in engines:
+                if eng == "compressed" and chi1 <= 0.0:
+                    continue  # no halo exchange: compressed == a2a
+                if eng == "compressed" and cp.pair_counts is None:
+                    # estimated-path n_vc gives only a lower bound on the
+                    # schedule volume — never claim a compressed win the
+                    # pattern hasn't proven
+                    continue
+                chi_eng = pm.engine_chi(
+                    cp.moved_entries_per_device(eng, sch), D, n_row)
+                kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi_eng,
+                          n_nzr=n_nzr, S_d=S_d)
+                for ov in sorted(set(overlap)):
+                    if ov and chi1 <= 0.0:
+                        continue  # overlap is a no-op without an exchange
+                    t_iter = (pm.cheb_iter_time_overlap(machine, **kw)
+                              if ov else pm.cheb_iter_time(machine, **kw))
+                    cands.append(Candidate(
+                        layout=name, n_row=n_row, n_col=n_col, overlap=ov,
+                        comm=eng, schedule=sch, redistribute=n_col > 1,
+                        chi1=chi1, chi2=chim.chi2, chi_eng=chi_eng,
+                        t_iter=t_iter, t_redist=t_red,
+                        t_pass=degree * t_iter + 2.0 * t_red,
+                        comm_bytes_per_device=cp.comm_bytes_per_device(
+                            eng, n_b, S_d, sch),
+                        balance=bal, reorder=ro,
+                        rowmap=None if default_part else rowmap,
+                    ))
     if not cands:
         raise ValueError(
             f"no candidate survived for P={P}, n_search={n_search}, "
             f"overlap={overlap}, splits={splits} — overlap-only planning "
             f"needs at least one split with chi > 0 (n_row > 1)")
-    # ties prefer the simpler engine: a2a before compressed, cyclic
-    # rounds before matching, additive before overlap, fewer bundles
-    cands.sort(key=lambda c: (c.t_pass, c.comm != "a2a",
-                              c.schedule != "cyclic", c.overlap, c.n_col))
+    # ties prefer fewer wire bytes first (the overlap model hides a
+    # fully-overlapped exchange, so engines/partitions that differ only
+    # in moved bytes tie on time — the lighter wire footprint is the
+    # robust choice), then the simpler configuration: a2a before
+    # compressed, cyclic rounds before matching, equal rows before
+    # commvol, natural order before rcm, additive before overlap
+    cands.sort(key=lambda c: (c.t_pass, c.comm_bytes_per_device,
+                              c.comm != "a2a", c.schedule != "cyclic",
+                              c.balance != "rows", c.reorder != "none",
+                              c.overlap, c.n_col))
     return Plan(matrix=_matrix_label(matrix), D=D, n_devices=P,
                 n_search=n_search, degree=degree, machine=machine.name,
                 candidates=tuple(cands))

@@ -3,8 +3,12 @@
 Host side (`Partition`, `CommPlan`, `build_dist_ell`): given a matrix
 family (or CSR) and the number of row shards P, build
 
-  * equal row blocks  R = ceil(D/P)  (the paper's "nearly equidistant"
-    row indices; the tail block is zero-padded),
+  * row blocks of the partition — equal blocks R = ceil(D/P) by default
+    (the paper's "nearly equidistant" row indices; the tail block is
+    zero-padded), or a *planned* decomposition when a
+    ``core/partition.py`` RowMap is passed (``balance="commvol"``
+    non-uniform boundaries and/or the ``reorder="rcm"`` row order,
+    realized as an embed into an equal-block padded position space),
   * per-shard ELL blocks with *remapped* columns: local columns map to
     [0, R), remote columns map into a halo region [R, R + P*L),
   * a communication plan: for every (sender q -> receiver p) pair the
@@ -102,6 +106,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..matrices.families import MatrixFamily
 from ..matrices.sparse import CSR, csr_to_ell
 from .layouts import Layout
+from .partition import RowMap
 
 __all__ = ["Partition", "DistEll", "NeighborPlan", "build_dist_ell",
            "make_spmv", "make_fused_cheb_step", "neighbor_schedule",
@@ -202,6 +207,11 @@ class Partition:
     ``d_pad`` (a multiple of P, >= D) fixes the padded global extent so that
     stack- and panel-layout engines over the same vectors agree on shapes;
     defaults to ceil(D/P)*P.
+
+    This is the ``balance="rows"``, ``reorder="none"`` fast path of the
+    partition planner — non-uniform / reordered decompositions are
+    expressed by ``core/partition.py``'s :class:`~repro.core.partition.
+    RowMap` and consumed via ``build_dist_ell(..., rowmap=...)``.
     """
 
     D: int
@@ -286,6 +296,7 @@ class DistEll:
     cols_halo: jax.Array | None = None  # [P, R, W_halo] columns in [0, P*L)
     vals_halo: jax.Array | None = None  # [P, R, W_halo]
     nbr: dict | None = None  # schedule name -> NeighborPlan (cached)
+    rowmap: RowMap | None = None  # planned row decomposition (None = equal rows)
 
     @property
     def comm_bytes_per_spmv(self) -> int:
@@ -446,13 +457,42 @@ def build_dist_ell(
     dtype=None,
     d_pad: int | None = None,
     split_halo: bool = False,
+    rowmap: RowMap | None = None,
 ) -> DistEll:
     """Build per-shard ELL blocks + comm plan for P_row horizontal shards.
 
     With ``split_halo=True`` the local/halo split consumed by the overlap
     engine is built eagerly (otherwise ``make_spmv(..., overlap=True)``
     materializes it lazily on first use).
+
+    ``rowmap`` makes the row decomposition a planned quantity
+    (``core/partition.py``): shard p owns the rows the map places at
+    positions ``[p·R, (p+1)·R)`` of the padded position space — possibly
+    non-uniform (``balance="commvol"``) and/or RCM-reordered
+    (``reorder="rcm"``). The map may be planned at any level whose
+    ``D_pad`` is divisible by ``P_row``, so the stack- and panel-level
+    operators of one solve share a single map. Without a map (or with
+    the identity map) the equal-rows :class:`Partition` fast path is
+    taken, and ``d_pad`` keeps its historical meaning.
+
+    ``L`` is the *true* max per-pair volume: **zero** when no shard
+    needs any remote column, in which case the engines skip the halo
+    exchange entirely and the pattern-only byte prediction (0) stays
+    exact — empty pairs are never charged a phantom 1-entry pad.
     """
+    if rowmap is not None:
+        if rowmap.D != (matrix.shape[0] if isinstance(matrix, CSR)
+                        else matrix.D):
+            raise ValueError("rowmap.D does not match the matrix")
+        if d_pad is not None and d_pad != rowmap.D_pad:
+            raise ValueError(f"d_pad={d_pad} conflicts with the rowmap's "
+                             f"D_pad={rowmap.D_pad}")
+        if not rowmap.identity:
+            ell = _build_dist_ell_mapped(matrix, P_row, rowmap, dtype)
+            if split_halo:
+                ell.split()
+            return ell
+        d_pad = rowmap.D_pad
     if isinstance(matrix, CSR):
         D = matrix.shape[0]
         get_rows = lambda a, b: _csr_rows(matrix, a, b)
@@ -475,7 +515,6 @@ def build_dist_ell(
         owners = part.owner(remote)
         need.append({int(q): remote[owners == q] for q in np.unique(owners)})
     L = max((len(v) for d in need for v in d.values()), default=0)
-    L = max(L, 1)  # keep shapes non-degenerate
 
     # true per-pair volumes L_qp (sender q -> receiver p) — the compressed
     # engine's neighbor schedule and the planner's χ₂-scaled byte
@@ -512,7 +551,8 @@ def build_dist_ell(
         W = max(W, int(counts.max()) if len(counts) else 0)
         shard_ell.append((rel, newcols, vals, counts))
 
-    vdtype = np.dtype(dtype) if dtype is not None else shard_ell[0][2].dtype
+    vdtype = (np.dtype(dtype) if dtype is not None
+              else shard_ell[0][2].dtype if shard_ell else np.float64)
     cols_arr = np.zeros((P_row, R, W), dtype=np.int32)
     vals_arr = np.zeros((P_row, R, W), dtype=vdtype)
     for p, (rel, newcols, vals, counts) in enumerate(shard_ell):
@@ -531,10 +571,101 @@ def build_dist_ell(
         D=D,
         n_vc=n_vc,
         pair_counts=pair_counts,
+        rowmap=rowmap,
     )
     if split_halo:
         ell.split()
     return ell
+
+
+def _build_dist_ell_mapped(matrix, P_row: int, rowmap: RowMap,
+                           dtype=None) -> DistEll:
+    """``build_dist_ell`` body for a non-identity :class:`RowMap`.
+
+    Identical output semantics as the fast path, expressed in *position*
+    space: shard p's ELL row i holds the matrix row the map places at
+    position ``p·R + i`` (pad positions stay all-zero rows), local
+    columns are position offsets, remote columns index the halo region
+    ``R + q·L + slot`` with slots assigned in ascending *position* order
+    per pair — so the per-row slot order (and hence the accumulation
+    order of every engine) follows the mapped layout exactly the way the
+    fast path follows the natural one.
+    """
+    D = rowmap.D
+    R = rowmap.level_R(P_row)
+    pos = rowmap.pos
+    if isinstance(matrix, CSR):
+        get_rows = lambda rows_g: _csr_rows_at(matrix, rows_g)
+    else:
+        get_rows = matrix.row_entries
+    per_shard = []
+    for p in range(P_row):
+        rows_g, _ = rowmap.shard_rows(p, P_row)
+        rows, cols, vals = get_rows(rows_g)
+        per_shard.append((rows, cols, vals))
+
+    # remote needs per (receiver p, owner q), as sorted sender positions
+    need: list[dict[int, np.ndarray]] = []
+    for p, (rows, cols, vals) in enumerate(per_shard):
+        cpos = pos[cols]
+        remote = np.unique(cpos[(cpos // R) != p])
+        owners = remote // R
+        need.append({int(q): remote[owners == q] for q in np.unique(owners)})
+    L = max((len(v) for d in need for v in d.values()), default=0)
+
+    pair_counts = np.zeros((P_row, P_row), dtype=np.int64)
+    send_idx = np.zeros((P_row, P_row, L), dtype=np.int32)
+    for p, d in enumerate(need):
+        for q, spos in d.items():
+            pair_counts[q, p] = len(spos)
+            send_idx[q, p, : len(spos)] = (spos - q * R).astype(np.int32)
+
+    W = 0
+    shard_ell = []
+    for p, (rows, cols, vals) in enumerate(per_shard):
+        cpos = pos[cols]
+        local = (cpos // R) == p
+        newcols = np.empty(len(cols), dtype=np.int64)
+        newcols[local] = cpos[local] - p * R
+        rem = ~local
+        if rem.any():
+            rc = cpos[rem]
+            q = rc // R
+            slot = np.empty(len(rc), dtype=np.int64)
+            for qq in np.unique(q):
+                m = q == qq
+                slot[m] = np.searchsorted(need[p][int(qq)], rc[m])
+            newcols[rem] = R + q * L + slot
+        rel = pos[rows] - p * R
+        order = np.lexsort((newcols, rel))
+        rel, newcols, vals = rel[order], newcols[order], vals[order]
+        counts = np.bincount(rel, minlength=R)
+        W = max(W, int(counts.max()) if len(counts) else 0)
+        shard_ell.append((rel, newcols, vals, counts))
+
+    vdtype = (np.dtype(dtype) if dtype is not None
+              else shard_ell[0][2].dtype if shard_ell else np.float64)
+    cols_arr = np.zeros((P_row, R, W), dtype=np.int32)
+    vals_arr = np.zeros((P_row, R, W), dtype=vdtype)
+    for p, (rel, newcols, vals, counts) in enumerate(shard_ell):
+        slot = np.arange(len(rel)) - np.repeat(np.cumsum(counts) - counts, counts)
+        cols_arr[p, rel, slot] = newcols
+        vals_arr[p, rel, slot] = vals.astype(vdtype)
+
+    n_vc = np.array([sum(len(v) for v in d.values()) for d in need],
+                    dtype=np.int64)
+    return DistEll(
+        cols=jnp.asarray(cols_arr),
+        vals=jnp.asarray(vals_arr),
+        send_idx=jnp.asarray(send_idx),
+        R=R,
+        L=L,
+        P=P_row,
+        D=D,
+        n_vc=n_vc,
+        pair_counts=pair_counts,
+        rowmap=rowmap,
+    )
 
 
 def _csr_rows(csr: CSR, a: int, b: int):
@@ -542,6 +673,17 @@ def _csr_rows(csr: CSR, a: int, b: int):
     counts = np.diff(csr.indptr[a : b + 1])
     rows = np.repeat(np.arange(a, b, dtype=np.int64), counts)
     return rows, csr.indices[lo:hi].astype(np.int64), csr.data[lo:hi]
+
+
+def _csr_rows_at(csr: CSR, rows_g: np.ndarray):
+    """(rows, cols, vals) of an arbitrary (not necessarily contiguous)
+    row set — the mapped partition's accessor."""
+    from ..matrices.sparse import gather_row_entry_idx
+
+    rows_g = np.asarray(rows_g, dtype=np.int64)
+    gather, counts = gather_row_entry_idx(csr.indptr, rows_g)
+    rows = np.repeat(rows_g, counts)
+    return rows, csr.indices[gather].astype(np.int64), csr.data[gather]
 
 
 # --------------------------------------------------------------------------
@@ -562,10 +704,14 @@ def _ell_contract(acc, cols, vals, xsrc):
 
 
 def _local_spmv(cols, vals, send_idx, x, dist_axes, P_row, L, use_kernel=False):
-    """Per-device body: halo exchange + ELL contraction. x: [R, nb] local."""
+    """Per-device body: halo exchange + ELL contraction. x: [R, nb] local.
+
+    ``L == 0`` means no shard needs any remote column (a zero-halo
+    partition) — the exchange is skipped entirely, so the engine moves
+    exactly the zero bytes the pattern-only prediction charges."""
     R, W = cols.shape
     nb = x.shape[1]
-    if P_row > 1:
+    if P_row > 1 and L:
         send = jnp.take(x, send_idx, axis=0)  # [P, L, nb]
         halo = lax.all_to_all(send, dist_axes, split_axis=0, concat_axis=0, tiled=False)
         xfull = jnp.concatenate([x, halo.reshape(P_row * L, nb)], axis=0)
@@ -589,7 +735,7 @@ def _local_spmv_overlap(cols_loc, vals_loc, cols_halo, vals_halo, send_idx, x,
     ``T = max(T_comm, T_local) + T_halo`` execution model."""
     R = cols_loc.shape[0]
     nb = x.shape[1]
-    if P_row > 1:
+    if P_row > 1 and L:
         send = jnp.take(x, send_idx, axis=0)  # [P, L, nb]
         halo = lax.all_to_all(send, dist_axes, split_axis=0, concat_axis=0,
                               tiled=False).reshape(P_row * L, nb)

@@ -14,6 +14,8 @@ Usage:
       --spmv-comm compressed --plan
   PYTHONPATH=src python -m repro.launch.dryrun --eigen hubnet48k --layout panel \
       --spmv-comm compressed --spmv-schedule matching --plan
+  PYTHONPATH=src python -m repro.launch.dryrun --eigen hubnet48k --layout panel \
+      --spmv-comm compressed --spmv-schedule matching --spmv-balance commvol --plan
   PYTHONPATH=src python -m repro.launch.dryrun --fit-machine --fit-out machine_fit.json
 """
 import os
@@ -168,7 +170,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False, verbose=True) -> di
 def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               n_search: int | None = None, verbose=True,
               plan: bool = False, spmv_comm: str = "a2a",
-              spmv_schedule: str = "cyclic", machine=None) -> dict:
+              spmv_schedule: str = "cyclic", spmv_balance: str = "rows",
+              spmv_reorder: str = "none", machine=None) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
     surrogate with the *exact* χ-derived comm plan of the real matrix.
@@ -189,10 +192,22 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     (``+mat``) — on the exact path; the estimated path always lowers the
     uniform cyclic rounds.
 
+    ``spmv_balance``/``spmv_reorder`` lower the cell on a *planned* row
+    partition (``core/partition.py``: commvol boundaries and/or the RCM
+    row order, the ``+cv``/``+rcm`` cell suffixes): the surrogate then
+    carries the planned map's exact per-pair volumes, so the
+    HLO-measured bytes are the partitioned engine's true wire footprint.
+    Requested partitions that cannot be planned (no halo at N_row = 1,
+    or the per-row pattern pass unaffordable at this D) are relabeled
+    back to ``rows``/``none`` so the record never claims a partition
+    that did not lower.
+
     ``plan=True`` adds the χ-driven planner panel: the full candidate
     ranking (``core/planner.py``) for this matrix on the production mesh,
     plus the predicted SpMV collective volume of the lowered cell next to
-    the HLO-measured one — prediction and measurement in one place."""
+    the HLO-measured one — prediction and measurement in one place; on a
+    planned partition it also prints the before/after χ and pad volumes
+    of the re-balanced rows."""
     from ..configs import get_config as gc
     from ..core import layouts as L
     from ..core.filter_diag import FDConfig
@@ -228,18 +243,49 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     # pad N_s to the bundle count
     n_col = panel_l.n_col(mesh)
     n_s = -(-n_s // max(n_col, 1)) * max(n_col, 1)
-    D_pad = -(-D // P_total) * P_total
     dt = jnp.complex64 if fam.is_complex else jnp.float32
+
+    # planned row partition of the cell (core/partition.py): the map is
+    # planned at the cell's N_row with block_multiple = P_total/N_row so
+    # its padded extent divides the full mesh (TSQR + redistribution run
+    # at P_total). Unplannable requests are relabeled to rows/none.
+    from ..core.partition import partition_plan_default, plan_rowmap
+
+    rowmap = None
+    if (spmv_balance, spmv_reorder) != ("rows", "none") and N_row > 1 \
+            and partition_plan_default(fam, N_row):
+        rowmap = plan_rowmap(fam, N_row, balance=spmv_balance,
+                             reorder=spmv_reorder,
+                             block_multiple=P_total // N_row)
+        if rowmap.identity:
+            rowmap = None
+    if rowmap is None:
+        spmv_balance, spmv_reorder = "rows", "none"
+    D_pad = rowmap.D_pad if rowmap is not None \
+        else -(-D // P_total) * P_total
 
     # surrogate distributed operator: exact comm plan (χ-padded all_to_all
     # or the compressed neighbor schedule) on a bandwidth-matched synthetic
     # ELL. Only ShapeDtypeStructs are built — the plan arrays are jit
     # *arguments*, nothing is allocated.
-    n_vc = fam.n_vc(np.minimum(np.arange(N_row + 1) * (D_pad // N_row), D)) if N_row > 1 else np.zeros(1)
+    from ..core.planner import comm_plan as _comm_plan
+    from ..core.planner import exact_comm_default
+
+    cp_part = None
+    if rowmap is not None:
+        cp_part = _comm_plan(fam, N_row, rowmap=rowmap)
+        n_vc = cp_part.n_vc
+    else:
+        n_vc = fam.n_vc(np.minimum(np.arange(N_row + 1) * (D_pad // N_row), D)) if N_row > 1 else np.zeros(1)
     t0 = time.time()
     W = int(round(_nnzr(fam)))
     R = D_pad // N_row
-    L = max(-(-int(n_vc.max()) // max(N_row - 1, 1)), 1) if N_row > 1 else 1
+    if N_row <= 1:
+        L = 1
+    elif cp_part is not None:
+        L = max(cp_part.L, 1)  # the planned partition's exact pair max
+    else:
+        L = max(-(-int(n_vc.max()) // max(N_row - 1, 1)), 1)
     # overlap surrogate: split the width budget into local + halo parts
     # (halo rows ~ ceil(n_vc / R) entries wide on average)
     W_halo = max(1, -(-int(n_vc.max()) // max(R, 1))) if N_row > 1 else 1
@@ -251,11 +297,12 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         # neighbor schedule of the real pattern: exact per-pair volumes
         # when the pattern pass is affordable, uniform χ-estimate rounds
         # otherwise (the prediction below always uses THIS schedule, so
-        # predicted == measured stays exact either way)
-        from ..core.planner import comm_plan as _comm_plan
-        from ..core.planner import exact_comm_default
-
-        if exact_comm_default(fam):
+        # predicted == measured stays exact either way). On a planned
+        # partition the schedule comes from the planned map's own counts.
+        if cp_part is not None:
+            cp_nbr = cp_part
+            perms, round_L = cp_nbr.permute_schedule(spmv_schedule)
+        elif exact_comm_default(fam):
             cp_nbr = _comm_plan(fam, N_row, d_pad=D_pad, exact=True)
             perms, round_L = cp_nbr.permute_schedule(spmv_schedule)
         else:
@@ -353,9 +400,11 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         roof = rl.analyze(compiled, useful, mesh.devices.size)
     cmp_tag = ("" if not compressed
                else "+mat" if spmv_schedule == "matching" else "+cmp")
+    part_tag = ("+cv" if spmv_balance == "commvol" else "") + \
+        ("+rcm" if spmv_reorder == "rcm" else "")
     rec = {
         "arch": name,
-        "shape": (f"fd_iter[{layout_name}{cmp_tag}"
+        "shape": (f"fd_iter[{layout_name}{part_tag}{cmp_tag}"
                   f"{'+ov' if overlap else ''},Ns={n_s},deg={degree}]"),
         "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": mesh.devices.size,
         "status": "ok", "t_lower_s": round(t_lower, 1),
@@ -363,8 +412,13 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         "model_flops": useful, **roof.row(),
         "chi_comm_plan_L": int(L), "n_vc_max": int(n_vc.max()) if N_row > 1 else 0,
         "spmv_comm": spmv_comm, "spmv_schedule": spmv_schedule,
+        "spmv_balance": spmv_balance, "spmv_reorder": spmv_reorder,
         "nbr_H": H, "nbr_rounds": len(perms),
     }
+    if rowmap is not None:
+        sizes = rowmap.block_sizes(N_row)
+        rec["partition_rows_min"] = int(sizes.min())
+        rec["partition_rows_max"] = int(sizes.max())
     if compressed:
         # round-sum comm prediction of the lowered schedule (identical to
         # the χ-path by construction — perf_model.schedule_comm_time),
@@ -381,8 +435,12 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         from ..core import perf_model as pm
         from ..core.metrics import chi_from_nvc
 
-        bnd = np.minimum(np.arange(N_row + 1) * (D_pad // N_row), D)
-        chim = chi_from_nvc(n_vc, np.diff(bnd), D)
+        if rowmap is not None:
+            n_vm = rowmap.block_sizes(N_row)
+        else:
+            bnd = np.minimum(np.arange(N_row + 1) * (D_pad // N_row), D)
+            n_vm = np.diff(bnd)
+        chim = chi_from_nvc(n_vc, n_vm, D)
         n_b_loc = max(n_s // max(n_col, 1), 1)
         kw = dict(D=D, N_p=N_row, n_b=n_b_loc, chi=chim.chi1,
                   n_nzr=_nnzr(fam), S_d=jnp.dtype(dt).itemsize)
@@ -409,15 +467,49 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         # comm plan already built for the compressed schedule is handed
         # through so the lowered n_row's pattern pass is never paid twice
         exact_ok = exact_comm_default(fam)
+        # precomputed plans/counts only describe the equal-rows partition
+        # — never hand the planned map's counts to the rows combo
         lp = plan_for_mesh(fam, mesh, n_search=n_s, row_axes=("model",),
                            degree=degree, S_d=S_cell,
                            exact_comm=None if exact_ok else False,
                            d_pad=D_pad, n_nzr=_nnzr(fam),
                            machine=machine or _pm.TPU_V5E,
-                           comm_plan_by_row=None if cp_nbr is None
+                           reorder=tuple(dict.fromkeys(
+                               ("none", spmv_reorder))),
+                           comm_plan_by_row=None
+                           if cp_nbr is None or rowmap is not None
                            else {N_row: cp_nbr},
-                           n_vc_by_row=None if exact_ok or N_row <= 1
+                           n_vc_by_row=None
+                           if exact_ok or N_row <= 1 or rowmap is not None
                            else {N_row: n_vc})
+        if rowmap is not None:
+            # before/after panel: the equal-rows partition's χ and pad
+            # volumes vs the planned map's, at the lowered N_row
+            cp_before = _comm_plan(fam, N_row,
+                                   d_pad=-(-D // P_total) * P_total,
+                                   exact=True)
+            for tag, cp_x in (("before", cp_before), ("after", cp_part)):
+                chim_x = cp_x.chi
+                rec[f"partition_{tag}"] = {
+                    "chi1": round(chim_x.chi1, 4),
+                    "chi2": round(chim_x.chi2, 4),
+                    "chi3": round(chim_x.chi3, 4),
+                    "a2a_pad_entries": cp_x.moved_entries_per_device("a2a"),
+                    "H_cyclic": cp_x.moved_entries_per_device(
+                        "compressed", "cyclic"),
+                    "H_matching": cp_x.moved_entries_per_device(
+                        "compressed", "matching"),
+                }
+            if verbose:
+                b, a = rec["partition_before"], rec["partition_after"]
+                print(f"[plan] partition {spmv_balance}/{spmv_reorder} "
+                      f"before -> after at N_row={N_row}:")
+                print(f"       chi2 {b['chi2']:.4f} -> {a['chi2']:.4f}  "
+                      f"chi3 {b['chi3']:.4f} -> {a['chi3']:.4f}")
+                print(f"       pad entries/device: a2a "
+                      f"{b['a2a_pad_entries']} -> {a['a2a_pad_entries']}  "
+                      f"cyclic {b['H_cyclic']} -> {a['H_cyclic']}  "
+                      f"matching {b['H_matching']} -> {a['H_matching']}")
         # predicted per-chip SpMV collective operand bytes of THIS cell:
         # degree halo exchanges — the [N_row, L, n_b] all_to_all send
         # buffer, or the compressed engine's Σ_k L_k ppermute segments —
@@ -468,7 +560,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                   f"ratio full {r_full:.3f} / moved {r_moved:.3f}")
     if verbose:
         print(f"[dryrun-eigen] {name} "
-              f"[{layout_name}{cmp_tag}"
+              f"[{layout_name}{part_tag}{cmp_tag}"
               f"{'+ov' if overlap else ''}] on {rec['mesh']}: OK "
               f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
         if "overlap_model_speedup" in rec:
@@ -619,10 +711,24 @@ def main(argv=None):
                          "'matching' (greedy max-weight matching "
                          "rounds, the '+mat' shape suffix; "
                          "--spmv-schedule of repro.launch.solve)")
+    ap.add_argument("--spmv-balance", default="rows",
+                    choices=["rows", "commvol"],
+                    help="row partition for --eigen cells: 'rows' (equal "
+                         "blocks) or 'commvol' (planned non-uniform "
+                         "boundaries, core/partition.py — the '+cv' cell "
+                         "suffix; the surrogate carries the planned "
+                         "map's exact per-pair volumes)")
+    ap.add_argument("--spmv-reorder", default="none",
+                    choices=["none", "rcm"],
+                    help="row order for --eigen cells: 'none' or 'rcm' "
+                         "(reverse-Cuthill-McKee, applied before "
+                         "partitioning — the '+rcm' cell suffix)")
     ap.add_argument("--plan", action="store_true",
                     help="with --eigen: print the χ-driven planner ranking "
                          "(core/planner.py) and the predicted vs HLO-measured "
-                         "SpMV collective volume of the lowered cell")
+                         "SpMV collective volume of the lowered cell (on a "
+                         "planned partition also the before/after χ and "
+                         "pad volumes)")
     ap.add_argument("--fit-machine", action="store_true",
                     help="time real fused Chebyshev iterations of a small "
                          "instance across mesh splits on local devices, fit "
@@ -655,6 +761,8 @@ def main(argv=None):
                                      plan=args.plan,
                                      spmv_comm=args.spmv_comm,
                                      spmv_schedule=args.spmv_schedule,
+                                     spmv_balance=args.spmv_balance,
+                                     spmv_reorder=args.spmv_reorder,
                                      machine=machine))
         elif args.all:
             for arch, shape, cell in iter_cells():

@@ -9,11 +9,15 @@ vector layout (the paper's production entry point).
 (``core/planner.py``): it enumerates every (n_row x n_col) mesh split,
 layout, comm engine (padded ``a2a`` vs sparsity-``compressed`` neighbor
 ppermute), round scheduler (``cyclic`` shifts vs greedy ``matching``
-rounds for the compressed engine), and overlap option, scores each with
-the analytic perf model from the sparsity pattern alone, prints the
-ranking, and runs the minimum-predicted-time configuration
-(``--n-row/--n-col`` are then ignored; ``--spmv-overlap``,
-``--spmv-comm``, and ``--spmv-schedule`` are decided by the plan).
+rounds for the compressed engine), overlap option, and row partition
+(equal ``rows`` vs planned ``commvol`` boundaries,
+``core/partition.py``), scores each with the analytic perf model from
+the sparsity pattern alone, prints the ranking, and runs the
+minimum-predicted-time configuration (``--n-row/--n-col`` are then
+ignored; ``--spmv-overlap``, ``--spmv-comm``, ``--spmv-schedule``,
+``--spmv-balance``, and ``--spmv-reorder`` are decided by the plan —
+an explicitly requested ``--spmv-reorder rcm`` widens the planner's
+partition axis).
 ``--machine`` points the planner at calibrated constants
 (``dryrun --fit-machine``) instead of the built-in TPU-v5e model.
 
@@ -53,6 +57,7 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
     jax.config.update("jax_enable_x64", True)
     n_dev = len(jax.devices())
     mat = get_family(family, **params)
+    rowmap = None
     if fd.layout == "auto":
         # χ-driven planner: pick the mesh split AND both SpMV engine axes
         # (overlap, comm) from the sparsity pattern before any mesh is
@@ -64,30 +69,41 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
 
         plan = plan_layout(mat, n_dev, n_search=fd.n_search,
                            d_pad=-(-mat.D // n_dev) * n_dev,
-                           machine=machine or pm.TPU_V5E)
+                           machine=machine or pm.TPU_V5E,
+                           reorder=tuple(dict.fromkeys(
+                               ("none", fd.spmv_reorder))))
         best = plan.best
         if verbose:
             print(plan.report())
             print(f"[auto] running {best.describe()} "
                   f"(spmv_overlap={best.overlap}, spmv_comm={best.comm}, "
-                  f"spmv_schedule={best.schedule})")
+                  f"spmv_schedule={best.schedule}, "
+                  f"spmv_balance={best.balance}, "
+                  f"spmv_reorder={best.reorder})")
         n_row, n_col = best.n_row, best.n_col
-        # the chosen split realizes the planned layout
+        # the chosen split realizes the planned layout; the winning
+        # candidate's rowmap (planned at P = n_row·n_col) is handed to
+        # FilterDiag verbatim so the map is never re-planned
+        rowmap = best.rowmap
         fd = dataclasses.replace(fd, layout="panel", spmv_overlap=best.overlap,
                                  spmv_comm=best.comm,
-                                 spmv_schedule=best.schedule)
+                                 spmv_schedule=best.schedule,
+                                 spmv_balance=best.balance,
+                                 spmv_reorder=best.reorder)
     if n_row * n_col > n_dev:
         raise RuntimeError(f"mesh {n_row}x{n_col} needs {n_row*n_col} devices, "
                            f"have {n_dev}")
     mesh = make_solver_mesh(n_row, n_col)
     try:
         with mesh:
-            fdd = FilterDiag(mat, mesh, fd)
+            fdd = FilterDiag(mat, mesh, fd, rowmap=rowmap)
             return fdd.solve(verbose=verbose)
     except Exception:
         if not degraded_ok or n_col == 1:
             raise
-        # degraded mode: drop one column group worth of search vectors
+        # degraded mode: drop one column group worth of search vectors.
+        # The device count changed, so any auto-planned rowmap is stale —
+        # FilterDiag re-plans one from fd2's balance/reorder fields.
         fd2 = FDConfig(**{**fd.__dict__,
                           "n_search": fd.n_search - fd.n_search // n_col})
         mesh2 = make_solver_mesh(n_row, n_col - 1) if n_col > 1 else mesh
@@ -144,6 +160,25 @@ def main(argv=None):
                          "share one round's pad, H_matching <= "
                          "H_cyclic; the dry-run's '+mat' suffix; "
                          "decided by --layout auto)")
+    ap.add_argument("--spmv-balance", default="rows",
+                    choices=["rows", "commvol"],
+                    help="row partition of the horizontal layer: 'rows' "
+                         "(the paper's equal row blocks) or 'commvol' "
+                         "(core/partition.py plans non-uniform shard "
+                         "boundaries that minimize the engines' wire "
+                         "volumes — per-row cost alpha*nnz + beta*cut, "
+                         "prefix-balanced then refined by greedy cut "
+                         "descent; the dry-run's '+cv' suffix; decided "
+                         "by --layout auto)")
+    ap.add_argument("--spmv-reorder", default="none",
+                    choices=["none", "rcm"],
+                    help="row order applied before partitioning: 'none' "
+                         "or 'rcm' (reverse-Cuthill-McKee bandwidth "
+                         "reduction — eigenvalues unchanged, "
+                         "eigenvectors un-permuted on output; the "
+                         "dry-run's '+rcm' suffix; with --layout auto "
+                         "an explicit 'rcm' widens the planner's "
+                         "partition axis)")
     ap.add_argument("--machine", default="tpu-v5e",
                     help="machine model for --layout auto planning: "
                          "'tpu-v5e', 'meggie', or a path to a JSON model "
@@ -163,7 +198,9 @@ def main(argv=None):
                   target=args.target, tol=args.tol, max_iters=args.max_iters,
                   layout=args.layout, spmv_overlap=args.spmv_overlap,
                   spmv_comm=args.spmv_comm,
-                  spmv_schedule=args.spmv_schedule)
+                  spmv_schedule=args.spmv_schedule,
+                  spmv_balance=args.spmv_balance,
+                  spmv_reorder=args.spmv_reorder)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok,
                 machine=machine)

@@ -8,7 +8,28 @@ from __future__ import annotations
 import dataclasses
 import numpy as np
 
-__all__ = ["CSR", "uniform_partition", "csr_from_coo", "csr_to_ell"]
+__all__ = ["CSR", "uniform_partition", "csr_from_coo", "csr_to_ell",
+           "gather_row_entry_idx"]
+
+
+def gather_row_entry_idx(indptr, rows):
+    """(entry_idx, counts): indices into a CSR's ``indices``/``data``
+    arrays selecting the entries of the (arbitrary, not necessarily
+    contiguous) row set ``rows``, concatenated in the given row order.
+
+    Single home of the variable-length row-gather idiom used by the
+    mapped-partition builders (``spmv._csr_rows_at``,
+    ``planner._mapped_row_cols``, ``partition._reordered_pattern``).
+    """
+    indptr = np.asarray(indptr)
+    rows = np.asarray(rows, dtype=np.int64)
+    counts = np.diff(indptr)[rows]
+    starts = indptr[:-1][rows]
+    total = int(counts.sum())
+    idx = (np.arange(total, dtype=np.int64)
+           - np.repeat(np.cumsum(counts) - counts, counts)
+           + np.repeat(starts, counts))
+    return idx, counts
 
 
 @dataclasses.dataclass

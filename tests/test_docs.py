@@ -32,6 +32,7 @@ def test_readme_exists_with_quickstart():
     # the docs/ subsystem is linked from the README
     assert "docs/comm-engines.md" in readme
     assert "docs/planner.md" in readme
+    assert "docs/partitioning.md" in readme
 
 
 def test_gate_detects_undocumented_and_broken_links(tmp_path):
@@ -50,7 +51,18 @@ def test_gate_detects_undocumented_and_broken_links(tmp_path):
     errs = cd.check_config_and_flags_documented()
     assert any("`spmv_schedule`" in e for e in errs)  # FDConfig field
     assert any("`--spmv-schedule`" in e for e in errs)  # CLI flag
+    assert any("`spmv_balance`" in e for e in errs)   # partition field
+    assert any("`spmv_reorder`" in e for e in errs)
+    assert any("`--spmv-balance`" in e for e in errs)  # partition flags
+    assert any("`--spmv-reorder`" in e for e in errs)
     link_errs = cd.check_docs_links()
     assert any("missing.md" in e for e in link_errs)
     assert any("#nope" in e for e in link_errs)
     assert not any("#broken" in e for e in link_errs)
+    # required headline docs: an empty README (and missing pages) trips
+    # both the existence and the navigation check for every page
+    doc_errs = cd.check_required_docs()
+    assert any("docs/partitioning.md" in e and "does not exist" in e
+               for e in doc_errs)
+    assert any("docs/partitioning.md" in e and "referenced" in e
+               for e in doc_errs)

@@ -115,22 +115,25 @@ def test_planner_picks_panel_overlap_when_pillar_excluded():
     assert all(c.n_col < 8 for c in plan.candidates)
     best = plan.best
     assert best.layout == "panel" and best.overlap, plan.report()
-    by_key = {(c.n_row, c.n_col, c.comm, c.overlap): c
+    by_key = {(c.n_row, c.n_col, c.comm, c.overlap, c.balance, c.reorder): c
               for c in plan.candidates}
-    add = by_key[(best.n_row, best.n_col, best.comm, False)]
+    add = by_key[(best.n_row, best.n_col, best.comm, False,
+                  best.balance, best.reorder)]
     assert best.t_pass < add.t_pass
 
 
 def test_planner_ranking_is_model_consistent():
     """Candidate times reproduce the perf model fed each comm engine's
-    exact wire volume (engine_chi of the comm_plan bytes)."""
+    exact wire volume (engine_chi of the comm_plan bytes) — planned
+    (balance/reorder) candidates are scored on their own rowmap's
+    counts."""
     mat = SpinChainXXZ(10, 5)
     n_nzr = estimate_nnzr(mat)
     plan = plan_layout(mat, 8, n_search=16, degree=50)
     assert plan.degree == 50
     for c in plan.candidates:
         if c.n_row > 1:
-            cp = comm_plan(mat, c.n_row)
+            cp = comm_plan(mat, c.n_row, rowmap=c.rowmap)
             moved = cp.moved_entries_per_device(c.comm, c.schedule)
             assert c.chi_eng == pytest.approx(
                 pm.engine_chi(moved, mat.D, c.n_row))
@@ -145,22 +148,30 @@ def test_planner_ranking_is_model_consistent():
         assert c.t_iter == pytest.approx(t_ref)
         assert c.t_pass == pytest.approx(50 * c.t_iter + 2 * c.t_redist)
         assert c.redistribute == (c.n_col > 1)
+        # planned partitions only appear where they can matter, and carry
+        # the map they were scored on
+        if (c.balance, c.reorder) != ("rows", "none"):
+            assert c.rowmap is not None and c.n_row > 1 and c.chi1 > 0
+        else:
+            assert c.rowmap is None
     # the compressed engine never predicts MORE wire bytes than a2a at
-    # the same split, the matching rounds never more than the cyclic
-    # ones, and all engine variants are enumerated
-    by_key = {(c.n_row, c.n_col, c.comm, c.schedule, c.overlap): c
-              for c in plan.candidates}
+    # the same split AND partition, the matching rounds never more than
+    # the cyclic ones, and all engine/partition variants are enumerated
+    by_key = {(c.n_row, c.n_col, c.comm, c.schedule, c.overlap,
+               c.balance, c.reorder): c for c in plan.candidates}
     assert any(c.comm == "compressed" for c in plan.candidates)
     assert any(c.schedule == "matching" for c in plan.candidates)
+    assert any(c.balance == "commvol" for c in plan.candidates)
     assert all(c.schedule == "cyclic" for c in plan.candidates
                if c.comm == "a2a")
     for c in plan.candidates:
         if c.comm == "compressed":
-            a2a = by_key[(c.n_row, c.n_col, "a2a", "cyclic", c.overlap)]
+            a2a = by_key[(c.n_row, c.n_col, "a2a", "cyclic", c.overlap,
+                          c.balance, c.reorder)]
             assert c.comm_bytes_per_device <= a2a.comm_bytes_per_device
             if c.schedule == "matching":
                 cyc = by_key[(c.n_row, c.n_col, "compressed", "cyclic",
-                              c.overlap)]
+                              c.overlap, c.balance, c.reorder)]
                 assert c.comm_bytes_per_device <= cyc.comm_bytes_per_device
     # stack pays no redistribution
     stack = [c for c in plan.candidates if c.n_col == 1]
@@ -181,7 +192,8 @@ cfg = FDConfig(n_target=4, n_search=16, layout="auto")
 with mesh:
     fdd = FilterDiag(mat, mesh, cfg)
 cands = {(c.comm, c.schedule): c for c in fdd.plan.candidates
-         if (c.n_row, c.n_col) == (4, 2) and not c.overlap}
+         if (c.n_row, c.n_col) == (4, 2) and not c.overlap
+         and c.balance == "rows" and c.reorder == "none"}
 # the engine operators the (4,2) panel candidates would run: same global
 # padding as FilterDiag (d_pad = ceil(D/8)*8), 4 row shards
 ell42 = build_dist_ell(mat.build_csr(), 4, d_pad=-(-mat.D // 8) * 8)

@@ -148,6 +148,64 @@ print("HLO BYTES MATCH")
     assert cmp_s <= a2a_s
 
 
+def test_engines_agree_and_hlo_matches_under_commvol():
+    """ISSUE-5 satellite: on a planned commvol partition of the
+    comm-imbalanced RoadNet — planned at the finest level P = 8 and
+    consumed *grouped* at the panel's 4 row shards, exactly like
+    FilterDiag's stack/panel pair — all four {a2a, compressed} x
+    {plain, overlap} engines stay bit-identical and the HLO-measured
+    bytes equal the ``comm_plan(rowmap=...)`` prediction exactly. At
+    the plan level the commvol a2a pad strictly undercuts equal rows."""
+    from repro.core.partition import plan_rowmap
+
+    rn = RoadNet(**ROADNET_SMALL)
+    rm = plan_rowmap(rn, 8, balance="commvol")
+    assert not rm.identity
+    assert rm.D_pad % 4 == 0  # grouped level exists
+    cp_cv = comm_plan(rn, 4, rowmap=rm)
+    pred_a2a = cp_cv.a2a_bytes_per_device(4, 8)
+    pred_cmp = cp_cv.permute_bytes_per_device(4, 8)
+    # at the plan level the reduction is strict
+    assert comm_plan(rn, 8, rowmap=rm).moved_entries_per_device("a2a") \
+        < comm_plan(rn, 8).moved_entries_per_device("a2a")
+    out = run_distributed(f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.matrices import RoadNet
+from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
+from repro.core.partition import plan_rowmap
+from repro.launch.hlo_analysis import analyze_hlo
+rn = RoadNet(**{ROADNET_SMALL!r})
+csr = rn.build_csr()
+rm = plan_rowmap(rn, 8, balance="commvol")
+ell = build_dist_ell(csr, 4, rowmap=rm, split_halo=True)
+mesh = make_solver_mesh(4, 2)
+lay = panel(mesh)
+rng = np.random.default_rng(0)
+X0 = rng.standard_normal((rn.D, 8))
+Xp = rm.embed(X0)
+ys, meas = {{}}, {{}}
+with mesh:
+    sh = lay.vec_sharding(mesh)
+    Xs = jax.device_put(jnp.asarray(Xp), sh)
+    for c in ("a2a", "compressed"):
+        for o in (False, True):
+            f = jax.jit(make_spmv(mesh, lay, ell, comm=c, overlap=o))
+            comp = f.lower(Xs).compile()
+            h = analyze_hlo(comp.as_text())
+            meas[(c, o)] = (int(h.coll_breakdown["all-to-all"]),
+                            int(h.coll_breakdown["collective-permute"]))
+            ys[(c, o)] = np.asarray(f(Xs))
+ref = ys[("a2a", False)]
+for k, y in ys.items():
+    assert np.array_equal(y, ref), k
+assert np.abs(rm.extract(ref) - csr.matvec(X0)).max() < 1e-11
+assert meas[("a2a", False)] == ({pred_a2a}, 0), meas
+assert meas[("compressed", False)] == (0, {pred_cmp}), meas
+print("COMMVOL ENGINES OK", meas)
+""")
+    assert "COMMVOL ENGINES OK" in out
+
+
 def test_roadnet_imbalance_and_auto_selects_compressed():
     """The RoadNet family realizes χ₃/χ₂ > 2 at P = 8 (the paper's severe
     comm-imbalance regime) and the χ-driven planner adopts the compressed

@@ -252,6 +252,65 @@ print("SIX ENGINE GRID OK")
     assert "SIX ENGINE GRID OK" in out
 
 
+def test_six_engines_bit_identical_on_planned_partitions():
+    """ISSUE-5 satellite: the six-engine grid stays bit-for-bit
+    identical on planned (commvol / rcm) partitions of the
+    hub-and-spoke family, and the HLO permute bytes still equal the
+    pattern-only prediction of the planned map for both schedulers."""
+    from repro.core.partition import plan_rowmap
+
+    hub = HubNet(**HUBNET_SMALL)
+    preds = {}
+    for ro in ("rcm",):
+        rm = plan_rowmap(hub, 4, balance="commvol", reorder=ro)
+        cp = comm_plan(hub, 4, rowmap=rm)
+        preds[ro] = {s: cp.permute_bytes_per_device(4, 8, s)
+                     for s in ("cyclic", "matching")}
+    out = run_distributed(f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.matrices import HubNet
+from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
+from repro.core.partition import plan_rowmap
+from repro.launch.hlo_analysis import analyze_hlo
+preds = {preds!r}
+hub = HubNet(**{HUBNET_SMALL!r})
+csr = hub.build_csr()
+mesh = make_solver_mesh(4, 2)
+lay = panel(mesh)
+rng = np.random.default_rng(0)
+X0 = rng.standard_normal((hub.D, 8))
+ref = csr.matvec(X0)
+ENGINES = [(c, s, o) for c, s in (("a2a", "cyclic"),
+                                  ("compressed", "cyclic"),
+                                  ("compressed", "matching"))
+           for o in (False, True)]
+for ro in ("rcm",):
+    rm = plan_rowmap(hub, 4, balance="commvol", reorder=ro)
+    ell = build_dist_ell(csr, 4, rowmap=rm, split_halo=True)
+    Xp = rm.embed(X0)
+    with mesh:
+        sh = lay.vec_sharding(mesh)
+        Xs = jax.device_put(jnp.asarray(Xp), sh)
+        Y = {{}}
+        for c, s, o in ENGINES:
+            f = jax.jit(make_spmv(mesh, lay, ell, comm=c, schedule=s,
+                                  overlap=o))
+            comp = f.lower(Xs).compile()
+            h = analyze_hlo(comp.as_text())
+            if c == "compressed" and not o:
+                assert int(h.coll_breakdown["collective-permute"]) \
+                    == preds[ro][s], (ro, s, h.coll_breakdown)
+            Y[(c, s, o)] = np.asarray(f(Xs))
+    base = Y[("a2a", "cyclic", False)]
+    assert np.abs(rm.extract(base) - ref).max() < 1e-11, ro
+    for k, y in Y.items():
+        assert np.array_equal(y, base), (ro, k)
+    print(f"planned {{ro}} ok")
+print("SIX ENGINES PLANNED OK")
+""", timeout=1500)
+    assert "SIX ENGINES PLANNED OK" in out
+
+
 def test_matching_hlo_bytes_below_cyclic_on_hubnet():
     """Acceptance: on the hub-and-spoke family the HLO-measured
     collective-permute bytes under schedule='matching' equal the
