@@ -86,6 +86,19 @@ def main() -> None:
             "records": records,
             "rows": out_rows,
         }
+        # validate the merged artifact (old + new records) before writing:
+        # the merge keeps records across runs, so a malformed record would
+        # otherwise survive forever (benchmarks/schema.py)
+        from benchmarks.schema import validate_artifact
+
+        schema_errors = validate_artifact(artifact)
+        if schema_errors:
+            for e in schema_errors:
+                print(f"[bench] SCHEMA ERROR: {e}", file=sys.stderr)
+            print(f"[bench] refusing to write {args.json}: "
+                  f"{len(schema_errors)} malformed record(s)",
+                  file=sys.stderr)
+            sys.exit(2)
         with open(args.json, "w") as f:
             json.dump(artifact, f, indent=1)
         print(f"[bench] wrote {len(records)} records "

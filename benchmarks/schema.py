@@ -1,0 +1,132 @@
+"""Schema of the BENCH_spmv.json perf artifact (``run.py --json``).
+
+The artifact is a single JSON object (NOT jsonl):
+
+    {"schema": "bench-spmv/v1", "generated_unix": ..., "benches": [...],
+     "records": [...], "rows": [...]}
+
+``records`` are the machine-readable per-cell perf records the tables
+append to ``tables.RECORDS``; ``rows`` are the printed CSV rows tagged
+with the bench that produced them (the merge-on-write key). Because the
+artifact is *merged* on every write — records of benches not rerun are
+kept — a malformed record would otherwise survive forever; ``run.py``
+therefore validates the full artifact (old + new records) before
+writing and refuses to write on any error.
+"""
+from __future__ import annotations
+
+SCHEMA = "bench-spmv/v1"
+
+#: benches that may own records/rows (run.py's bench registry)
+TABLES = frozenset({
+    "table1", "table2", "table3", "table4", "table5", "fig4", "fig5",
+    "spmv_overlap", "spmv_comm", "spmv_schedule", "partition", "planner",
+    "roofline",
+})
+
+#: engine-axis enums as the tables print them
+ENGINE_VALUES = frozenset({"a2a", "cmp", "cyc", "mat", "a2a+ov", "cmp+ov"})
+SCHEDULE_VALUES = frozenset({"cyclic", "matching"})
+BALANCE_VALUES = frozenset({"rows", "commvol"})
+REORDER_VALUES = frozenset({"none", "rcm"})
+
+_NUMERIC_NONNEG = ("pred_bytes_per_device", "meas_bytes_per_device",
+                   "us_per_call", "rounds", "plan_us", "t_pass_s")
+
+
+def validate_record(rec, where: str = "record") -> list[str]:
+    """Errors of one perf record (empty list = valid)."""
+    errors: list[str] = []
+    if not isinstance(rec, dict):
+        return [f"{where}: not an object: {rec!r}"]
+    table = rec.get("table")
+    if table not in TABLES:
+        errors.append(f"{where}: missing or unknown 'table': {table!r} "
+                      f"(known: {sorted(TABLES)})")
+    if "family" not in rec:
+        errors.append(f"{where}: missing required key 'family'")
+    if "engine" in rec and rec["engine"] is not None \
+            and rec["engine"] not in ENGINE_VALUES:
+        errors.append(f"{where}: engine {rec['engine']!r} not in "
+                      f"{sorted(ENGINE_VALUES)}")
+    if rec.get("schedule") is not None and "schedule" in rec \
+            and rec["schedule"] not in SCHEDULE_VALUES:
+        errors.append(f"{where}: schedule {rec['schedule']!r} not in "
+                      f"{sorted(SCHEDULE_VALUES)}")
+    if "balance" in rec and rec["balance"] not in BALANCE_VALUES:
+        errors.append(f"{where}: balance {rec['balance']!r} not in "
+                      f"{sorted(BALANCE_VALUES)}")
+    if "reorder" in rec and rec["reorder"] not in REORDER_VALUES:
+        errors.append(f"{where}: reorder {rec['reorder']!r} not in "
+                      f"{sorted(REORDER_VALUES)}")
+    for key in _NUMERIC_NONNEG:
+        if key in rec:
+            v = rec[key]
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v < 0:
+                errors.append(f"{where}: {key} must be a nonnegative "
+                              f"number, got {v!r}")
+    # a measured-bytes record without its prediction (or vice versa)
+    # cannot be regression-tracked — the pred/meas pair is the point
+    if "meas_bytes_per_device" in rec \
+            and "pred_bytes_per_device" not in rec:
+        errors.append(f"{where}: meas_bytes_per_device without "
+                      f"pred_bytes_per_device")
+    return errors
+
+
+def validate_rows(rows, where: str = "rows") -> list[str]:
+    errors: list[str] = []
+    if not isinstance(rows, list):
+        return [f"{where}: not a list"]
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict):
+            errors.append(f"{where}[{i}]: not an object")
+            continue
+        for key in ("bench", "name", "us_per_call", "derived"):
+            if key not in r:
+                errors.append(f"{where}[{i}] ({r.get('name', '?')}): "
+                              f"missing key {key!r}")
+        if r.get("bench") is not None and r.get("bench") not in TABLES:
+            errors.append(f"{where}[{i}]: unknown bench {r.get('bench')!r}")
+    return errors
+
+
+def validate_artifact(artifact) -> list[str]:
+    """All schema errors of a full BENCH_spmv.json object."""
+    if not isinstance(artifact, dict):
+        return ["artifact is not a JSON object"]
+    errors: list[str] = []
+    if artifact.get("schema") != SCHEMA:
+        errors.append(f"schema is {artifact.get('schema')!r}, "
+                      f"expected {SCHEMA!r}")
+    records = artifact.get("records")
+    if not isinstance(records, list):
+        errors.append("'records' missing or not a list")
+    else:
+        for i, rec in enumerate(records):
+            errors += validate_record(
+                rec, where=f"records[{i}] "
+                           f"(table={rec.get('table') if isinstance(rec, dict) else '?'}, "
+                           f"family={rec.get('family') if isinstance(rec, dict) else '?'})")
+    errors += validate_rows(artifact.get("rows", []))
+    benches = artifact.get("benches")
+    if not isinstance(benches, list) or not set(benches) <= TABLES:
+        errors.append(f"'benches' missing or contains unknown entries: "
+                      f"{benches!r}")
+    return errors
+
+
+def check_artifact(path: str) -> list[str]:
+    """Load + validate an artifact file; unreadable/unparsable files are
+    themselves schema errors."""
+    import json
+
+    try:
+        with open(path) as f:
+            artifact = json.load(f)
+    except OSError as e:
+        return [f"{path}: cannot read: {e}"]
+    except ValueError as e:
+        return [f"{path}: not valid JSON: {e}"]
+    return [f"{path}: {e}" for e in validate_artifact(artifact)]

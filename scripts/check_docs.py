@@ -54,7 +54,7 @@ REQUIRED_FLAGS = {
                            "--spmv-reorder", "--machine"],
     "repro.launch.dryrun": ["--layout", "--plan", "--spmv-comm",
                             "--spmv-schedule", "--spmv-balance",
-                            "--spmv-reorder", "--fit-machine"],
+                            "--spmv-reorder", "--fit-machine", "--verify"],
     "benchmarks.run": ["--only", "--json"],
 }
 
@@ -62,7 +62,7 @@ REQUIRED_FLAGS = {
 #: from the README — the docs/ subsystem's headline pages cannot
 #: silently drop out of the navigation.
 REQUIRED_DOCS = ("docs/comm-engines.md", "docs/planner.md",
-                 "docs/partitioning.md")
+                 "docs/partitioning.md", "docs/analysis.md")
 
 #: CLIs whose *every* declared flag must be documented in README/docs
 #: (check 5). benchmarks.run is covered by REQUIRED_FLAGS only.

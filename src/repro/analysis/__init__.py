@@ -1,0 +1,31 @@
+"""Static communication verifier (``scripts/check_comm.py`` backend).
+
+Three passes convert the repo's runtime identity checks into compile-time
+guarantees:
+
+* :mod:`repro.analysis.plan_lint` — pattern-only invariants of the
+  neighbor schedules, row maps, and :class:`~repro.core.planner.
+  SpmvCommPlan` byte accounting (no jax, no compilation).
+* :mod:`repro.analysis.overlap_check` — jaxpr dependency proof that the
+  split-phase engine's halo collective is independent of the local
+  contraction (tracing only, no compilation).
+* :mod:`repro.analysis.census` — compile (never execute) an engine cell
+  and attribute every collective op in the optimized HLO to a predicted
+  term from ``comm_plan``; unattributed or missing collectives are
+  errors.
+
+See docs/analysis.md for what each pass proves and how to read reports.
+"""
+from .census import (CensusReport, ExpectedTerm, attribute,  # noqa: F401
+                     expected_census, run_census_cell)
+from .overlap_check import OverlapReport, check_split_phase  # noqa: F401
+from .plan_lint import (lint_comm_plan, lint_dist_ell,  # noqa: F401
+                        lint_rounds, lint_rowmap, lint_schedules,
+                        run_plan_lint)
+
+__all__ = [
+    "CensusReport", "ExpectedTerm", "attribute", "expected_census",
+    "run_census_cell", "OverlapReport", "check_split_phase",
+    "lint_comm_plan", "lint_dist_ell", "lint_rounds", "lint_rowmap",
+    "lint_schedules", "run_plan_lint",
+]

@@ -1,0 +1,271 @@
+"""Collective census: compile an engine cell (never execute it) and
+attribute every collective in the optimized HLO to a predicted term.
+
+The paper's point is that the communication structure of the solver is
+known from the sparsity pattern *before running any code*; this pass
+holds the compiled artifact to that claim. One census cell lowers the
+standard FD macro-iteration — TSQR, redistribution to the filter layout,
+a degree-``n`` Chebyshev filter over the chosen SpMV engine,
+redistribution back, and a Gram all-reduce — with ``.lower().compile()``
+only (no jit execution of the solver loop), walks the HLO via
+:func:`repro.launch.hlo_analysis.collective_census`, and compares the
+measured (kind, operand bytes, multiplicity) multiset against the
+predicted terms:
+
+* halo exchange — ``SpmvCommPlan.spmv_collectives`` × filter degree
+  (one padded ``all-to-all``, or one ``collective-permute`` per neighbor
+  round);
+* TSQR butterfly — log2(P) ``collective-permute`` rounds of the
+  [N_s, N_s] R factor;
+* redistribution — two tiled ``all-to-all`` ops when N_col > 1 (XLA
+  prints either the full local slice or only the moved fraction as the
+  operand, so the term carries both admissible byte sizes);
+* Gram reduction — one [N_s, N_s] ``all-reduce`` (the same term shape
+  the Lanczos per-step reductions produce; Lanczos itself is a host
+  loop and is not part of the compiled cell).
+
+Any measured collective not covered by a term — a spurious all-gather
+from an accidental resharding, say — is an *unattributed collective*
+error; any term the HLO does not realize is a *missing collective*
+error. Both directions must be exactly empty for the cell to pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = ["ExpectedTerm", "CensusReport", "attribute", "expected_census",
+           "run_census_cell"]
+
+_TOL = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpectedTerm:
+    """One predicted collective term: ``count`` executions of ``kind``
+    with ``bytes`` operand bytes each. ``alt_bytes`` lists other operand
+    sizes the same op may legally print (dialect differences such as
+    full-slice vs moved-only all-to-all operands)."""
+
+    label: str
+    kind: str
+    bytes: int
+    count: float
+    alt_bytes: tuple = ()
+
+
+@dataclasses.dataclass
+class CensusReport:
+    """Attribution of a compiled cell's collectives to predicted terms."""
+
+    cell: str
+    expected: list  # [ExpectedTerm]
+    measured: list  # [hlo_analysis.CollectiveOp]
+    errors: list
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def describe(self) -> str:
+        lines = [f"census[{self.cell}]: "
+                 f"{'OK' if self.ok else f'{len(self.errors)} error(s)'}"]
+        lines.append("  predicted:")
+        for t in self.expected:
+            lines.append(f"    {t.label:<28s} {t.count:g} x "
+                         f"{t.kind}({t.bytes}B)")
+        lines.append("  measured:")
+        agg: dict = {}
+        for c in self.measured:
+            agg[(c.kind, c.bytes)] = agg.get((c.kind, c.bytes), 0.0) + c.mult
+        for (kind, b), m in sorted(agg.items()):
+            lines.append(f"    {m:g} x {kind}({b}B)")
+        lines += [f"  ERROR: {e}" for e in self.errors]
+        return "\n".join(lines)
+
+
+def attribute(measured, expected, cell: str = "",
+              extra_errors=()) -> CensusReport:
+    """Match the measured collective multiset against the predicted terms
+    — exact in both directions. Terms and ops are aggregated by
+    (kind, bytes-per-op), so byte-size collisions between terms simply
+    add their counts; ``alt_bytes`` sizes are tried once the primary
+    size is exhausted."""
+    errors = list(extra_errors)
+    meas_mult: dict = {}
+    meas_names: dict = {}
+    for c in measured:
+        key = (c.kind, c.bytes)
+        meas_mult[key] = meas_mult.get(key, 0.0) + c.mult
+        meas_names.setdefault(key, []).append(c.name)
+    remaining = dict(meas_mult)
+    for t in expected:
+        need = float(t.count)
+        for b in (t.bytes,) + tuple(t.alt_bytes):
+            key = (t.kind, int(b))
+            take = min(need, remaining.get(key, 0.0))
+            if take > 0:
+                remaining[key] -= take
+                need -= take
+            if need <= _TOL:
+                break
+        if need > _TOL:
+            errors.append(
+                f"[{cell}] missing collective: predicted term {t.label!r} "
+                f"({t.count:g} x {t.kind}({t.bytes}B)) is short by "
+                f"{need:g} in the compiled HLO")
+    for (kind, b), mult in sorted(remaining.items()):
+        if mult > _TOL:
+            names = ", ".join(meas_names[(kind, b)][:4])
+            errors.append(
+                f"[{cell}] unattributed collective: {mult:g} x "
+                f"{kind}({b}B) matches no predicted term (ops: {names})")
+    return CensusReport(cell=cell, expected=list(expected),
+                        measured=list(measured), errors=errors)
+
+
+def expected_census(cp, *, comm: str, schedule: str, degree: int, n_b: int,
+                    S_d: int, n_s: int, P_total: int, n_col: int,
+                    D_pad: int) -> list:
+    """Predicted terms of one FD macro-iteration: the halo exchange of
+    ``degree`` SpMV applications plus the layout-level collectives.
+    ``n_b`` is the filter layout's local bundle width (n_s / N_col)."""
+    terms = []
+    for kind, b, cnt in cp.spmv_collectives(comm, schedule, n_b, S_d):
+        terms.append(ExpectedTerm(
+            label=f"halo-exchange[{comm}/{schedule}]", kind=kind, bytes=b,
+            count=cnt * degree))
+    if P_total > 1:
+        levels = int(math.log2(P_total))
+        terms.append(ExpectedTerm("tsqr-butterfly", "collective-permute",
+                                  n_s * n_s * S_d, levels))
+        terms.append(ExpectedTerm("gram-allreduce", "all-reduce",
+                                  n_s * n_s * S_d, 1))
+    if n_col > 1:
+        full = (D_pad // P_total) * n_s * S_d
+        moved = full * (n_col - 1) // n_col
+        for leg in ("to_panel", "to_stack"):
+            terms.append(ExpectedTerm(f"redistribute[{leg}]", "all-to-all",
+                                      full, 1, alt_bytes=(moved,)))
+    return terms
+
+
+def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
+                    comm: str = "a2a", schedule: str = "cyclic",
+                    overlap: bool = False, balance: str = "rows",
+                    reorder: str = "none", n_s: int = 8, degree: int = 6,
+                    dtype=None, wrap=None) -> CensusReport:
+    """Compile one engine cell on a fake-CPU mesh of ``P_total`` devices
+    and attribute its collectives. Returns the :class:`CensusReport`;
+    never executes the compiled program.
+
+    The cell is the FD macro-iteration at small scale: TSQR in the stack
+    layout, redistribution into ``layout``, a degree-``degree`` Chebyshev
+    filter over ``make_spmv(comm=..., schedule=..., overlap=...)``,
+    redistribution back, and one Gram product. ``balance``/``reorder``
+    lower the cell on a planned :class:`~repro.core.partition.RowMap`
+    (planned at the filter level with ``block_multiple`` so its padded
+    extent divides the full mesh). ``wrap`` is the planted-defect seam
+    used by the negative tests: ``wrap(iteration, mesh, stack_layout)``
+    may return a mutated iteration whose extra collectives the census
+    must then flag.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import layouts as lo
+    from ..core.chebyshev import chebyshev_filter
+    from ..core.orthogonalize import make_gram, make_tsqr
+    from ..core.partition import plan_rowmap
+    from ..core.planner import comm_plan, layout_on_mesh
+    from ..core.redistribute import make_redistribute
+    from ..core.spmv import build_dist_ell, make_spmv
+    from ..launch.hlo_analysis import collective_census
+
+    if len(jax.devices()) < P_total:
+        raise RuntimeError(
+            f"census needs {P_total} devices but only {len(jax.devices())} "
+            f"are visible — set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={P_total} before importing jax")
+    if degree < 2:
+        raise ValueError("chebyshev_filter needs degree >= 2")
+    dtype = jnp.dtype(dtype or
+                      (jnp.float64 if jax.config.jax_enable_x64
+                       else jnp.float32))
+    S_d = dtype.itemsize
+
+    # mesh + layouts, mirroring FilterDiag: the stack layout shards D over
+    # every axis (row axes slowest), the filter layout is the chosen one
+    n_row_mesh = max(P_total // 2, 1)
+    n_col_mesh = P_total // n_row_mesh
+    mesh = lo.make_solver_mesh(n_row_mesh, n_col_mesh)
+    panel_l = layout_on_mesh(mesh, layout)
+    stack_l = lo.Layout("stack", panel_l.dist_axes + panel_l.bundle_axes, ())
+    N_row = panel_l.n_row(mesh)
+    N_col = panel_l.n_col(mesh)
+    n_s = -(-n_s // max(N_col, 1)) * max(N_col, 1)
+    n_b = n_s // max(N_col, 1)
+
+    extra_errors = []
+    rowmap = None
+    if (balance, reorder) != ("rows", "none"):
+        if N_row > 1:
+            rowmap = plan_rowmap(matrix, N_row, balance=balance,
+                                 reorder=reorder,
+                                 block_multiple=P_total // N_row)
+            if rowmap.identity:
+                rowmap = None  # planned map degenerated to equal rows
+        else:
+            balance, reorder = "rows", "none"  # no halo to re-balance
+    D = matrix.shape[0] if hasattr(matrix, "shape") else matrix.D
+    D_pad = rowmap.D_pad if rowmap is not None \
+        else -(-D // P_total) * P_total
+
+    ell = build_dist_ell(matrix, N_row, dtype=dtype, d_pad=D_pad,
+                         split_halo=overlap, rowmap=rowmap)
+    if rowmap is not None:
+        cp = comm_plan(matrix, N_row, rowmap=rowmap)
+    else:
+        cp = comm_plan(matrix, N_row, d_pad=D_pad, exact=True)
+    # static plan vs built engine: the census prediction below comes from
+    # the pattern-only comm_plan, so it only proves anything if the plan
+    # and the operator agree on the volumes
+    if cp.L != ell.L:
+        extra_errors.append(f"comm_plan L = {cp.L} != engine L = {ell.L}")
+    if (cp.pair_counts is not None and ell.pair_counts is not None
+            and not np.array_equal(cp.pair_counts, ell.pair_counts)):
+        extra_errors.append("comm_plan pair_counts diverge from the built "
+                            "operator's pair_counts")
+
+    spmv = make_spmv(mesh, panel_l, ell, overlap=overlap, comm=comm,
+                     schedule=schedule)
+    tsqr = make_tsqr(mesh, stack_l)
+    to_panel, to_stack = make_redistribute(mesh, stack_l, panel_l)
+    gram = make_gram(mesh, stack_l)
+    mu = np.linspace(1.0, 0.5, degree + 1)
+
+    def iteration(V):
+        Q, _ = tsqr(V)
+        Vp = to_panel(Q)
+        W = chebyshev_filter(spmv, mu, 0.5, 0.1, Vp)
+        Vs = to_stack(W)
+        return Vs, gram(Vs, Vs)
+
+    if wrap is not None:
+        iteration = wrap(iteration, mesh, stack_l)
+
+    vsh = jax.NamedSharding(mesh, stack_l.vec_pspec())
+    V = jax.ShapeDtypeStruct((D_pad, n_s), dtype)
+    with mesh:
+        compiled = jax.jit(iteration, in_shardings=(vsh,),
+                           out_shardings=(vsh, None)).lower(V).compile()
+    measured = collective_census(compiled.as_text())
+    expected = expected_census(cp, comm=comm, schedule=schedule,
+                               degree=degree, n_b=n_b, S_d=S_d, n_s=n_s,
+                               P_total=P_total, n_col=N_col, D_pad=D_pad)
+    cell = (f"{layout}/{comm}-{schedule}{'+ov' if overlap else ''}"
+            f"/{balance}+{reorder}/P{P_total}")
+    return attribute(measured, expected, cell=cell,
+                     extra_errors=[f"[{cell}] {e}" for e in extra_errors])

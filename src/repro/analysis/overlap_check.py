@@ -1,0 +1,194 @@
+"""Overlap dependency checker: prove the split-phase engine's halo
+exchange is independent of the local contraction, from the jaxpr alone.
+
+The split-phase (``overlap=True``) SpMV engines issue the halo collective
+*before* the local contraction so XLA's async scheduler can hide the
+exchange behind local work. That only helps if the dependence structure
+permits it; this pass traverses the closed jaxpr of an engine closure
+(tracing only — nothing is compiled or executed) and checks two
+conditions:
+
+* **(A) independent exchange** — no halo collective (``all_to_all`` /
+  ``ppermute``) takes a transitive data dependence on any contraction
+  output. A violation means the exchange cannot start until local
+  compute finishes: the engine silently lost its overlap.
+* **(B) hideable work** — at least one contraction has no transitive
+  dependence on any collective, i.e. there *is* local work the exchange
+  can hide behind. The plain engines fail exactly this condition (their
+  single contraction consumes the received halo), which is the built-in
+  sanity check that the pass is not vacuous.
+
+Contractions are ``lax.scan`` / ``while`` / ``dot_general`` equations
+(the ELL contraction is a scan over slot columns). Sub-jaxprs of
+``pjit`` / ``shard_map`` / custom-derivative wrappers are traversed with
+per-variable precision; bodies of sequential loops are traversed
+conservatively (every body input inherits the loop's union dependence
+set), so a collective nested *inside* a sequential contraction loop is
+reported as dependent — which is what a future round-pipelined engine
+must explicitly reason about, not silently pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from jax import core as jax_core
+import jax
+
+__all__ = ["OverlapReport", "check_split_phase", "HALO_PRIMITIVES",
+           "COLLECTIVE_PRIMITIVES", "CONTRACTION_PRIMITIVES"]
+
+HALO_PRIMITIVES = frozenset({"all_to_all", "ppermute"})
+COLLECTIVE_PRIMITIVES = HALO_PRIMITIVES | {
+    "psum", "all_gather", "reduce_scatter", "pmax", "pmin", "pgather"}
+CONTRACTION_PRIMITIVES = frozenset({"scan", "while", "dot_general"})
+
+# containers traversed with exact per-variable dependence mapping
+# (their invars line up 1:1 with the sub-jaxpr's invars)
+_PRECISE_CONTAINERS = ("pjit", "shard_map", "closed_call", "core_call",
+                       "remat", "checkpoint", "custom_jvp_call",
+                       "custom_vjp_call", "custom_jvp_call_jaxpr")
+
+
+@dataclasses.dataclass
+class OverlapReport:
+    """Result of one split-phase dependency check."""
+
+    collectives: list  # (label, primitive, depends_on_contraction: bool)
+    contractions: list  # (label, depends_on_collective: bool)
+    errors: list
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    @property
+    def independent_contractions(self) -> int:
+        """Contractions with no collective ancestor — the local work the
+        exchange can hide behind."""
+        return sum(1 for _, dep in self.contractions if not dep)
+
+    def describe(self) -> str:
+        lines = [f"collectives: {len(self.collectives)}, contractions: "
+                 f"{len(self.contractions)} "
+                 f"({self.independent_contractions} independent)"]
+        for label, prim, dep in self.collectives:
+            lines.append(f"  {label}: {prim} "
+                         f"{'DEPENDS ON CONTRACTION' if dep else 'independent'}")
+        lines += [f"  ERROR: {e}" for e in self.errors]
+        return "\n".join(lines)
+
+
+def _sub_jaxprs(value):
+    if isinstance(value, jax_core.ClosedJaxpr):
+        return [value.jaxpr]
+    if isinstance(value, jax_core.Jaxpr):
+        return [value]
+    if isinstance(value, (tuple, list)):
+        return [j for v in value for j in _sub_jaxprs(v)]
+    return []
+
+
+class _Recorder:
+    def __init__(self):
+        self.counter = 0
+        self.collectives = []  # (label, prim, frozenset deps)
+        self.contractions = []  # (label, frozenset deps)
+
+    def fresh(self, prim: str) -> str:
+        self.counter += 1
+        return f"{prim}#{self.counter}"
+
+
+_EMPTY: frozenset = frozenset()
+
+
+def _walk(jaxpr, in_deps, rec: _Recorder):
+    """Propagate per-variable dependence sets through one jaxpr; each set
+    holds ("contract"|"coll", label) tags of ancestor equations. Returns
+    the outvars' sets."""
+    env: dict = {}
+
+    def read(atom):
+        if isinstance(atom, jax_core.Literal):
+            return _EMPTY
+        return env.get(atom, _EMPTY)
+
+    for v, d in zip(jaxpr.invars, in_deps):
+        env[v] = d
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        ins = [read(a) for a in eqn.invars]
+        union = frozenset().union(*ins) if ins else _EMPTY
+        subs = [j for v in eqn.params.values() for j in _sub_jaxprs(v)]
+        if (prim in _PRECISE_CONTAINERS and len(subs) == 1
+                and len(subs[0].invars) == len(eqn.invars)):
+            outs = _walk(subs[0], ins, rec)
+            for v, d in zip(eqn.outvars, outs):
+                env[v] = d
+            continue
+        node = union
+        if prim in CONTRACTION_PRIMITIVES:
+            label = rec.fresh(prim)
+            rec.contractions.append((label, union))
+            node = node | {("contract", label)}
+        if prim in COLLECTIVE_PRIMITIVES:
+            label = rec.fresh(prim)
+            rec.collectives.append((label, prim, union))
+            node = node | {("coll", label)}
+        # conservative traversal of remaining sub-jaxprs (loop bodies,
+        # branches): every body input inherits the node's dependence set
+        # and everything found inside feeds back into the outputs
+        for sj in subs:
+            inner = _walk(sj, [node] * len(sj.invars), rec)
+            for d in inner:
+                node = node | d
+        for v in eqn.outvars:
+            env[v] = node
+    return [read(v) for v in jaxpr.outvars]
+
+
+def check_split_phase(fn, *args, halo_primitives=HALO_PRIMITIVES,
+                      expect_halo: bool = True) -> OverlapReport:
+    """Trace ``fn(*args)`` (ShapeDtypeStructs suffice) and prove the
+    split-phase conditions (A) and (B) on its jaxpr.
+
+    ``expect_halo=False`` skips condition (B) and the no-halo error — for
+    zero-halo cells (pillar layout / single shard) where the engine
+    legitimately emits no exchange.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    rec = _Recorder()
+    _walk(closed.jaxpr, [_EMPTY] * len(closed.jaxpr.invars), rec)
+
+    def has(deps, kind):
+        return any(k == kind for k, _ in deps)
+
+    collectives = []
+    errors = []
+    halo_seen = False
+    for label, prim, deps in rec.collectives:
+        if prim not in halo_primitives:
+            continue
+        halo_seen = True
+        dep = has(deps, "contract")
+        collectives.append((label, prim, dep))
+        if dep:
+            culprits = sorted(lbl for k, lbl in deps if k == "contract")
+            errors.append(
+                f"halo collective {label} ({prim}) depends on contraction "
+                f"output(s) {culprits}: the exchange cannot start before "
+                f"local compute — split-phase overlap is lost")
+    contractions = [(label, has(deps, "coll"))
+                    for label, deps in rec.contractions]
+    if expect_halo:
+        if not halo_seen:
+            errors.append("no halo collective found in the jaxpr — nothing "
+                          "to overlap (wrong closure, or a zero-halo cell "
+                          "checked with expect_halo=True)")
+        elif not any(not dep for _, dep in contractions):
+            errors.append(
+                "no contraction is independent of the collectives: there "
+                "is no local work the halo exchange could hide behind "
+                "(the plain engines fail exactly this)")
+    return OverlapReport(collectives=collectives, contractions=contractions,
+                        errors=errors)

@@ -1,0 +1,283 @@
+"""Plan-invariant linter: pattern-only checks, no compilation at all.
+
+Everything here runs on numpy data that exists *before* any engine is
+built — the pair-volume matrix, the neighbor schedules derived from it,
+the planned row map, and the :class:`~repro.core.planner.SpmvCommPlan`
+byte accounting. The invariants are exactly the assumptions the SpMV
+engines and the χ-driven planner silently rely on:
+
+* every neighbor round is a valid partial permutation (each device at
+  most once as source, at most once as destination, never to itself)
+  whose pad equals the max scheduled pair volume;
+* every nonzero (sender, receiver) pair is scheduled in exactly one
+  round with enough pad — no dropped and no double-sent pairs;
+* ``H_matching <= H_cyclic`` (the matching scheduler's construction
+  guarantee) and both are bounded by the padded a2a's ``(P-1) * L``;
+* a zero-halo partition yields empty schedules and zero predicted bytes;
+* the RowMap embed/extract is a bijection (eigenvector un-permutation
+  cannot lose rows);
+* ``SpmvCommPlan`` bytes are internally consistent across the comm /
+  schedule / partition axes and against its own pair counts.
+
+Each function returns a list of human-readable error strings (empty =
+clean); ``run_plan_lint`` orchestrates all of them for one matrix.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["lint_rounds", "lint_schedules", "lint_rowmap",
+           "lint_comm_plan", "lint_dist_ell", "run_plan_lint"]
+
+
+def lint_rounds(pair_counts, perms, round_L, label: str = "") -> list[str]:
+    """Check one schedule's rounds against the pair-volume matrix.
+
+    ``perms``/``round_L`` are in :func:`repro.core.spmv.neighbor_schedule`
+    format. Violations found here are exactly what would corrupt the
+    compressed engine's receive-buffer layout (``DistEll._round_offsets``
+    assigns each scheduled pair a contiguous ``round_L[r]`` slot range).
+    """
+    pc = np.asarray(pair_counts)
+    P = pc.shape[0]
+    tag = f"[{label}] " if label else ""
+    errors: list[str] = []
+    if pc.shape != (P, P):
+        return [f"{tag}pair_counts is not square: {pc.shape}"]
+    if len(perms) != len(round_L):
+        errors.append(f"{tag}{len(perms)} rounds but {len(round_L)} pads")
+    seen: dict[tuple[int, int], int] = {}
+    for r, (perm, Lr) in enumerate(zip(perms, round_L)):
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        if len(set(srcs)) != len(srcs):
+            errors.append(f"{tag}round {r} repeats a source device: not a "
+                          f"partial permutation ({sorted(perm)})")
+        if len(set(dsts)) != len(dsts):
+            errors.append(f"{tag}round {r} repeats a destination device: "
+                          f"not a partial permutation ({sorted(perm)})")
+        for s, d in perm:
+            if s == d:
+                errors.append(f"{tag}round {r} schedules a self-send "
+                              f"({s} -> {d})")
+            if not (0 <= s < P and 0 <= d < P):
+                errors.append(f"{tag}round {r} pair ({s}, {d}) outside "
+                              f"device range [0, {P})")
+                continue
+            if (s, d) in seen:
+                errors.append(f"{tag}pair ({s} -> {d}) double-sent: "
+                              f"scheduled in rounds {seen[s, d]} and {r}")
+            seen[s, d] = r
+            if pc[s, d] > Lr:
+                errors.append(f"{tag}round {r} pad {Lr} < pair volume "
+                              f"L[{s},{d}] = {int(pc[s, d])} (truncated send)")
+        vols = [int(pc[s, d]) for s, d in perm
+                if 0 <= s < P and 0 <= d < P]
+        if vols and Lr != max(vols):
+            errors.append(f"{tag}round {r} pad {Lr} != max scheduled pair "
+                          f"volume {max(vols)} (wasted or short pad)")
+        if Lr <= 0:
+            errors.append(f"{tag}round {r} has nonpositive pad {Lr}")
+    for s in range(P):
+        for d in range(P):
+            if s != d and pc[s, d] and (s, d) not in seen:
+                errors.append(f"{tag}nonzero pair ({s} -> {d}, volume "
+                              f"{int(pc[s, d])}) scheduled in no round "
+                              f"(dropped halo data)")
+    return errors
+
+
+def lint_schedules(pair_counts, label: str = "") -> list[str]:
+    """Derive both schedulers from ``pair_counts`` via the engine's own
+    :func:`~repro.core.spmv.neighbor_schedule` and lint each, plus the
+    cross-schedule invariants (H_matching <= H_cyclic <= (P-1)·L; empty
+    pair matrix -> empty schedules)."""
+    from ..core.spmv import SPMV_SCHEDULES, neighbor_schedule
+
+    pc = np.asarray(pair_counts)
+    tag = f"[{label}] " if label else ""
+    errors: list[str] = []
+    H = {}
+    for sched in SPMV_SCHEDULES:
+        perms, round_L = neighbor_schedule(pc, sched)
+        errors += lint_rounds(pc, perms, round_L,
+                              label=f"{label}:{sched}" if label else sched)
+        H[sched] = int(sum(round_L))
+        if not pc.any() and perms:
+            errors.append(f"{tag}zero-halo pair matrix but schedule "
+                          f"{sched!r} has {len(perms)} rounds")
+    if H["matching"] > H["cyclic"]:
+        errors.append(f"{tag}H_matching = {H['matching']} > H_cyclic = "
+                      f"{H['cyclic']} (matching must never pay more)")
+    L = int(pc.max()) if pc.size else 0
+    P = pc.shape[0]
+    if H["cyclic"] > max(P - 1, 0) * L:
+        errors.append(f"{tag}H_cyclic = {H['cyclic']} exceeds the padded "
+                      f"a2a bound (P-1)*L = {(P - 1) * L}")
+    return errors
+
+
+def lint_rowmap(rowmap, label: str = "") -> list[str]:
+    """RowMap structural invariants: monotone boundaries covering [0, D),
+    blocks within the padded extent, and a bijective embed/extract."""
+    tag = f"[{label}] " if label else ""
+    errors: list[str] = []
+    b = np.asarray(rowmap.boundaries, dtype=np.int64)
+    if b.shape != (rowmap.P + 1,):
+        errors.append(f"{tag}boundaries shape {b.shape} != (P+1,) = "
+                      f"({rowmap.P + 1},)")
+        return errors
+    if b[0] != 0 or b[-1] != rowmap.D:
+        errors.append(f"{tag}boundaries do not span [0, D): "
+                      f"b[0]={int(b[0])}, b[-1]={int(b[-1])}, D={rowmap.D}")
+    if (np.diff(b) < 0).any():
+        errors.append(f"{tag}boundaries not monotone: {b.tolist()}")
+    sizes = np.diff(b)
+    if (sizes > rowmap.R).any():
+        p = int(np.argmax(sizes))
+        errors.append(f"{tag}block {p} holds {int(sizes[p])} rows > padded "
+                      f"extent R = {rowmap.R}")
+    perm = np.asarray(rowmap.perm)
+    if perm.shape != (rowmap.D,) or np.unique(perm).size != rowmap.D:
+        errors.append(f"{tag}perm is not a permutation of [0, D)")
+    if not rowmap.is_bijection():
+        errors.append(f"{tag}embed/extract is not a bijection "
+                      f"(extract(embed(X)) != X)")
+    else:
+        # spot-check the roundtrip on data — cheap and fully independent
+        # of the is_bijection() implementation
+        rng = np.random.default_rng(0)
+        X = rng.standard_normal(rowmap.D)
+        if not np.array_equal(rowmap.extract(rowmap.embed(X)), X):
+            errors.append(f"{tag}extract(embed(X)) != X on random data")
+    return errors
+
+
+def lint_comm_plan(cp, label: str = "", n_b: int = 3, S_d: int = 8
+                   ) -> list[str]:
+    """SpmvCommPlan internal consistency across the engine axes.
+
+    On the exact path this cross-checks ``L``/``n_vc`` against the pair
+    counts, lints both neighbor schedules, and verifies the byte
+    accounting (``a2a_bytes_per_device``, ``comm_bytes_per_device``) is
+    the moved-entry count times ``n_b * S_d`` for both engines.
+    """
+    tag = f"[{label}] " if label else ""
+    errors: list[str] = []
+    if cp.n_row <= 1 or cp.L == 0:
+        # zero-halo plan: everything must collapse to "no communication"
+        if cp.a2a_bytes_per_device(n_b, S_d) != 0:
+            errors.append(f"{tag}zero-halo plan predicts nonzero a2a bytes")
+        if cp.moved_entries_per_device("a2a") != 0:
+            errors.append(f"{tag}zero-halo plan moves a2a entries")
+        if cp.pair_counts is not None:
+            if cp.pair_counts.any():
+                errors.append(f"{tag}zero-halo plan carries nonzero "
+                              f"pair_counts")
+            for sched in ("cyclic", "matching"):
+                if cp.permute_schedule(sched)[0]:
+                    errors.append(f"{tag}zero-halo plan has {sched} rounds")
+        return errors
+    pc = cp.pair_counts
+    if pc is not None:
+        pc = np.asarray(pc)
+        if np.diagonal(pc).any():
+            errors.append(f"{tag}pair_counts has nonzero diagonal "
+                          f"(self-halo)")
+        if int(pc.max()) != cp.L:
+            errors.append(f"{tag}L = {cp.L} != max pair volume "
+                          f"{int(pc.max())}")
+        recv = pc.sum(axis=0)
+        if not np.array_equal(recv, np.asarray(cp.n_vc)):
+            errors.append(f"{tag}column sums of pair_counts disagree with "
+                          f"n_vc (remote-column accounting broken)")
+        errors += lint_schedules(pc, label=label)
+        for sched in ("cyclic", "matching"):
+            H = int(sum(cp.permute_schedule(sched)[1]))
+            if cp.moved_entries_per_device("compressed", sched) != H:
+                errors.append(f"{tag}moved_entries(compressed, {sched}) != "
+                              f"round sum H = {H}")
+            want = H * n_b * S_d
+            got = cp.comm_bytes_per_device("compressed", n_b, S_d, sched)
+            if got != want:
+                errors.append(f"{tag}comm_bytes(compressed, {sched}) = "
+                              f"{got} != H*n_b*S_d = {want}")
+            terms = cp.spmv_collectives("compressed", sched, n_b, S_d)
+            if sum(b * c for _, b, c in terms) != want:
+                errors.append(f"{tag}spmv_collectives(compressed, {sched}) "
+                              f"bytes disagree with comm_bytes ({want})")
+    moved = cp.moved_entries_per_device("a2a")
+    if moved != cp.n_row * cp.L:
+        errors.append(f"{tag}moved_entries(a2a) = {moved} != P*L = "
+                      f"{cp.n_row * cp.L}")
+    if cp.a2a_bytes_per_device(n_b, S_d) != moved * n_b * S_d:
+        errors.append(f"{tag}a2a_bytes_per_device != moved*n_b*S_d")
+    terms = cp.spmv_collectives("a2a", "cyclic", n_b, S_d)
+    if sum(b * c for _, b, c in terms) != moved * n_b * S_d:
+        errors.append(f"{tag}spmv_collectives(a2a) bytes disagree with "
+                      f"a2a_bytes_per_device")
+    if cp.rowmap is not None:
+        errors += lint_rowmap(cp.rowmap, label=label)
+    return errors
+
+
+def lint_dist_ell(ell, label: str = "") -> list[str]:
+    """Engine-side invariants of a built operator: the schedules the
+    engine will actually execute (``DistEll.neighbor_plan``) must match
+    the ones re-derived from its own pair counts, and the send indices
+    must stay inside the local row block."""
+    from ..core.spmv import SPMV_SCHEDULES, neighbor_schedule
+
+    tag = f"[{label}] " if label else ""
+    errors: list[str] = []
+    send = np.asarray(ell.send_idx)
+    if send.size and (send.min() < 0 or send.max() >= ell.R):
+        errors.append(f"{tag}send_idx outside the local row block "
+                      f"[0, R={ell.R})")
+    if ell.pair_counts is None:
+        return errors
+    pc = np.asarray(ell.pair_counts)
+    if int(pc.max(initial=0)) > ell.L:
+        errors.append(f"{tag}pair volume {int(pc.max())} exceeds the "
+                      f"padded slot count L = {ell.L}")
+    for sched in SPMV_SCHEDULES:
+        perms, round_L = neighbor_schedule(pc, sched)
+        if not pc.any():
+            if perms:
+                errors.append(f"{tag}zero-halo operator but {sched} "
+                              f"schedule has rounds")
+            continue
+        plan = ell.neighbor_plan(schedule=sched)
+        if plan.perms != perms or plan.round_L != round_L:
+            errors.append(f"{tag}engine {sched} schedule diverges from "
+                          f"neighbor_schedule(pair_counts) — plan and "
+                          f"engine no longer share one source of truth")
+        errors += lint_rounds(pc, plan.perms, plan.round_L,
+                              label=f"{label}:{sched}" if label else sched)
+        pairs = plan.scheduled_pairs()
+        if len(set(pairs)) != len(pairs):
+            errors.append(f"{tag}{sched} schedule repeats a (src, dst) "
+                          f"pair across rounds")
+    return errors
+
+
+def run_plan_lint(matrix, n_rows=(4, 8), balances=("rows", "commvol"),
+                  label: str = "") -> list[str]:
+    """Full pattern-only lint of one matrix: comm plans (and their
+    schedules, byte accounting, and row maps) at every shard count in
+    ``n_rows`` crossed with the partition ``balances``."""
+    from ..core.partition import plan_rowmap
+    from ..core.planner import comm_plan
+
+    errors: list[str] = []
+    for P in n_rows:
+        for balance in balances:
+            cell = f"{label}P{P}:{balance}" if label else f"P{P}:{balance}"
+            if balance == "rows":
+                cp = comm_plan(matrix, P, exact=True)
+            else:
+                rm = plan_rowmap(matrix, P, balance=balance)
+                errors += lint_rowmap(rm, label=cell)
+                cp = comm_plan(matrix, P, rowmap=rm)
+            errors += lint_comm_plan(cp, label=cell)
+    return errors

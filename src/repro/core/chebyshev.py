@@ -11,7 +11,6 @@ Also provides KPM moment accumulation (used for the DOS panels, Figs 7/8).
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -50,10 +50,10 @@ from jax.sharding import Mesh
 from . import filters
 from .chebyshev import chebyshev_filter, scale_params
 from .lanczos import lanczos_interval
-from .layouts import Layout, panel, stack
+from .layouts import Layout
 from .orthogonalize import make_gram, make_svqb, make_tsqr
 from .redistribute import make_redistribute
-from .spmv import DistEll, Partition, build_dist_ell, make_spmv
+from .spmv import build_dist_ell, make_spmv
 
 __all__ = ["FDConfig", "FDResult", "FilterDiag"]
 

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map

@@ -165,6 +165,20 @@ class RowMap:
         """[D_pad] bool: positions holding a real row (False = pad)."""
         return self.row_of >= 0
 
+    def is_bijection(self) -> bool:
+        """True iff the embed is injective into [0, D_pad) and ``row_of``
+        inverts it on every real row — i.e. ``extract(embed(X)) == X``
+        holds structurally. The static plan linter
+        (``repro.analysis.plan_lint``) gates on this."""
+        pos = self.pos
+        if pos.size != self.D:
+            return False
+        if pos.size and (pos.min() < 0 or pos.max() >= self.D_pad):
+            return False
+        if np.unique(pos).size != self.D:
+            return False
+        return bool((self.row_of[pos] == np.arange(self.D)).all())
+
     def level_R(self, n_row: int) -> int:
         """Padded rows per shard at a grouped level of ``n_row`` shards."""
         if self.D_pad % n_row:

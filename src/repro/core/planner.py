@@ -210,6 +210,28 @@ class SpmvCommPlan:
         with compressed rounds derived by ``schedule``."""
         return self.moved_entries_per_device(comm, schedule) * n_b * S_d
 
+    def spmv_collectives(self, comm: str, schedule: str, n_b: int, S_d: int
+                         ) -> tuple[tuple[str, int, int], ...]:
+        """Static (HLO kind, operand bytes, op count) triples of ONE SpMV's
+        halo exchange — the collective-census contract of the engine
+        (``repro.analysis.census`` attributes every measured collective to
+        one of these terms, scaled by the filter degree).
+
+        ``"a2a"`` emits one ``all-to-all`` over the padded ``[P, L, n_b]``
+        send buffer; ``"compressed"`` emits one ``collective-permute`` per
+        ``schedule`` round, each moving its ``round_L[r] * n_b`` slots. A
+        zero-halo partition (L == 0 or a single shard) emits nothing.
+        """
+        if self.n_row <= 1 or self.L == 0:
+            return ()
+        if comm == "a2a":
+            return (("all-to-all", self.n_row * self.L * n_b * S_d, 1),)
+        if comm != "compressed":
+            raise ValueError(f"unknown comm engine {comm!r}")
+        _, round_L = self.permute_schedule(schedule)
+        return tuple(("collective-permute", Lk * n_b * S_d, 1)
+                     for Lk in round_L)
+
 
 def _remote_cols(matrix, a: int, b: int, chunk: int = 2_000_000) -> np.ndarray:
     """Distinct columns outside [a, b) referenced by rows [a, b)."""

@@ -41,11 +41,9 @@ TPU — the tiled all_to_all already produces the canonical layout.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from .layouts import Layout
 

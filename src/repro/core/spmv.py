@@ -94,17 +94,16 @@ communication crosses them (the paper's central point).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..matrices.families import MatrixFamily
-from ..matrices.sparse import CSR, csr_to_ell
+from ..matrices.sparse import CSR
 from .layouts import Layout
 from .partition import RowMap
 
@@ -265,6 +264,13 @@ class NeighborPlan:
     def H(self) -> int:
         """Per-device moved entries per vector column (Σ_r L_r)."""
         return int(sum(self.round_L))
+
+    def scheduled_pairs(self) -> tuple[tuple[int, int], ...]:
+        """All (src, dst) device pairs across rounds, in round order —
+        the introspection surface of the static plan linter
+        (``repro.analysis.plan_lint``): a pair scheduled twice or a round
+        that is not a partial permutation shows up directly here."""
+        return tuple(p for perm in self.perms for p in perm)
 
 
 @dataclasses.dataclass

@@ -171,7 +171,8 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               n_search: int | None = None, verbose=True,
               plan: bool = False, spmv_comm: str = "a2a",
               spmv_schedule: str = "cyclic", spmv_balance: str = "rows",
-              spmv_reorder: str = "none", machine=None) -> dict:
+              spmv_reorder: str = "none", machine=None,
+              verify: bool = False) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
     surrogate with the *exact* χ-derived comm plan of the real matrix.
@@ -415,6 +416,50 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         "spmv_balance": spmv_balance, "spmv_reorder": spmv_reorder,
         "nbr_H": H, "nbr_rounds": len(perms),
     }
+    if verify:
+        # static communication verifier (repro.analysis): attribute every
+        # collective in the compiled HLO to a χ-predicted term and lint
+        # the lowered neighbor schedule. The dry-run cell has no Gram
+        # product, so the predicted terms are degree halo exchanges + the
+        # TSQR butterfly + (when N_col > 1) the two redistributions.
+        from ..analysis.census import ExpectedTerm, attribute
+        from ..analysis.plan_lint import lint_rounds
+        from .hlo_analysis import collective_census
+
+        S_cell = jnp.dtype(dt).itemsize
+        n_b_cell = max(n_s // max(n_col, 1), 1)
+        terms = []
+        if N_row > 1 and L > 0:
+            if compressed:
+                for Lk in round_L:
+                    terms.append(ExpectedTerm(
+                        f"halo-exchange[compressed/{spmv_schedule}]",
+                        "collective-permute",
+                        int(Lk) * n_b_cell * S_cell, degree))
+            else:
+                terms.append(ExpectedTerm(
+                    "halo-exchange[a2a]", "all-to-all",
+                    N_row * L * n_b_cell * S_cell, degree))
+        if P_total > 1:
+            terms.append(ExpectedTerm(
+                "tsqr-butterfly", "collective-permute", n_s * n_s * S_cell,
+                int(np.ceil(np.log2(P_total)))))
+        if n_col > 1:
+            full = (D_pad // P_total) * n_s * S_cell
+            for leg in ("to_panel", "to_stack"):
+                terms.append(ExpectedTerm(
+                    f"redistribute[{leg}]", "all-to-all", full, 1,
+                    alt_bytes=(full * (n_col - 1) // n_col,)))
+        extra = []
+        if cp_nbr is not None and cp_nbr.pair_counts is not None and perms:
+            extra = lint_rounds(cp_nbr.pair_counts, perms, round_L,
+                                label=f"{name}/{spmv_schedule}")
+        report = attribute(collective_census(compiled.as_text()), terms,
+                           cell=rec["shape"], extra_errors=list(extra))
+        rec["verify_ok"] = report.ok
+        rec["verify_errors"] = report.errors
+        if verbose or not report.ok:
+            print(report.describe())
     if rowmap is not None:
         sizes = rowmap.block_sizes(N_row)
         rec["partition_rows_min"] = int(sizes.min())
@@ -729,6 +774,13 @@ def main(argv=None):
                          "SpMV collective volume of the lowered cell (on a "
                          "planned partition also the before/after χ and "
                          "pad volumes)")
+    ap.add_argument("--verify", action="store_true",
+                    help="with --eigen: run the static communication "
+                         "verifier on the compiled cell — attribute every "
+                         "HLO collective to a χ-predicted term "
+                         "(repro.analysis.census) and lint the lowered "
+                         "neighbor schedule; exits nonzero on any "
+                         "unattributed or missing collective")
     ap.add_argument("--fit-machine", action="store_true",
                     help="time real fused Chebyshev iterations of a small "
                          "instance across mesh splits on local devices, fit "
@@ -763,7 +815,7 @@ def main(argv=None):
                                      spmv_schedule=args.spmv_schedule,
                                      spmv_balance=args.spmv_balance,
                                      spmv_reorder=args.spmv_reorder,
-                                     machine=machine))
+                                     machine=machine, verify=args.verify))
         elif args.all:
             for arch, shape, cell in iter_cells():
                 if cell is None:
@@ -786,6 +838,8 @@ def main(argv=None):
             with open(args.out, "a") as f:
                 for r in records:
                     f.write(json.dumps(r) + "\n")
+    if args.verify and any(r.get("verify_errors") for r in records):
+        sys.exit(1)
     return records
 
 

@@ -112,34 +112,57 @@ _REF_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
 _TRIP = re.compile(r'known_trip_count["\s]*[=:]?\s*\{[^}]*?n["\s]*[=:]\s*"?(\d+)')
 
 
+def _call_edges(comps) -> dict[str, list[tuple[str, float]]]:
+    """Computation name -> [(callee, per-call multiplicity), ...].
+
+    While bodies carry their ``known_trip_count``; conditions run trip+1
+    times. Async ``-done``/``-update`` op lines are skipped entirely: on
+    some HLO dialects they re-print the ``calls=`` reference to the same
+    wrapped computation the ``-start`` already points at, and counting
+    both would double the inner collective's multiplicity (the audit
+    behind tests/test_hlo_analysis.py::test_async_wrapped_counted_once).
+    """
+    edges: dict[str, list[tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        es: list[tuple[str, float]] = []
+        for ln in lines:
+            body = _REF_WHILE.search(ln)
+            if body:
+                t = _TRIP.search(ln)
+                trip = float(t.group(1)) if t else 1.0
+                es.append((body.group(1), trip))
+                c = _REF_COND.search(ln)
+                if c:
+                    es.append((c.group(1), trip + 1))
+                continue
+            op = _parse_op(ln.strip())
+            if op is not None and (op.opname.endswith("-done")
+                                   or op.opname.endswith("-update")):
+                continue
+            for ref in _REF_CALLS.findall(ln) + _REF_APPLY.findall(ln):
+                es.append((ref, 1.0))
+        edges[name] = es
+    return edges
+
+
 def _multiplicities(comps, entry) -> dict[str, float]:
-    mult = {name: 0.0 for name in comps}
     if entry is None:
         entry = next(iter(comps))
+    edges = _call_edges(comps)
+    mult = {name: 0.0 for name in comps}
     mult[entry] = 1.0
     # iterate to fixpoint over the (acyclic) call graph
     for _ in range(64):
         new = {name: 0.0 for name in comps}
         new[entry] = 1.0
         changed = False
-        for name, lines in comps.items():
+        for name, es in edges.items():
             m = mult.get(name, 0.0)
             if m == 0.0:
                 continue
-            for ln in lines:
-                body = _REF_WHILE.search(ln)
-                if body:
-                    t = _TRIP.search(ln)
-                    trip = float(t.group(1)) if t else 1.0
-                    if body.group(1) in new:
-                        new[body.group(1)] += m * trip
-                    c = _REF_COND.search(ln)
-                    if c and c.group(1) in new:
-                        new[c.group(1)] += m * (trip + 1)
-                    continue
-                for ref in _REF_CALLS.findall(ln) + _REF_APPLY.findall(ln):
-                    if ref in new:
-                        new[ref] += m
+            for ref, k in es:
+                if ref in new:
+                    new[ref] += m * k
         for k in comps:
             if abs(new[k] - mult[k]) > 1e-9:
                 changed = True
@@ -306,6 +329,51 @@ class HloCosts:
     per_collective: list  # (kind, bytes, multiplicity) heavy hitters
 
 
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One executed collective op in optimized HLO: ``bytes`` is the operand
+    payload of a single execution, ``mult`` the loop-propagated execution
+    count (async ``-start``/``-done`` pairs appear once)."""
+
+    kind: str         # one of _COLLECTIVES
+    bytes: int        # operand bytes of one execution
+    mult: float       # execution multiplicity (trip counts propagated)
+    name: str         # HLO op name
+    computation: str  # enclosing computation
+
+
+def _census_ops(comps, mult) -> list[CollectiveOp]:
+    out = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        sym = _symbols(lines)
+        for ln in lines[1:]:
+            op = _parse_op(ln.strip())
+            if op is None:
+                continue
+            kind = _collective_kind(op.opname)
+            if kind:
+                b = _operand_bytes(op.operands, sym)
+                if b == 0:  # fall back to result type
+                    b = _typed_tokens_bytes(op.result)
+                out.append(CollectiveOp(kind=kind, bytes=b, mult=m,
+                                        name=op.name, computation=name))
+    out.sort(key=lambda c: (-c.bytes * c.mult, c.kind, c.name))
+    return out
+
+
+def collective_census(text: str) -> list[CollectiveOp]:
+    """Every executed collective op of an optimized HLO module, with exact
+    loop multiplicities — the *uncapped* census behind the static verifier
+    (``repro.analysis.census``). ``analyze_hlo``'s ``per_collective`` is
+    the same list truncated to the 20 heaviest entries."""
+    comps = _split_computations(text)
+    mult = _multiplicities(comps, _entry_name(text, comps))
+    return _census_ops(comps, mult)
+
+
 def analyze_hlo(text: str) -> HloCosts:
     comps = _split_computations(text)
     entry = _entry_name(text, comps)
@@ -323,8 +391,6 @@ def analyze_hlo(text: str) -> HloCosts:
 
     flops = 0.0
     hbm = 0.0
-    coll = {c: 0.0 for c in _COLLECTIVES}
-    heavy = []
     for name, lines in comps.items():
         m = mult.get(name, 0.0)
         if m == 0.0:
@@ -339,16 +405,13 @@ def analyze_hlo(text: str) -> HloCosts:
             f = _dot_flops(op, sym)
             if f:
                 flops += m * f
-            kind = _collective_kind(op.opname)
-            if kind:
-                b = _operand_bytes(op.operands, sym)
-                if b == 0:  # fall back to result type
-                    b = _typed_tokens_bytes(op.result)
-                coll[kind] += m * b
-                heavy.append((kind, b, m))
             if not in_internal and op.opname not in _SKIP_BYTES_OPS:
                 b = _typed_tokens_bytes(op.result) + _operand_bytes(op.operands, sym)
                 hbm += m * b
-    heavy.sort(key=lambda x: -x[1] * x[2])
+    census = _census_ops(comps, mult)
+    coll = {c: 0.0 for c in _COLLECTIVES}
+    for c in census:
+        coll[c.kind] += c.mult * c.bytes
+    heavy = [(c.kind, c.bytes, c.mult) for c in census]
     return HloCosts(flops=flops, hbm_bytes=hbm, coll_bytes=sum(coll.values()),
                     coll_breakdown=coll, per_collective=heavy[:20])

@@ -64,3 +64,31 @@ assert abs(h.flops - true) / true < 0.01, (h.flops, true)
 print("NESTED OK")
 """, n_devices=1)
     assert "NESTED OK" in out
+
+
+def test_async_wrapped_counted_once():
+    """Async dialects may re-print the ``calls=`` reference to the wrapped
+    computation on the ``-done`` line; propagating both edges doubles the
+    inner collective's multiplicity. The census must pin it to exactly one
+    execution (regression for the ``_call_edges`` audit)."""
+    from repro.launch.hlo_analysis import analyze_hlo, collective_census
+
+    text = """HloModule m
+
+%wrapped_a2a (wp: f32[64]) -> f32[64] {
+  %wp = f32[64]{0} parameter(0)
+  ROOT %wa = f32[64]{0} all-to-all(f32[64]{0} %wp), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+}
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %a2a-start = ((f32[64]{0}), f32[64]{0}, u32[]) async-start(f32[64]{0} %p0), calls=%wrapped_a2a
+  ROOT %a2a-done = f32[64]{0} async-done(((f32[64]{0}), f32[64]{0}, u32[]) %a2a-start), calls=%wrapped_a2a
+}
+"""
+    ops = collective_census(text)
+    assert len(ops) == 1, ops
+    op = ops[0]
+    assert (op.kind, op.bytes, op.mult) == ("all-to-all", 256, 1.0), op
+    # the aggregate view must agree: 256 operand bytes, not 512
+    assert analyze_hlo(text).coll_bytes == 256.0
