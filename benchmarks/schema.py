@@ -21,7 +21,7 @@ SCHEMA = "bench-spmv/v1"
 TABLES = frozenset({
     "table1", "table2", "table3", "table4", "table5", "fig4", "fig5",
     "spmv_overlap", "spmv_comm", "spmv_schedule", "partition", "planner",
-    "roofline",
+    "roofline", "kernels",
 })
 
 #: engine-axis enums as the tables print them
@@ -29,6 +29,11 @@ ENGINE_VALUES = frozenset({"a2a", "cmp", "cyc", "mat", "a2a+ov", "cmp+ov"})
 SCHEDULE_VALUES = frozenset({"cyclic", "matching"})
 BALANCE_VALUES = frozenset({"rows", "commvol"})
 REORDER_VALUES = frozenset({"none", "rcm"})
+#: the kernel axis as the kernels table records it: jnp scan reference,
+#: Pallas kernels with the flat (all-rounds-then-contract) halo body,
+#: Pallas kernels with the round-pipelined halo contraction (the
+#: ``--spmv-kernel`` default)
+KERNEL_VALUES = frozenset({"off", "on", "pipelined"})
 
 _NUMERIC_NONNEG = ("pred_bytes_per_device", "meas_bytes_per_device",
                    "us_per_call", "rounds", "plan_us", "t_pass_s")
@@ -59,6 +64,9 @@ def validate_record(rec, where: str = "record") -> list[str]:
     if "reorder" in rec and rec["reorder"] not in REORDER_VALUES:
         errors.append(f"{where}: reorder {rec['reorder']!r} not in "
                       f"{sorted(REORDER_VALUES)}")
+    if "kernel" in rec and rec["kernel"] not in KERNEL_VALUES:
+        errors.append(f"{where}: kernel {rec['kernel']!r} not in "
+                      f"{sorted(KERNEL_VALUES)}")
     for key in _NUMERIC_NONNEG:
         if key in rec:
             v = rec[key]

@@ -585,6 +585,130 @@ def spmv_schedule():
     return rows
 
 
+#: Kernel-axis bench script: the compressed+overlap engine with the jnp
+#: scan body, the Pallas kernels with the flat halo body, and the Pallas
+#: kernels with the round-pipelined halo contraction. The three cells
+#: must be bit-identical AND emit the identical collectives — the kernel
+#: axis never touches the wire.
+_KERNEL_BENCH_SCRIPT = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+jax.config.update('jax_enable_x64', True)
+from repro.matrices import HubNet, RoadNet, SpinChainXXZ
+from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
+from repro.launch.hlo_analysis import analyze_hlo
+mat = {family}
+cells = {cells}
+csr = mat.build_csr()
+D = csr.shape[0]
+mesh = make_solver_mesh(4, 2)
+lay = panel(mesh)
+D_pad = -(-D // 8) * 8
+ell = build_dist_ell(csr, 4, d_pad=D_pad, split_halo=True)
+rng = np.random.default_rng(0)
+X = np.zeros((D_pad, 8)); X[:D] = rng.standard_normal((D, 8))
+ys = {{}}
+with mesh:
+    Xs = jax.device_put(jnp.asarray(X), lay.vec_sharding(mesh))
+    for name, use_kernel, pipeline in cells:
+        f = jax.jit(make_spmv(mesh, lay, ell, comm='compressed',
+                              schedule='matching', overlap=True,
+                              use_kernel=use_kernel, pipeline=pipeline))
+        c = f.lower(Xs).compile()
+        h = analyze_hlo(c.as_text())
+        meas = int(h.coll_breakdown["all-to-all"]
+                   + h.coll_breakdown["collective-permute"])
+        y = f(Xs); jax.block_until_ready(y)
+        n = 30
+        t0 = time.perf_counter()
+        for _ in range(n):
+            y = f(Xs)
+        jax.block_until_ready(y)
+        ys[name] = np.asarray(y)
+        print(f"ROW {{name}} {{(time.perf_counter() - t0) / n * 1e6:.1f}} {{meas}}")
+ref = cells[0][0]
+for name, *_ in cells[1:]:
+    assert np.array_equal(ys[name], ys[ref]), name
+print("AGREE OK")
+"""
+
+
+def kernels_table():
+    """§Kernel axis: jnp scan body vs Pallas kernels (flat halo body) vs
+    Pallas kernels with the round-pipelined halo contraction, on the
+    compressed-matching overlap engine.
+
+    For each family x kernel cell the table shows the pattern-predicted
+    per-device exchange bytes, the HLO-measured bytes of the compiled
+    cell (must match exactly — the kernel axis never touches the wire),
+    and the measured µs/call on 8 fake CPU devices. On CPU the kernels
+    run in Pallas interpret mode, so the µs column is a correctness+
+    overhead check, not the TPU speedup story; the subprocess asserts
+    all three cells bit-identical (``np.array_equal``, not a tolerance).
+    Every row also lands in :data:`RECORDS` with the ``kernel`` field of
+    ``schema.KERNEL_VALUES`` for the ``run.py --json`` artifact."""
+    rows = []
+    fams = [("spinchain", "SpinChainXXZ(12, 6)"),
+            ("roadnet", "RoadNet(n=4000, w=2, m=256, k=4)")]
+    # (record tag, use_kernel, pipeline) — "off" keeps the flat body so
+    # the "pipelined" row isolates the round-pipelined split
+    cells = [("off", False, False),
+             ("on", True, False),
+             ("pipelined", True, True)]
+    print("\n=== SpMV kernel axis (8 fake devices, panel 4x2, cmp+ov+mat) ===")
+    print(f"{'family':10s} {'kernel':10s} {'pred B/dev':>11s} "
+          f"{'meas B/dev':>11s} {'us/call':>9s}")
+    import subprocess
+    import sys
+
+    from repro.core.metrics import chi_metrics
+    from repro.core.planner import comm_plan
+    from repro.matrices import RoadNet, SpinChainXXZ
+
+    ctors = {"RoadNet": RoadNet, "SpinChainXXZ": SpinChainXXZ}
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    env.pop("XLA_FLAGS", None)
+    for label, ctor in fams:
+        mat = eval(ctor, {"__builtins__": {}}, ctors)
+        D_pad = -(-mat.D // 8) * 8
+        cp = comm_plan(mat, 4, d_pad=D_pad)
+        chim = chi_metrics(mat, 4)
+        pred = cp.permute_bytes_per_device(4, 8, "matching")
+        script = _KERNEL_BENCH_SCRIPT.format(family=ctor,
+                                             cells=repr(cells))
+        r = subprocess.run([sys.executable, "-c", script], env=env,
+                           capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            print(f"kernels subprocess failed for {label}:\n"
+                  f"{r.stderr[-1500:]}")
+            rows.append((f"kernels_{label}", 0.0, "status=fail"))
+            continue
+        assert "AGREE OK" in r.stdout
+        for line in r.stdout.splitlines():
+            if not line.startswith("ROW "):
+                continue
+            _, name, us, meas = line.split()
+            us, meas = float(us), int(meas)
+            assert meas == pred, (label, name, meas, pred)
+            print(f"{label:10s} {name:10s} {pred:11d} {meas:11d} {us:9.1f}")
+            rows.append((f"kernels_{label}_{name}", us,
+                         f"pred={pred} meas={meas} kernel={name}"))
+            RECORDS.append(dict(
+                table="kernels", family=label, engine="cmp+ov",
+                schedule="matching", kernel=name,
+                pred_bytes_per_device=int(pred),
+                meas_bytes_per_device=meas, us_per_call=us,
+                chi2=chim.chi2, chi3=chim.chi3,
+                imbalance=chim.imbalance))
+        print(f"{label:10s} three kernel cells bit-identical, "
+              f"identical wire bytes")
+    return rows
+
+
 #: Partition-cell bench script: build each planned RowMap, lower the a2a
 #: and compressed-matching engines on it, HLO-parse the collective bytes,
 #: time the call, and check bit-identity + un-permuted correctness.

@@ -12,13 +12,26 @@ exactly the communication the paper's χ model predicts:
      accounting is internally consistent — for SpinChain/RoadNet/HubNet
      at several shard counts x partition balances;
   2. **overlap dependency check** (``repro.analysis.overlap_check``):
-     the jaxpr of every split-phase engine shows its halo collective has
-     no data dependence on the local contraction (and the plain engines
-     *fail* that check, proving the pass is not vacuous);
+     the jaxpr of every split-phase engine — kernel off AND kernel on —
+     shows its halo collective has no data dependence on the local
+     contraction (and the plain engines *fail* that check, proving the
+     pass is not vacuous);
+  2b. **round-pipeline proof**: the compressed split-phase engines are
+     proved *round-pipelined* by the prefix-chain property
+     (``check_round_pipeline``): every contraction's halo-collective
+     dependence set is a prefix of the program-order ppermute chain,
+     with prefix lengths 0, n, and a strict intermediate all witnessed
+     — round r's contraction depends on no later round's collective.
+     The unpipelined body (``make_spmv(..., pipeline=False)``) must
+     *fail* the strict-interleaving condition, the non-vacuity control;
+  2c. **kernel parity**: the kernelized engines (Pallas interpret mode
+     on CPU) are executed once on a small cell and must be bit-identical
+     (``np.array_equal``) to the jnp engines;
   3. **collective census** (``repro.analysis.census``): engine cells are
      compiled (``.lower().compile()`` only) on a fake-CPU mesh and every
      collective in the optimized HLO is attributed to a predicted term —
-     zero unattributed, zero missing;
+     zero unattributed, zero missing; kernelized cells (``+krn``) are
+     attributed against the *same* terms as the jnp cells;
   4. **bench artifact schema** (``benchmarks/schema.py``): the merged
      ``BENCH_spmv.json`` trajectory validates, if present;
   5. **linters**: ``ruff`` / ``mypy`` over ``src/repro/core`` +
@@ -74,7 +87,7 @@ ENGINE_COMBOS = (
 )
 
 #: directories the linters (external and built-in) are scoped to
-LINT_DIRS = ("src/repro/core", "src/repro/analysis")
+LINT_DIRS = ("src/repro/core", "src/repro/analysis", "src/repro/kernels")
 
 
 def _families(fast: bool):
@@ -128,28 +141,135 @@ def check_overlap(fast: bool = False) -> list[str]:
     n_b = 4
     V = jax.ShapeDtypeStruct((D_pad, n_b), ells[True].vals.dtype)
     for comm, schedule, overlap in ENGINE_COMBOS:
-        tag = f"{comm}/{schedule}{'+ov' if overlap else ''}"
-        spmv = make_spmv(mesh, panel_l, ells[overlap], overlap=overlap,
-                         comm=comm, schedule=schedule)
-        with mesh:
-            rep = check_split_phase(spmv, V)
-        if overlap:
+        for use_kernel in (False, True):
+            tag = (f"{comm}/{schedule}{'+ov' if overlap else ''}"
+                   f"{'+krn' if use_kernel else ''}")
+            spmv = make_spmv(mesh, panel_l, ells[overlap],
+                             use_kernel=use_kernel, overlap=overlap,
+                             comm=comm, schedule=schedule)
+            with mesh:
+                rep = check_split_phase(spmv, V)
+            if overlap:
+                if not rep.ok:
+                    errors += [f"overlap[{tag}]: {e}" for e in rep.errors]
+                status = "OK" if rep.ok else f"{len(rep.errors)} error(s)"
+                print(f"[check_comm] overlap {tag}: {status} "
+                      f"({rep.independent_contractions} hideable "
+                      f"contraction(s))")
+            else:
+                # non-vacuity: the plain engine must be reported as having
+                # no contraction the exchange could hide behind
+                if rep.ok:
+                    errors.append(
+                        f"overlap[{tag}]: plain engine unexpectedly "
+                        f"passed the split-phase check — the checker is "
+                        f"vacuous")
+                print(f"[check_comm] overlap {tag}: fails (B) as expected"
+                      if not rep.ok else
+                      f"[check_comm] overlap {tag}: UNEXPECTED PASS")
+    return errors
+
+
+def check_pipeline(fast: bool = False) -> list[str]:
+    """Section 2b: prefix-chain proof that the compressed split-phase
+    engines are round-pipelined (kernel off and on), with the
+    unpipelined body (``pipeline=False``) as the failing control.
+    """
+    import jax
+
+    from repro.analysis.overlap_check import check_round_pipeline
+    from repro.core import layouts as lo
+    from repro.core.planner import layout_on_mesh
+    from repro.core.spmv import build_dist_ell, make_spmv
+    from repro.matrices import SpinChainXXZ
+
+    del fast  # tracing only — cheap enough to always run the full set
+    errors: list[str] = []
+    matrix = SpinChainXXZ(10, 5)
+    mesh = lo.make_solver_mesh(4, 2)
+    panel_l = layout_on_mesh(mesh, "panel")
+    N_row = panel_l.n_row(mesh)
+    D_pad = -(-matrix.D // 8) * 8
+    ell = build_dist_ell(matrix, N_row, d_pad=D_pad, split_halo=True)
+    V = jax.ShapeDtypeStruct((D_pad, 4), ell.vals.dtype)
+    for schedule in ("cyclic", "matching"):
+        for use_kernel in (False, True):
+            tag = f"compressed/{schedule}+ov{'+krn' if use_kernel else ''}"
+            spmv = make_spmv(mesh, panel_l, ell, use_kernel=use_kernel,
+                             overlap=True, comm="compressed",
+                             schedule=schedule)
+            with mesh:
+                rep = check_round_pipeline(spmv, V)
             if not rep.ok:
-                errors += [f"overlap[{tag}]: {e}" for e in rep.errors]
-            status = "OK" if rep.ok else f"{len(rep.errors)} error(s)"
-            print(f"[check_comm] overlap {tag}: {status} "
-                  f"({rep.independent_contractions} hideable "
-                  f"contraction(s))")
-        else:
-            # non-vacuity: the plain engine must be reported as having
-            # no contraction the exchange could hide behind
-            if rep.ok:
+                errors += [f"pipeline[{tag}]: {e}" for e in rep.errors]
+            print(f"[check_comm] pipeline {tag}: "
+                  f"{'OK' if rep.ok else f'{len(rep.errors)} error(s)'} "
+                  f"({rep.n_rounds} round(s), prefixes "
+                  f"{rep.prefix_lengths})")
+            if not rep.ok:
+                print(rep.describe())
+            # non-vacuity control: the unpipelined body must fail the
+            # strict-interleaving condition whenever there are >= 2 rounds
+            flat = make_spmv(mesh, panel_l, ell, use_kernel=use_kernel,
+                             overlap=True, comm="compressed",
+                             schedule=schedule, pipeline=False)
+            with mesh:
+                rep0 = check_round_pipeline(flat, V)
+            if rep0.n_rounds >= 2 and rep0.ok:
                 errors.append(
-                    f"overlap[{tag}]: plain engine unexpectedly passed "
-                    f"the split-phase check — the checker is vacuous")
-            print(f"[check_comm] overlap {tag}: fails (B) as expected"
-                  if not rep.ok else
-                  f"[check_comm] overlap {tag}: UNEXPECTED PASS")
+                    f"pipeline[{tag}]: the unpipelined control body "
+                    f"passed the prefix-chain proof — the checker is "
+                    f"vacuous")
+            print(f"[check_comm] pipeline {tag} control: "
+                  f"{'fails as expected' if not rep0.ok else 'UNEXPECTED PASS'}")
+    return errors
+
+
+def check_kernel_parity(fast: bool = False) -> list[str]:
+    """Section 2c: execute the kernelized engines once (Pallas interpret
+    mode on CPU) and require bit-identity with the jnp engines."""
+    import numpy as np
+    import jax
+
+    from repro.core import layouts as lo
+    from repro.core.planner import layout_on_mesh
+    from repro.core.spmv import build_dist_ell, make_spmv
+    from repro.matrices import SpinChainXXZ
+
+    errors: list[str] = []
+    matrix = SpinChainXXZ(10, 5)
+    mesh = lo.make_solver_mesh(4, 2)
+    panel_l = layout_on_mesh(mesh, "panel")
+    N_row = panel_l.n_row(mesh)
+    D_pad = -(-matrix.D // 8) * 8
+    ells = {split: build_dist_ell(matrix, N_row, d_pad=D_pad,
+                                  split_halo=split)
+            for split in (False, True)}
+    rng = np.random.default_rng(7)
+    V = jax.device_put(
+        rng.standard_normal((D_pad, 4)).astype(ells[True].vals.dtype),
+        jax.NamedSharding(mesh, panel_l.vec_pspec()))
+    combos = (ENGINE_COMBOS if not fast
+              else (("a2a", "cyclic", False),
+                    ("compressed", "matching", True)))
+    for comm, schedule, overlap in combos:
+        tag = f"{comm}/{schedule}{'+ov' if overlap else ''}"
+        with mesh:
+            y_jnp = np.asarray(
+                make_spmv(mesh, panel_l, ells[overlap], overlap=overlap,
+                          comm=comm, schedule=schedule)(V))
+            y_krn = np.asarray(
+                make_spmv(mesh, panel_l, ells[overlap], use_kernel=True,
+                          overlap=overlap, comm=comm,
+                          schedule=schedule)(V))
+        biteq = np.array_equal(y_jnp, y_krn)
+        if not biteq:
+            errors.append(
+                f"kernel-parity[{tag}]: kernelized engine is not "
+                f"bit-identical to the jnp engine (max diff "
+                f"{np.abs(y_jnp - y_krn).max():.3e})")
+        print(f"[check_comm] kernel-parity {tag}: "
+              f"{'BITEQ' if biteq else 'MISMATCH'}")
     return errors
 
 
@@ -162,22 +282,32 @@ def check_census(fast: bool = False, families=("spinchain",)) -> list[str]:
             "roadnet": ("RoadNet-small", RoadNet(**ROADNET_SMALL)),
             "hubnet": ("HubNet-small", HubNet(**HUBNET_SMALL))}
     if fast:
-        grid = [("panel", "a2a", "cyclic", False, "rows", "none"),
-                ("panel", "compressed", "matching", True, "commvol", "rcm")]
+        grid = [("panel", "a2a", "cyclic", False, "rows", "none", False),
+                ("panel", "compressed", "matching", True, "commvol", "rcm",
+                 False),
+                # kernel-parity cell: the kernelized engine (Pallas
+                # interpret mode) must attribute to the same terms
+                ("panel", "compressed", "matching", True, "rows", "none",
+                 True)]
         families = ("spinchain",)
     else:
-        grid = [(layout, comm, schedule, overlap, balance, "none")
+        # the panel/rows column runs the full twelve-engine grid
+        # (6 combos x kernel off/on); the other columns stay kernel-off
+        grid = [(layout, comm, schedule, overlap, balance, "none", uk)
                 for layout in ("stack", "panel", "pillar")
                 for comm, schedule, overlap in ENGINE_COMBOS
-                for balance in ("rows", "commvol")]
+                for balance in ("rows", "commvol")
+                for uk in ((False, True)
+                           if layout == "panel" and balance == "rows"
+                           else (False,))]
     errors: list[str] = []
     for fam in families:
         name, matrix = mats[fam]
-        for layout, comm, schedule, overlap, balance, reorder in grid:
+        for layout, comm, schedule, overlap, balance, reorder, uk in grid:
             rep = run_census_cell(matrix, P_total=8, layout=layout,
                                   comm=comm, schedule=schedule,
-                                  overlap=overlap, balance=balance,
-                                  reorder=reorder)
+                                  overlap=overlap, use_kernel=uk,
+                                  balance=balance, reorder=reorder)
             print(f"[check_comm] census {name} {rep.cell}: "
                   f"{'OK' if rep.ok else f'{len(rep.errors)} error(s)'}")
             if not rep.ok:
@@ -272,6 +402,8 @@ def run_all(fast: bool = False, census: bool = True,
             families=("spinchain",)) -> list[str]:
     errors = check_plan_invariants(fast)
     errors += check_overlap(fast)
+    errors += check_pipeline(fast)
+    errors += check_kernel_parity(fast)
     if census:
         errors += check_census(fast, families)
     errors += check_bench_schema()

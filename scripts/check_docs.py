@@ -51,10 +51,11 @@ CLI_SOURCES = {
 REQUIRED_FLAGS = {
     "repro.launch.solve": ["--layout", "--spmv-overlap", "--spmv-comm",
                            "--spmv-schedule", "--spmv-balance",
-                           "--spmv-reorder", "--machine"],
+                           "--spmv-reorder", "--spmv-kernel", "--machine"],
     "repro.launch.dryrun": ["--layout", "--plan", "--spmv-comm",
                             "--spmv-schedule", "--spmv-balance",
-                            "--spmv-reorder", "--fit-machine", "--verify"],
+                            "--spmv-reorder", "--spmv-kernel",
+                            "--fit-machine", "--verify"],
     "benchmarks.run": ["--only", "--json"],
 }
 
@@ -62,7 +63,8 @@ REQUIRED_FLAGS = {
 #: from the README — the docs/ subsystem's headline pages cannot
 #: silently drop out of the navigation.
 REQUIRED_DOCS = ("docs/comm-engines.md", "docs/planner.md",
-                 "docs/partitioning.md", "docs/analysis.md")
+                 "docs/partitioning.md", "docs/analysis.md",
+                 "docs/kernels.md")
 
 #: CLIs whose *every* declared flag must be documented in README/docs
 #: (check 5). benchmarks.run is covered by REQUIRED_FLAGS only.

@@ -154,8 +154,9 @@ def expected_census(cp, *, comm: str, schedule: str, degree: int, n_b: int,
 
 def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
                     comm: str = "a2a", schedule: str = "cyclic",
-                    overlap: bool = False, balance: str = "rows",
-                    reorder: str = "none", n_s: int = 8, degree: int = 6,
+                    overlap: bool = False, use_kernel: bool = False,
+                    balance: str = "rows", reorder: str = "none",
+                    n_s: int = 8, degree: int = 6,
                     dtype=None, wrap=None) -> CensusReport:
     """Compile one engine cell on a fake-CPU mesh of ``P_total`` devices
     and attribute its collectives. Returns the :class:`CensusReport`;
@@ -167,7 +168,13 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
     redistribution back, and one Gram product. ``balance``/``reorder``
     lower the cell on a planned :class:`~repro.core.partition.RowMap`
     (planned at the filter level with ``block_multiple`` so its padded
-    extent divides the full mesh). ``wrap`` is the planted-defect seam
+    extent divides the full mesh). ``use_kernel`` lowers the kernelized
+    engine (``make_spmv(use_kernel=True)``, Pallas interpret mode on
+    CPU); the predicted terms are *identical* to the jnp cell's — the
+    kernels only replace the local contraction, never the exchange — so
+    the census holds the kernelized engines to exactly the same
+    collective attribution (the cell tag gains ``+krn``). ``wrap`` is
+    the planted-defect seam
     used by the negative tests: ``wrap(iteration, mesh, stack_layout)``
     may return a mutated iteration whose extra collectives the census
     must then flag.
@@ -239,8 +246,8 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
         extra_errors.append("comm_plan pair_counts diverge from the built "
                             "operator's pair_counts")
 
-    spmv = make_spmv(mesh, panel_l, ell, overlap=overlap, comm=comm,
-                     schedule=schedule)
+    spmv = make_spmv(mesh, panel_l, ell, use_kernel=use_kernel,
+                     overlap=overlap, comm=comm, schedule=schedule)
     tsqr = make_tsqr(mesh, stack_l)
     to_panel, to_stack = make_redistribute(mesh, stack_l, panel_l)
     gram = make_gram(mesh, stack_l)
@@ -266,6 +273,7 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
                                degree=degree, n_b=n_b, S_d=S_d, n_s=n_s,
                                P_total=P_total, n_col=N_col, D_pad=D_pad)
     cell = (f"{layout}/{comm}-{schedule}{'+ov' if overlap else ''}"
+            f"{'+krn' if use_kernel else ''}"
             f"/{balance}+{reorder}/P{P_total}")
     return attribute(measured, expected, cell=cell,
                      extra_errors=[f"[{cell}] {e}" for e in extra_errors])

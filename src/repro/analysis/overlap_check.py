@@ -18,14 +18,22 @@ conditions:
   single contraction consumes the received halo), which is the built-in
   sanity check that the pass is not vacuous.
 
-Contractions are ``lax.scan`` / ``while`` / ``dot_general`` equations
-(the ELL contraction is a scan over slot columns). Sub-jaxprs of
-``pjit`` / ``shard_map`` / custom-derivative wrappers are traversed with
-per-variable precision; bodies of sequential loops are traversed
-conservatively (every body input inherits the loop's union dependence
-set), so a collective nested *inside* a sequential contraction loop is
-reported as dependent — which is what a future round-pipelined engine
-must explicitly reason about, not silently pass.
+Contractions are ``lax.scan`` / ``while`` / ``dot_general`` /
+``pallas_call`` equations (the ELL contraction is a scan over slot
+columns in the jnp engines and a ``pallas_call`` in the kernelized
+ones). Sub-jaxprs of ``pjit`` / ``shard_map`` / custom-derivative
+wrappers are traversed with per-variable precision; bodies of
+sequential loops and kernels are traversed conservatively (every body
+input inherits the loop's union dependence set), so a collective nested
+*inside* a sequential contraction loop is reported as dependent.
+
+The round-pipelined compressed engine needs a sharper statement than
+(A)/(B): its halo contraction is split into per-round sub-blocks, and
+the whole point is that round ``r``'s contraction must not wait for any
+round ``> r``'s collective. :func:`check_round_pipeline` proves this as
+a *prefix-chain* property of the jaxpr — see its docstring. The
+unpipelined body fails the proof (its single halo contraction witnesses
+only the full chain), which is the built-in non-vacuity control.
 """
 from __future__ import annotations
 
@@ -34,13 +42,15 @@ import dataclasses
 from jax import core as jax_core
 import jax
 
-__all__ = ["OverlapReport", "check_split_phase", "HALO_PRIMITIVES",
+__all__ = ["OverlapReport", "PipelineReport", "check_split_phase",
+           "check_round_pipeline", "HALO_PRIMITIVES",
            "COLLECTIVE_PRIMITIVES", "CONTRACTION_PRIMITIVES"]
 
 HALO_PRIMITIVES = frozenset({"all_to_all", "ppermute"})
 COLLECTIVE_PRIMITIVES = HALO_PRIMITIVES | {
     "psum", "all_gather", "reduce_scatter", "pmax", "pmin", "pgather"}
-CONTRACTION_PRIMITIVES = frozenset({"scan", "while", "dot_general"})
+CONTRACTION_PRIMITIVES = frozenset({"scan", "while", "dot_general",
+                                    "pallas_call"})
 
 # containers traversed with exact per-variable dependence mapping
 # (their invars line up 1:1 with the sub-jaxpr's invars)
@@ -192,3 +202,98 @@ def check_split_phase(fn, *args, halo_primitives=HALO_PRIMITIVES,
                 "(the plain engines fail exactly this)")
     return OverlapReport(collectives=collectives, contractions=contractions,
                         errors=errors)
+
+
+@dataclasses.dataclass
+class PipelineReport:
+    """Result of one round-pipeline prefix-chain proof."""
+
+    n_rounds: int
+    prefix_lengths: list  # sorted prefix lengths witnessed by contractions
+    contractions: list  # (label, prefix length | None when not a prefix)
+    errors: list
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def describe(self) -> str:
+        lines = [f"rounds: {self.n_rounds}, contractions: "
+                 f"{len(self.contractions)}, prefix lengths witnessed: "
+                 f"{self.prefix_lengths}"]
+        for label, k in self.contractions:
+            lines.append(f"  {label}: "
+                         f"{'NOT A PREFIX' if k is None else f'prefix {k}'}")
+        lines += [f"  ERROR: {e}" for e in self.errors]
+        return "\n".join(lines)
+
+
+def check_round_pipeline(fn, *args,
+                         halo_primitives=HALO_PRIMITIVES) -> PipelineReport:
+    """Trace ``fn(*args)`` and prove the round-pipelined engine's
+    split-phase structure as a prefix-chain property of its jaxpr.
+
+    Let ``c_1 .. c_n`` be the halo collectives in program order (the
+    ``ppermute`` rounds of the compressed schedule). The proof requires:
+
+    * **(a) prefix dependence** — every contraction's halo-collective
+      dependence set is a *prefix* ``{c_1 .. c_k}`` of the chain. This
+      is exactly "round ``r``'s contraction depends on no later round's
+      collective": a contraction that consumed ``c_3`` without ``c_2``
+      would wait on a round it does not need, and one whose set skips an
+      earlier round would be reading an incompletely assembled buffer.
+    * **(b) endpoints witnessed** — some contraction has prefix length
+      0 (the local block, contracted before any exchange lands) and some
+      has length ``n`` (the final round's halo slice is contracted).
+    * **(c) strict interleaving** — for ``n >= 2``, some contraction
+      witnesses a prefix length strictly between 0 and ``n``. The
+      *unpipelined* split-phase body satisfies (a) and (b) — its single
+      halo contraction depends on the full chain — but fails (c), so it
+      cannot masquerade as pipelined; that failure is the checker's
+      non-vacuity control (``make_spmv(..., pipeline=False)``).
+
+    Bodies of sequential loops and Pallas kernels are traversed
+    conservatively, so contractions nested inside the recorded ones
+    re-witness the same prefix lengths and cannot weaken the proof.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    rec = _Recorder()
+    _walk(closed.jaxpr, [_EMPTY] * len(closed.jaxpr.invars), rec)
+    halo = [label for label, prim, _ in rec.collectives
+            if prim in halo_primitives]
+    order = {lbl: i for i, lbl in enumerate(halo)}
+    n = len(halo)
+    errors = []
+    contractions = []
+    lengths: set = set()
+    for label, deps in rec.contractions:
+        hidx = sorted(order[lbl] for k, lbl in deps
+                      if k == "coll" and lbl in order)
+        if hidx != list(range(len(hidx))):
+            contractions.append((label, None))
+            errors.append(
+                f"contraction {label} depends on halo collectives "
+                f"{[halo[i] for i in hidx]} — not a prefix of the "
+                f"program-order round chain {halo}: it waits on a later "
+                f"round's collective without consuming every earlier one")
+            continue
+        contractions.append((label, len(hidx)))
+        lengths.add(len(hidx))
+    if 0 not in lengths:
+        errors.append(
+            "no contraction is independent of the halo rounds (prefix "
+            "length 0 missing): no local block is contracted while the "
+            "exchange is in flight")
+    if n and n not in lengths:
+        errors.append(
+            f"no contraction consumes the full {n}-round chain (prefix "
+            f"length {n} missing): the final round's halo slice is never "
+            f"contracted")
+    if n >= 2 and not any(0 < k < n for k in lengths):
+        errors.append(
+            f"no contraction witnesses a strict prefix of the {n}-round "
+            f"chain (lengths seen: {sorted(lengths)}): every halo "
+            f"contraction waits for the last round's collective — the "
+            f"engine is not round-pipelined")
+    return PipelineReport(n_rounds=n, prefix_lengths=sorted(lengths),
+                          contractions=contractions, errors=errors)

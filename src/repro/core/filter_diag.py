@@ -53,7 +53,7 @@ from .lanczos import lanczos_interval
 from .layouts import Layout
 from .orthogonalize import make_gram, make_svqb, make_tsqr
 from .redistribute import make_redistribute
-from .spmv import build_dist_ell, make_spmv
+from .spmv import build_dist_ell, make_fused_cheb_step, make_spmv
 
 __all__ = ["FDConfig", "FDResult", "FilterDiag"]
 
@@ -77,6 +77,7 @@ class FDConfig:
     spmv_schedule: str = "cyclic"  # compressed rounds: cyclic | matching
     spmv_balance: str = "rows"  # row partition: rows | commvol (planned cuts)
     spmv_reorder: str = "none"  # row order: none | rcm (bandwidth-reducing)
+    spmv_kernel: bool = False   # Pallas kernels for the local contraction
     dtype: str = "float64"
     seed: int = 7
 
@@ -168,8 +169,9 @@ class FilterDiag:
         compressed-cyclic, compressed-matching} × {overlap on/off} ×
         {equal-rows, commvol} partitions and also decides
         ``cfg.spmv_overlap``, ``cfg.spmv_comm``, ``cfg.spmv_schedule``,
-        and ``cfg.spmv_balance``/``cfg.spmv_reorder`` (an explicitly
-        requested reorder widens the planner's reorder axis)."""
+        ``cfg.spmv_balance``/``cfg.spmv_reorder``, and
+        ``cfg.spmv_kernel`` (an explicitly requested reorder or kernel
+        widens the corresponding planner axis)."""
         from .planner import layout_on_mesh, plan_for_mesh
 
         if cfg.layout == "auto":
@@ -183,13 +185,15 @@ class FilterDiag:
             self.plan = plan_for_mesh(
                 matrix, mesh, n_search=cfg.n_search,
                 d_pad=-(-D // P) * P,
-                reorder=tuple(dict.fromkeys(("none", cfg.spmv_reorder))))
+                reorder=tuple(dict.fromkeys(("none", cfg.spmv_reorder))),
+                kernel=tuple(dict.fromkeys((False, cfg.spmv_kernel))))
             best = self.plan.best
             cfg.spmv_overlap = best.overlap
             cfg.spmv_comm = best.comm
             cfg.spmv_schedule = best.schedule
             cfg.spmv_balance = best.balance
             cfg.spmv_reorder = best.reorder
+            cfg.spmv_kernel = best.kernel
             # the operators below are built from exactly the map the
             # winning candidate was scored on
             if self.rowmap is None:
@@ -203,14 +207,26 @@ class FilterDiag:
     def _build_fns(self, matrix):
         mesh, cfg = self.mesh, self.cfg
         self.spmv_stack = make_spmv(mesh, self.stack_layout, self.ell_stack,
+                                    use_kernel=cfg.spmv_kernel,
                                     overlap=cfg.spmv_overlap,
                                     comm=cfg.spmv_comm,
                                     schedule=cfg.spmv_schedule)
         self.spmv_panel = (
             make_spmv(mesh, self.panel_layout, self.ell_panel,
+                      use_kernel=cfg.spmv_kernel,
                       overlap=cfg.spmv_overlap, comm=cfg.spmv_comm,
                       schedule=cfg.spmv_schedule)
             if self.N_col > 1 else self.spmv_stack
+        )
+        # kernelized recurrence step: the fused 2a·A·w1 + 2b·w1 - w2 body
+        # (single shard_map / cheb_dia dispatch) used by the filter loop
+        self.fused_step_panel = (
+            make_fused_cheb_step(mesh, self.panel_layout, self.ell_panel,
+                                 use_kernel=True,
+                                 overlap=cfg.spmv_overlap,
+                                 comm=cfg.spmv_comm,
+                                 schedule=cfg.spmv_schedule)
+            if cfg.spmv_kernel else None
         )
         if cfg.ortho == "tsqr":
             self._tsqr = make_tsqr(mesh, self.stack_layout)
@@ -242,9 +258,11 @@ class FilterDiag:
     def _cheb(self, degree: int):
         if degree not in self._cheb_cache:
             spmv = self.spmv_panel
+            fused_step = self.fused_step_panel
 
             def run(V, mu, alpha, beta):
-                return chebyshev_filter(spmv, mu, alpha, beta, V)
+                return chebyshev_filter(spmv, mu, alpha, beta, V,
+                                        fused_step=fused_step)
 
             self._cheb_cache[degree] = jax.jit(run)
         return self._cheb_cache[degree]

@@ -381,6 +381,7 @@ class Candidate:
     comm_bytes_per_device: int  # predicted SpMV exchange operand bytes
     balance: str = "rows"   # row partition: "rows" | "commvol"
     reorder: str = "none"   # row order: "none" | "rcm"
+    kernel: bool = False    # fused Pallas kernel engine (κ=5 traffic term)
     #: the planned RowMap behind a non-default balance/reorder (shared by
     #: every candidate of that combo; None for the equal-rows partition).
     #: FilterDiag builds its operators from exactly this map, so the
@@ -404,6 +405,8 @@ class Candidate:
             suffix += "+cmp" if self.schedule == "cyclic" else "+mat"
         if self.overlap:
             suffix += "+ov"
+        if self.kernel:
+            suffix += "+krn"
         return self.layout + suffix
 
     def describe(self) -> str:
@@ -479,6 +482,7 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 schedule: tuple[str, ...] = ("cyclic", "matching"),
                 balance: tuple[str, ...] = ("rows", "commvol"),
                 reorder: tuple[str, ...] = ("none",),
+                kernel: tuple[bool, ...] = (False,),
                 splits=None, S_d: int | None = None,
                 n_nzr: float | None = None, d_pad: int | None = None,
                 exact_comm: bool | None = None,
@@ -511,6 +515,15 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     it is unaffordable (``partition.partition_plan_default``) or when a
     split has no halo exchange at all. Ties prefer the equal-rows,
     natural-order partition.
+
+    ``kernel`` widens the grid with the fused-Pallas-kernel variant of
+    each engine (``make_spmv(use_kernel=True)`` +
+    ``make_fused_cheb_step``), scored by clamping the machine's κ
+    vector-traffic factor to the fused kernel's κ = 5
+    (``perf_model.fused_kernel_machine``) — the wire bytes are
+    unchanged, only the memory-traffic term improves. The axis defaults
+    to off (``(False,)``); pass ``kernel=(False, True)`` to let the
+    ranking decide (``--spmv-kernel`` with ``--layout auto`` does).
 
     ``n_vc_by_row`` maps n_row -> precomputed n_vc counts (on
     ``Partition(D, n_row, d_pad)`` boundaries) and ``comm_plan_by_row``
@@ -625,19 +638,21 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 for ov in sorted(set(overlap)):
                     if ov and chi1 <= 0.0:
                         continue  # overlap is a no-op without an exchange
-                    t_iter = (pm.cheb_iter_time_overlap(machine, **kw)
-                              if ov else pm.cheb_iter_time(machine, **kw))
-                    cands.append(Candidate(
-                        layout=name, n_row=n_row, n_col=n_col, overlap=ov,
-                        comm=eng, schedule=sch, redistribute=n_col > 1,
-                        chi1=chi1, chi2=chim.chi2, chi_eng=chi_eng,
-                        t_iter=t_iter, t_redist=t_red,
-                        t_pass=degree * t_iter + 2.0 * t_red,
-                        comm_bytes_per_device=cp.comm_bytes_per_device(
-                            eng, n_b, S_d, sch),
-                        balance=bal, reorder=ro,
-                        rowmap=None if default_part else rowmap,
-                    ))
+                    for kn in sorted(set(kernel)):
+                        mk = pm.fused_kernel_machine(machine) if kn else machine
+                        t_iter = (pm.cheb_iter_time_overlap(mk, **kw)
+                                  if ov else pm.cheb_iter_time(mk, **kw))
+                        cands.append(Candidate(
+                            layout=name, n_row=n_row, n_col=n_col, overlap=ov,
+                            comm=eng, schedule=sch, redistribute=n_col > 1,
+                            chi1=chi1, chi2=chim.chi2, chi_eng=chi_eng,
+                            t_iter=t_iter, t_redist=t_red,
+                            t_pass=degree * t_iter + 2.0 * t_red,
+                            comm_bytes_per_device=cp.comm_bytes_per_device(
+                                eng, n_b, S_d, sch),
+                            balance=bal, reorder=ro, kernel=kn,
+                            rowmap=None if default_part else rowmap,
+                        ))
     if not cands:
         raise ValueError(
             f"no candidate survived for P={P}, n_search={n_search}, "
@@ -652,7 +667,7 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     cands.sort(key=lambda c: (c.t_pass, c.comm_bytes_per_device,
                               c.comm != "a2a", c.schedule != "cyclic",
                               c.balance != "rows", c.reorder != "none",
-                              c.overlap, c.n_col))
+                              c.overlap, c.kernel, c.n_col))
     return Plan(matrix=_matrix_label(matrix), D=D, n_devices=P,
                 n_search=n_search, degree=degree, machine=machine.name,
                 candidates=tuple(cands))

@@ -252,6 +252,21 @@ class NeighborPlan:
     padded a2a). ``cols_halo_nbr`` is only needed by the overlap variant
     and is filled lazily (``DistEll.neighbor_plan(split_halo=True)``) so
     the plain compressed engine never materializes the local/halo split.
+
+    ``halo_rounds`` is the round-pipelined form of the split halo block:
+    one ELL sub-block ``(cols_r, vals_r)`` per permute round, holding —
+    complete, in the original slot order — every halo row whose LAST
+    needed sender lands in round r (each round is a partial permutation,
+    so rounds partition the halo by sender and a row completes exactly
+    when its highest-round sender arrives). ``cols_r`` keeps the compact
+    [0, H) positions, all ``< sum(round_L[:r+1])``, so sub-block r
+    gathers only from the concatenated prefix of rounds ``<= r`` — the
+    pipelined engine can contract it while round r+1's ``ppermute`` is
+    still in flight, and because each row's halo entries are contracted
+    atomically in slot order the result is bit-identical to the
+    unpipelined engines. Built lazily from concrete operands; stays
+    ``None`` on surrogate (shape-only) operators, where the engine falls
+    back to the all-rounds-then-contract body.
     """
 
     perms: tuple[tuple[tuple[int, int], ...], ...]  # per-round (src, dst)
@@ -259,6 +274,7 @@ class NeighborPlan:
     send_nbr: jax.Array       # [P, H] int32 local rows to ship, round-major
     cols_nbr: jax.Array       # [P, R, W] combined cols, halo re-based to [R, R+H)
     cols_halo_nbr: jax.Array | None = None  # [P, R, W_halo] split halo cols in [0, H)
+    halo_rounds: tuple | None = None  # per-round ([P,R,W_r] cols, vals) sub-blocks
 
     @property
     def H(self) -> int:
@@ -449,7 +465,64 @@ class DistEll:
                                         0, off_by_pair, 0)
                       if ch.shape[2] else np.asarray(ch))
             plan.cols_halo_nbr = jnp.asarray(ch_nbr)
+        if (split_halo and plan.halo_rounds is None
+                and _host_concrete(plan.cols_halo_nbr)
+                and _host_concrete(self.vals_halo)):
+            plan.halo_rounds = _build_halo_rounds(
+                np.asarray(plan.cols_halo_nbr), np.asarray(self.vals_halo),
+                plan.round_L)
         return plan
+
+
+def _host_concrete(a) -> bool:
+    """True when ``a`` is a concrete host-readable array (not a tracer,
+    not a ShapeDtypeStruct surrogate) — gate for lazy host-side planning
+    such as the pipelined round sub-blocks and the kernel tile batches."""
+    from ..kernels.ops import is_concrete
+
+    return a is not None and is_concrete(a)
+
+
+def _build_halo_rounds(ch_nbr: np.ndarray, vh: np.ndarray,
+                       round_L: tuple[int, ...]) -> tuple:
+    """Group the split halo block by completion round (host side).
+
+    ``ch_nbr`` holds compact [0, H) halo positions (round-major), ``vh``
+    the matching values; entry positions in ``[Σ round_L[:r], Σ
+    round_L[:r+1])`` arrive in round r. A row is assigned to the round of
+    its HIGHEST-round entry — the earliest point at which every one of
+    its halo operands has been received — and its entries are packed into
+    that round's ELL sub-block in the original slot order. Positions are
+    NOT re-based: sub-block r gathers from the concatenated prefix buffer
+    of rounds <= r, whose length ``Σ round_L[:r+1]`` bounds every packed
+    position by construction.
+    """
+    P, R, Wh = ch_nbr.shape
+    stored = vh != 0
+    ends = np.cumsum(np.asarray(round_L, dtype=np.int64))
+    rounds = []
+    if Wh:
+        rnd = np.searchsorted(ends, ch_nbr, side="right")
+        row_last = np.where(stored, rnd, -1).max(axis=2)  # [P, R]
+    else:
+        row_last = np.full((P, R), -1, dtype=np.int64)
+    for r in range(len(round_L)):
+        m = stored & (row_last == r)[:, :, None] if Wh else np.zeros(
+            (P, R, 0), dtype=bool)
+        Wr = int(m.sum(axis=2).max()) if Wh else 0
+        cr = np.zeros((P, R, Wr), dtype=np.int32)
+        vr = np.zeros((P, R, Wr), dtype=vh.dtype)
+        for p in range(P):
+            rows, slots = np.nonzero(m[p])
+            if not len(rows):
+                continue
+            counts = np.bincount(rows, minlength=R)
+            out_slot = np.arange(len(rows)) - np.repeat(
+                np.cumsum(counts) - counts, counts)
+            cr[p, rows, out_slot] = ch_nbr[p, rows, slots]
+            vr[p, rows, out_slot] = vh[p, rows, slots]
+        rounds.append((jnp.asarray(cr), jnp.asarray(vr)))
+    return tuple(rounds)
 
 
 def _pattern_chunks(matrix, rows):
@@ -709,7 +782,22 @@ def _ell_contract(acc, cols, vals, xsrc):
     return acc
 
 
-def _local_spmv(cols, vals, send_idx, x, dist_axes, P_row, L, use_kernel=False):
+def _contract_block(acc, cols, vals, xsrc, tiles):
+    """Contract one ELL block into ``acc`` — Pallas tile kernel when a
+    per-device tile batch ``(tile_cb, tcols, tvals, br, bc)`` is given,
+    the jnp scan otherwise. Both paths thread ``acc`` and visit stored
+    entries in ascending-column order, so the choice never changes a
+    bit of the result."""
+    if tiles is None:
+        return _ell_contract(acc, cols, vals, xsrc)
+    from ..kernels import ops as kops
+
+    tile_cb, tcols, tvals, br, bc = tiles
+    return kops.ell_spmv_tiled(tile_cb, tcols, tvals, xsrc, y0=acc,
+                               br=br, bc=bc, cols=cols, vals=vals)
+
+
+def _local_spmv(cols, vals, send_idx, x, dist_axes, P_row, L, tiles=None):
     """Per-device body: halo exchange + ELL contraction. x: [R, nb] local.
 
     ``L == 0`` means no shard needs any remote column (a zero-halo
@@ -723,22 +811,21 @@ def _local_spmv(cols, vals, send_idx, x, dist_axes, P_row, L, use_kernel=False):
         xfull = jnp.concatenate([x, halo.reshape(P_row * L, nb)], axis=0)
     else:
         xfull = x
-    if use_kernel:
-        from ..kernels import ops as kops
-
-        return kops.ell_spmv(cols, vals, xfull)
     acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals.dtype, x.dtype))
-    return _ell_contract(acc0, cols, vals, xfull)
+    return _contract_block(acc0, cols, vals, xfull, tiles)
 
 
 def _local_spmv_overlap(cols_loc, vals_loc, cols_halo, vals_halo, send_idx, x,
-                        dist_axes, P_row, L, use_kernel=False):
+                        dist_axes, P_row, L, tiles=None):
     """Split-phase per-device body: launch the halo exchange, contract the
     local ELL while bytes are in flight, then contract the halo ELL.
 
     The all_to_all has no data dependence on the local contraction, so on
     backends with async collectives XLA hides it behind step 2 — the
-    ``T = max(T_comm, T_local) + T_halo`` execution model."""
+    ``T = max(T_comm, T_local) + T_halo`` execution model. The halo
+    contraction THREADS the local accumulator (whether the local block
+    ran in the tile kernel or the jnp scan), preserving the unsplit slot
+    order."""
     R = cols_loc.shape[0]
     nb = x.shape[1]
     if P_row > 1 and L:
@@ -747,40 +834,42 @@ def _local_spmv_overlap(cols_loc, vals_loc, cols_halo, vals_halo, send_idx, x,
                               tiled=False).reshape(P_row * L, nb)
     else:
         halo = jnp.zeros((0, nb), dtype=x.dtype)
-    if use_kernel:
-        from ..kernels import ops as kops
-
-        return kops.ell_spmv_split(cols_loc, vals_loc, cols_halo, vals_halo,
-                                   x, halo)
-
     acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals_loc.dtype, x.dtype))
-    acc = _ell_contract(acc0, cols_loc, vals_loc, x)  # overlaps the exchange
+    acc = _contract_block(acc0, cols_loc, vals_loc, x, tiles)  # overlaps comm
     if cols_halo.shape[1]:
         acc = _ell_contract(acc, cols_halo, vals_halo, halo)
     return acc
 
 
-def _halo_exchange_nbr(x, send_nbr, dist_axes, perms, round_L):
-    """Compressed halo exchange: one ``ppermute`` round per scheduled
-    permutation, each padded to that round's max scheduled pair volume
-    only; the received segments concatenate into the compact [H, nb] halo
-    buffer (devices outside a round's perm receive zeros there). Every
-    round is independent of the others (and of any contraction), so
-    async-collective backends pipeline them freely."""
-    nb = x.shape[1]
+def _halo_parts_nbr(x, send_nbr, dist_axes, perms, round_L):
+    """Launch all compressed ``ppermute`` rounds; return the per-round
+    received segments (round r's segment is [round_L[r], nb]). Every
+    round depends only on ``x``/``send_nbr`` — never on another round or
+    on any contraction — so async-collective backends pipeline them
+    freely and the round-pipelined engine can consume segment r while
+    round r+1 is still in flight."""
     parts = []
     off = 0
     for perm, Lk in zip(perms, round_L):
         seg = jnp.take(x, send_nbr[off:off + Lk], axis=0)  # [Lk, nb]
         parts.append(lax.ppermute(seg, dist_axes, perm=list(perm)))
         off += Lk
+    return parts
+
+
+def _halo_exchange_nbr(x, send_nbr, dist_axes, perms, round_L):
+    """Compressed halo exchange: one ``ppermute`` round per scheduled
+    permutation, each padded to that round's max scheduled pair volume
+    only; the received segments concatenate into the compact [H, nb] halo
+    buffer (devices outside a round's perm receive zeros there)."""
+    parts = _halo_parts_nbr(x, send_nbr, dist_axes, perms, round_L)
     if not parts:
-        return jnp.zeros((0, nb), dtype=x.dtype)
+        return jnp.zeros((0, x.shape[1]), dtype=x.dtype)
     return jnp.concatenate(parts, axis=0)
 
 
 def _local_spmv_nbr(cols_nbr, vals, send_nbr, x, dist_axes, P_row, nbr: NeighborPlan,
-                    use_kernel=False):
+                    tiles=None):
     """Compressed per-device body: neighbor-permute rounds + combined ELL
     contraction against ``[x_local ‖ compact halo]``. The ELL slot layout
     equals the baseline's, so the accumulation order (and hence the result,
@@ -793,22 +882,20 @@ def _local_spmv_nbr(cols_nbr, vals, send_nbr, x, dist_axes, P_row, nbr: Neighbor
         xfull = jnp.concatenate([x, halo], axis=0)
     else:
         xfull = x
-    if use_kernel:
-        from ..kernels import ops as kops
-
-        return kops.ell_spmv(cols_nbr, vals, xfull)
     acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals.dtype, x.dtype))
-    return _ell_contract(acc0, cols_nbr, vals, xfull)
+    return _contract_block(acc0, cols_nbr, vals, xfull, tiles)
 
 
 def _local_spmv_nbr_overlap(cols_loc, vals_loc, cols_halo_nbr, vals_halo,
                             send_nbr, x, dist_axes, P_row, nbr: NeighborPlan,
-                            use_kernel=False):
-    """Compressed split-phase body: launch the permute rounds, contract the
-    local ELL while the (χ₂-proportional) bytes are in flight, contract the
-    halo ELL against the compact receive buffer last — the overlap
-    execution model ``T = max(T_comm, T_local) + T_halo`` with the comm
-    term scaled by Σ_k L_k instead of P·L."""
+                            tiles=None):
+    """Compressed split-phase body WITHOUT round pipelining: launch the
+    permute rounds, contract the local ELL while the (χ₂-proportional)
+    bytes are in flight, contract the whole halo ELL against the compact
+    receive buffer last. Kept as the fallback for surrogate operators
+    (no concrete values to derive round sub-blocks from) and as the
+    negative control of the round-pipeline split-phase proof
+    (``make_spmv(..., pipeline=False)``)."""
     R = cols_loc.shape[0]
     nb = x.shape[1]
     if P_row > 1 and nbr.H:
@@ -816,21 +903,230 @@ def _local_spmv_nbr_overlap(cols_loc, vals_loc, cols_halo_nbr, vals_halo,
                                   nbr.perms, nbr.round_L)
     else:
         halo = jnp.zeros((0, nb), dtype=x.dtype)
-    if use_kernel:
-        from ..kernels import ops as kops
-
-        return kops.ell_spmv_split(cols_loc, vals_loc, cols_halo_nbr,
-                                   vals_halo, x, halo)
     acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals_loc.dtype, x.dtype))
-    acc = _ell_contract(acc0, cols_loc, vals_loc, x)  # overlaps the rounds
+    acc = _contract_block(acc0, cols_loc, vals_loc, x, tiles)  # overlaps comm
     if cols_halo_nbr.shape[1]:
         acc = _ell_contract(acc, cols_halo_nbr, vals_halo, halo)
     return acc
 
 
-def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
-              overlap: bool = False, comm: str = "a2a",
-              schedule: str = "cyclic"):
+def _local_spmv_nbr_pipelined(cols_loc, vals_loc, halo_rounds, send_nbr, x,
+                              dist_axes, P_row, nbr: NeighborPlan,
+                              tiles=None):
+    """Round-pipelined compressed split-phase body.
+
+    All permute rounds launch up front (mutually independent), the local
+    block contracts while they fly, and then round r's ELL sub-block —
+    the halo rows COMPLETED by round r, i.e. whose last needed sender
+    lands in round r — contracts against the concatenated prefix of
+    received segments ``parts[:r+1]``. Contraction r therefore depends
+    on collectives 1..r and on no later round: on async-collective
+    backends round r+1's ppermute is in flight while round r's rows
+    contract (the split-phase proof in ``analysis/overlap_check.py``
+    checks exactly this prefix-chain dependence structure).
+
+    Bit-identity with the unpipelined engines is by construction: each
+    halo row appears in exactly one sub-block with ALL its halo entries
+    in the original slot order, gathered from prefix-buffer positions
+    identical to the full compact buffer's, so the per-element addition
+    chain (local slots, then halo slots ascending) is unchanged — the
+    sub-blocks only reorder which ROWS contract early, never the order
+    of any row's summands."""
+    R = cols_loc.shape[0]
+    nb = x.shape[1]
+    parts = (_halo_parts_nbr(x, send_nbr, dist_axes, nbr.perms, nbr.round_L)
+             if P_row > 1 and nbr.H else [])
+    acc0 = jnp.zeros((R, nb), dtype=jnp.result_type(vals_loc.dtype, x.dtype))
+    acc = _contract_block(acc0, cols_loc, vals_loc, x, tiles)  # overlaps comm
+    buf = jnp.zeros((0, nb), dtype=x.dtype)
+    for part, (cols_r, vals_r) in zip(parts, halo_rounds):
+        buf = jnp.concatenate([buf, part], axis=0)  # prefix of rounds <= r
+        if cols_r.shape[1]:
+            acc = _ell_contract(acc, cols_r, vals_r, buf)
+    return acc
+
+
+def _dev_tiles(plan, arrays):
+    """Per-device tile tuple for :func:`_contract_block` from an
+    :class:`~repro.kernels.ops.EllTilePlan` and the shard_map-delivered
+    (already shard-indexed) device arrays; None when no plan exists."""
+    if plan is None:
+        return None
+    tile_cb, tcols, tvals = arrays
+    return (tile_cb, tcols, tvals, plan.br, plan.bc)
+
+
+def _validate_engine(comm: str, schedule: str) -> None:
+    if comm not in SPMV_COMM_ENGINES:
+        raise ValueError(f"unknown comm engine {comm!r} "
+                         f"(expected one of {SPMV_COMM_ENGINES})")
+    if schedule not in SPMV_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r} "
+                         f"(expected one of {SPMV_SCHEDULES})")
+    if comm != "compressed" and schedule != "cyclic":
+        raise ValueError(f"schedule={schedule!r} only applies to "
+                         f"comm='compressed' (got comm={comm!r})")
+
+
+def _build_engine(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool,
+                  overlap: bool, comm: str, schedule: str, pipeline: bool,
+                  fused: bool):
+    """Shared builder behind :func:`make_spmv` and
+    :func:`make_fused_cheb_step`: assembles the per-engine plan arrays,
+    the per-device contraction body and the ``shard_map`` wrapper. With
+    ``fused=True`` the returned closure computes the fused Chebyshev
+    step ``2a (A w1) + 2b w1 - w2`` in the same body (and, for
+    kernel-enabled comm-free diagonal-structured operators, dispatches
+    the whole step to the ``cheb_dia`` Pallas kernel)."""
+    _validate_engine(comm, schedule)
+    dist = layout.dist_axes
+    vec_spec = layout.vec_pspec()
+
+    def pspec(a):
+        return P(dist if dist else None, *((None,) * (a.ndim - 1)))
+
+    kops = None
+    if use_kernel:
+        from ..kernels import ops as kops_mod
+
+        kops = kops_mod
+
+    if fused and use_kernel and (ell.P == 1 or ell.L == 0):
+        # comm-free operator: try the fused DIA Chebyshev kernel for the
+        # whole step (bit-identical: ascending offsets == ascending
+        # columns == the ELL slot order, same fused epilogue expression)
+        dia = kops.plan_dia(ell.cols, ell.vals, ell.R)
+        if dia is not None:
+            offsets = dia.offsets
+
+            def local_fn_dia(dv, w1, w2, a, b):
+                return kops.cheb_dia(offsets, dv[0], w1, w1, w2, a, b)
+
+            fn = shard_map(
+                local_fn_dia,
+                mesh=mesh,
+                in_specs=(pspec(dia.dvals), vec_spec, vec_spec, P(), P()),
+                out_specs=vec_spec,
+                check_rep=False,
+            )
+
+            def step_dia(w1, w2, alpha, beta):
+                rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
+                a = jnp.asarray(alpha, dtype=rdt)
+                b = jnp.asarray(beta, dtype=rdt)
+                return fn(dia.dvals, w1, w2, a, b)
+
+            return step_dia
+
+    if comm == "compressed":
+        nbr = ell.neighbor_plan(split_halo=overlap, schedule=schedule)
+        if overlap:
+            cols_loc, vals_loc, _, vals_halo = ell.split()
+            tiles_plan = (kops.plan_ell_tiles(cols_loc, vals_loc, ell.R)
+                          if use_kernel else None)
+            tile_args = list(tiles_plan.arrays()) if tiles_plan else []
+            rounds = nbr.halo_rounds if pipeline else None
+            if rounds is not None:
+                n_r = len(rounds)
+                args = ([cols_loc, vals_loc, nbr.send_nbr]
+                        + [a for cv in rounds for a in cv] + tile_args)
+
+                def body(x, cl, vl, send_nbr, *rest):
+                    rnds = tuple((rest[2 * i], rest[2 * i + 1])
+                                 for i in range(n_r))
+                    return _local_spmv_nbr_pipelined(
+                        cl, vl, rnds, send_nbr, x, dist, ell.P, nbr,
+                        _dev_tiles(tiles_plan, rest[2 * n_r:]))
+            else:
+                args = [cols_loc, vals_loc, nbr.cols_halo_nbr, vals_halo,
+                        nbr.send_nbr] + tile_args
+
+                def body(x, cl, vl, ch, vh, send_nbr, *rest):
+                    return _local_spmv_nbr_overlap(
+                        cl, vl, ch, vh, send_nbr, x, dist, ell.P, nbr,
+                        _dev_tiles(tiles_plan, rest))
+        else:
+            tiles_plan = (kops.plan_ell_tiles(nbr.cols_nbr, ell.vals,
+                                              ell.R + nbr.H)
+                          if use_kernel else None)
+            args = ([nbr.cols_nbr, ell.vals, nbr.send_nbr]
+                    + (list(tiles_plan.arrays()) if tiles_plan else []))
+
+            def body(x, cols_nbr, vals, send_nbr, *rest):
+                return _local_spmv_nbr(cols_nbr, vals, send_nbr, x, dist,
+                                       ell.P, nbr,
+                                       _dev_tiles(tiles_plan, rest))
+    elif overlap:
+        cols_loc, vals_loc, cols_halo, vals_halo = ell.split()
+        tiles_plan = (kops.plan_ell_tiles(cols_loc, vals_loc, ell.R)
+                      if use_kernel else None)
+        args = ([cols_loc, vals_loc, cols_halo, vals_halo, ell.send_idx]
+                + (list(tiles_plan.arrays()) if tiles_plan else []))
+
+        def body(x, cl, vl, ch, vh, send_idx, *rest):
+            return _local_spmv_overlap(cl, vl, ch, vh, send_idx, x, dist,
+                                       ell.P, ell.L,
+                                       _dev_tiles(tiles_plan, rest))
+    else:
+        tiles_plan = (kops.plan_ell_tiles(ell.cols, ell.vals,
+                                          ell.R + ell.P * ell.L)
+                      if use_kernel else None)
+        args = ([ell.cols, ell.vals, ell.send_idx]
+                + (list(tiles_plan.arrays()) if tiles_plan else []))
+
+        def body(x, cols, vals, send_idx, *rest):
+            return _local_spmv(cols, vals, send_idx, x, dist, ell.P, ell.L,
+                               _dev_tiles(tiles_plan, rest))
+
+    n_args = len(args)
+    plan_specs = tuple(pspec(a) for a in args)
+
+    if fused:
+        def local_fn_fused(*ins):
+            dev = [a[0] for a in ins[:n_args]]
+            w1, w2, a, b = ins[n_args:]
+            y = body(w1, *dev)
+            return 2.0 * a * y + 2.0 * b * w1 - w2
+
+        fn = shard_map(
+            local_fn_fused,
+            mesh=mesh,
+            in_specs=plan_specs + (vec_spec, vec_spec, P(), P()),
+            out_specs=vec_spec,
+            check_rep=False,
+        )
+
+        def step(w1, w2, alpha, beta):
+            rdt = jnp.zeros((), dtype=w1.dtype).real.dtype  # complex-safe
+            a = jnp.asarray(alpha, dtype=rdt)
+            b = jnp.asarray(beta, dtype=rdt)
+            return fn(*args, w1, w2, a, b)
+
+        return step
+
+    def local_fn(*ins):
+        dev = [a[0] for a in ins[:n_args]]
+        (x,) = ins[n_args:]
+        return body(x, *dev)
+
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=plan_specs + (vec_spec,),
+        out_specs=vec_spec,
+        check_rep=False,
+    )
+
+    def spmv(x):
+        return fn(*args, x)
+
+    return spmv
+
+
+def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *,
+              use_kernel: bool = False, overlap: bool = False,
+              comm: str = "a2a", schedule: str = "cyclic",
+              pipeline: bool = True):
     """Return spmv(x) on the global padded array X [D_pad, N_s'] where the
     layout's dist axes shard D and bundle axes shard N_s.
 
@@ -845,224 +1141,39 @@ def make_spmv(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = Fa
     pair-volume matrix: ``"cyclic"`` (one round per nonzero cyclic
     shift) or ``"matching"`` (greedy max-weight matchings — hot pairs of
     different shifts share one round's pad; see
-    :func:`neighbor_schedule`). All six engine combinations agree
-    bit-for-bit."""
-    if comm not in SPMV_COMM_ENGINES:
-        raise ValueError(f"unknown comm engine {comm!r} "
-                         f"(expected one of {SPMV_COMM_ENGINES})")
-    if schedule not in SPMV_SCHEDULES:
-        raise ValueError(f"unknown schedule {schedule!r} "
-                         f"(expected one of {SPMV_SCHEDULES})")
-    if comm != "compressed" and schedule != "cyclic":
-        raise ValueError(f"schedule={schedule!r} only applies to "
-                         f"comm='compressed' (got comm={comm!r})")
-    dist = layout.dist_axes
-    vec_spec = layout.vec_pspec()
-    plan_spec = P(dist if dist else None, None, None)
+    :func:`neighbor_schedule`).
 
-    if comm == "compressed":
-        nbr = ell.neighbor_plan(split_halo=overlap, schedule=schedule)
-        send_spec = P(dist if dist else None, None)
-
-        if overlap:
-            cols_loc, vals_loc, _, vals_halo = ell.split()
-
-            def local_fn_cmp_ov(cl, vl, ch, vh, send_nbr, x):
-                return _local_spmv_nbr_overlap(
-                    cl[0], vl[0], ch[0], vh[0], send_nbr[0], x, dist,
-                    ell.P, nbr, use_kernel)
-
-            fn = shard_map(
-                local_fn_cmp_ov,
-                mesh=mesh,
-                in_specs=(plan_spec,) * 4 + (send_spec, vec_spec),
-                out_specs=vec_spec,
-                check_rep=False,
-            )
-
-            def spmv_cmp_ov(x):
-                return fn(cols_loc, vals_loc, nbr.cols_halo_nbr, vals_halo,
-                          nbr.send_nbr, x)
-
-            return spmv_cmp_ov
-
-        def local_fn_cmp(cols_nbr, vals, send_nbr, x):
-            return _local_spmv_nbr(cols_nbr[0], vals[0], send_nbr[0], x,
-                                   dist, ell.P, nbr, use_kernel)
-
-        fn = shard_map(
-            local_fn_cmp,
-            mesh=mesh,
-            in_specs=(plan_spec, plan_spec, send_spec, vec_spec),
-            out_specs=vec_spec,
-            check_rep=False,
-        )
-
-        def spmv_cmp(x):
-            return fn(nbr.cols_nbr, ell.vals, nbr.send_nbr, x)
-
-        return spmv_cmp
-
-    if overlap:
-        cols_loc, vals_loc, cols_halo, vals_halo = ell.split()
-
-        def local_fn_ov(cl, vl, ch, vh, send_idx, x):
-            # cl/vl [1, R, W_loc]; ch/vh [1, R, W_halo]; send_idx [1, P, L]
-            return _local_spmv_overlap(
-                cl[0], vl[0], ch[0], vh[0], send_idx[0], x, dist, ell.P,
-                ell.L, use_kernel
-            )
-
-        fn = shard_map(
-            local_fn_ov,
-            mesh=mesh,
-            in_specs=(plan_spec,) * 5 + (vec_spec,),
-            out_specs=vec_spec,
-            check_rep=False,
-        )
-
-        def spmv_ov(x):
-            return fn(cols_loc, vals_loc, cols_halo, vals_halo, ell.send_idx, x)
-
-        return spmv_ov
-
-    def local_fn(cols, vals, send_idx, x):
-        # cols/vals [1, R, W]; send_idx [1, P, L]; x [R, nb_loc]
-        return _local_spmv(
-            cols[0], vals[0], send_idx[0], x, dist, ell.P, ell.L, use_kernel
-        )
-
-    fn = shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(plan_spec, plan_spec, plan_spec, vec_spec),
-        out_specs=vec_spec,
-        check_rep=False,
-    )
-
-    def spmv(x):
-        return fn(ell.cols, ell.vals, ell.send_idx, x)
-
-    return spmv
+    ``use_kernel=True`` dispatches the local block to the Pallas
+    ``ell_gather`` tile kernel (interpret mode off-TPU); the kernel
+    threads the same accumulator chain as the jnp scan, so kernel-on and
+    kernel-off engines agree bit-for-bit. ``pipeline`` (compressed +
+    overlap only) selects the round-pipelined halo contraction — round
+    r's completed rows contract while round r+1's ppermute is in
+    flight; ``pipeline=False`` keeps the all-rounds-then-contract body
+    (the negative control of the split-phase round proof). All twelve
+    engine combinations ({a2a, cmp-cyclic, cmp-matching} x {plain,
+    overlap} x {kernel off, on}) agree bit-for-bit."""
+    return _build_engine(mesh, layout, ell, use_kernel=use_kernel,
+                         overlap=overlap, comm=comm, schedule=schedule,
+                         pipeline=pipeline, fused=False)
 
 
-def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *, use_kernel: bool = False,
-                         overlap: bool = False, comm: str = "a2a",
-                         schedule: str = "cyclic"):
+def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *,
+                         use_kernel: bool = False, overlap: bool = False,
+                         comm: str = "a2a", schedule: str = "cyclic",
+                         pipeline: bool = True):
     """w2' = 2a (A w1) + 2b w1 - w2 — the paper's fused SpMV+axpy kernel
     (Alg. 2 step 7), computed in one shard_map body so XLA (or the Pallas
     kernel) fuses the axpy with the contraction (κ = 5, not 6). With
-    ``overlap=True`` the SpMV inside uses the split-phase engine; with
-    ``comm="compressed"`` it uses the neighbor-permute halo exchange,
-    whose rounds come from the ``schedule`` scheduler (same options as
-    :func:`make_spmv`)."""
-    if comm not in SPMV_COMM_ENGINES:
-        raise ValueError(f"unknown comm engine {comm!r} "
-                         f"(expected one of {SPMV_COMM_ENGINES})")
-    if schedule not in SPMV_SCHEDULES:
-        raise ValueError(f"unknown schedule {schedule!r} "
-                         f"(expected one of {SPMV_SCHEDULES})")
-    if comm != "compressed" and schedule != "cyclic":
-        raise ValueError(f"schedule={schedule!r} only applies to "
-                         f"comm='compressed' (got comm={comm!r})")
-    dist = layout.dist_axes
-    vec_spec = layout.vec_pspec()
-    plan_spec = P(dist if dist else None, None, None)
-
-    if comm == "compressed":
-        nbr = ell.neighbor_plan(split_halo=overlap, schedule=schedule)
-        send_spec = P(dist if dist else None, None)
-
-        if overlap:
-            cols_loc, vals_loc, _, vals_halo = ell.split()
-
-            def local_fn_cmp_ov(cl, vl, ch, vh, send_nbr, w1, w2, a, b):
-                y = _local_spmv_nbr_overlap(cl[0], vl[0], ch[0], vh[0],
-                                            send_nbr[0], w1, dist, ell.P,
-                                            nbr, use_kernel)
-                return 2.0 * a * y + 2.0 * b * w1 - w2
-
-            fn = shard_map(
-                local_fn_cmp_ov,
-                mesh=mesh,
-                in_specs=(plan_spec,) * 4 + (send_spec, vec_spec, vec_spec,
-                                             P(), P()),
-                out_specs=vec_spec,
-                check_rep=False,
-            )
-
-            def step_cmp_ov(w1, w2, alpha, beta):
-                rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
-                a = jnp.asarray(alpha, dtype=rdt)
-                b = jnp.asarray(beta, dtype=rdt)
-                return fn(cols_loc, vals_loc, nbr.cols_halo_nbr, vals_halo,
-                          nbr.send_nbr, w1, w2, a, b)
-
-            return step_cmp_ov
-
-        def local_fn_cmp(cols_nbr, vals, send_nbr, w1, w2, a, b):
-            y = _local_spmv_nbr(cols_nbr[0], vals[0], send_nbr[0], w1,
-                                dist, ell.P, nbr, use_kernel)
-            return 2.0 * a * y + 2.0 * b * w1 - w2
-
-        fn = shard_map(
-            local_fn_cmp,
-            mesh=mesh,
-            in_specs=(plan_spec, plan_spec, send_spec, vec_spec, vec_spec,
-                      P(), P()),
-            out_specs=vec_spec,
-            check_rep=False,
-        )
-
-        def step_cmp(w1, w2, alpha, beta):
-            rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
-            a = jnp.asarray(alpha, dtype=rdt)
-            b = jnp.asarray(beta, dtype=rdt)
-            return fn(nbr.cols_nbr, ell.vals, nbr.send_nbr, w1, w2, a, b)
-
-        return step_cmp
-
-    if overlap:
-        cols_loc, vals_loc, cols_halo, vals_halo = ell.split()
-
-        def local_fn(cl, vl, ch, vh, send_idx, w1, w2, a, b):
-            y = _local_spmv_overlap(cl[0], vl[0], ch[0], vh[0], send_idx[0],
-                                    w1, dist, ell.P, ell.L, use_kernel)
-            return 2.0 * a * y + 2.0 * b * w1 - w2
-
-        fn = shard_map(
-            local_fn,
-            mesh=mesh,
-            in_specs=(plan_spec,) * 5 + (vec_spec, vec_spec, P(), P()),
-            out_specs=vec_spec,
-            check_rep=False,
-        )
-
-        def step_ov(w1, w2, alpha, beta):
-            rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
-            a = jnp.asarray(alpha, dtype=rdt)
-            b = jnp.asarray(beta, dtype=rdt)
-            return fn(cols_loc, vals_loc, cols_halo, vals_halo, ell.send_idx,
-                      w1, w2, a, b)
-
-        return step_ov
-
-    def local_fn(cols, vals, send_idx, w1, w2, a, b):
-        y = _local_spmv(cols[0], vals[0], send_idx[0], w1, dist, ell.P, ell.L, use_kernel)
-        return 2.0 * a * y + 2.0 * b * w1 - w2
-
-    fn = shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(plan_spec, plan_spec, plan_spec, vec_spec, vec_spec, P(), P()),
-        out_specs=vec_spec,
-        check_rep=False,
-    )
-
-    def step(w1, w2, alpha, beta):
-        rdt = jnp.zeros((), dtype=w1.dtype).real.dtype  # real part dtype (complex-safe)
-        a = jnp.asarray(alpha, dtype=rdt)
-        b = jnp.asarray(beta, dtype=rdt)
-        return fn(ell.cols, ell.vals, ell.send_idx, w1, w2, a, b)
-
-    return step
+    ``overlap=True`` the SpMV inside uses the split-phase engine (round-
+    pipelined halo contraction when ``comm="compressed"`` and
+    ``pipeline=True``); with ``comm="compressed"`` it uses the
+    neighbor-permute halo exchange, whose rounds come from the
+    ``schedule`` scheduler (same options as :func:`make_spmv`). With
+    ``use_kernel=True`` a comm-free diagonal-structured operator runs the
+    whole step in the fused ``cheb_dia`` Pallas kernel; otherwise the
+    local block uses the ``ell_gather`` tile kernel and the epilogue
+    fuses in XLA."""
+    return _build_engine(mesh, layout, ell, use_kernel=use_kernel,
+                         overlap=overlap, comm=comm, schedule=schedule,
+                         pipeline=pipeline, fused=True)

@@ -40,11 +40,19 @@ def build_tiles(cols: np.ndarray, vals: np.ndarray, Rx: int, br: int, bc: int):
     Returns (tile_cb [RB, T], tcols [RB, T, br, Wt], tvals [...]) where T is
     the padded tile count and Wt the padded per-tile width. Padded entries
     point at tile-local column 0 with value 0.
+
+    The tiling is *order-preserving for arbitrary slot orders*: each entry
+    is placed in the earliest tile at-or-after its row's previously used
+    tile whose column block matches (a new tile is opened otherwise), so
+    every row visits its tiles — and its slots inside each tile — in the
+    original slot order. The kernel's tile-major accumulation therefore
+    reproduces the jnp scan's per-element addition chain bit-for-bit even
+    when a row's columns are not monotone in column block (e.g. the
+    re-based halo addresses of the compressed engines).
     """
     R, W = cols.shape
     RB = R // br
-    n_cb = -(-Rx // bc)
-    tiles: list[list[tuple[int, np.ndarray, np.ndarray, np.ndarray]]] = []
+    tiles: list[list[tuple[int, np.ndarray, np.ndarray]]] = []
     T = 1
     Wt = 1
     for rb in range(RB):
@@ -52,17 +60,36 @@ def build_tiles(cols: np.ndarray, vals: np.ndarray, Rx: int, br: int, bc: int):
         v = vals[rb * br : (rb + 1) * br]
         nz = v != 0
         cb_of = c // bc
+        tile_cbs: list[int] = []           # column block of each tile, in order
+        entries: list[list[tuple[int, int]]] = []  # per tile: (row, slot)
+        last_t = np.full(br, -1, dtype=np.int64)
+        for w in range(W):
+            for r in np.nonzero(nz[:, w])[0]:
+                cb = int(cb_of[r, w])
+                lo = max(int(last_t[r]), 0)
+                for t in range(lo, len(tile_cbs)):
+                    if tile_cbs[t] == cb:
+                        break
+                else:
+                    t = len(tile_cbs)
+                    tile_cbs.append(cb)
+                    entries.append([])
+                entries[t].append((int(r), int(w)))
+                last_t[r] = t
         row_tiles = []
-        for cb in np.unique(cb_of[nz]):
-            m = nz & (cb_of == cb)
-            w_t = int(m.sum(axis=1).max())
+        for cb, ent in zip(tile_cbs, entries):
+            counts = np.zeros(br, dtype=np.int64)
+            for r, _ in ent:
+                counts[r] += 1
+            w_t = int(counts.max())
             tc = np.zeros((br, w_t), dtype=np.int32)
             tv = np.zeros((br, w_t), dtype=vals.dtype)
-            for r in range(br):
-                sel = np.nonzero(m[r])[0]
-                tc[r, : len(sel)] = c[r, sel] - cb * bc
-                tv[r, : len(sel)] = v[r, sel]
-            row_tiles.append((int(cb), tc, tv))
+            fill = np.zeros(br, dtype=np.int64)
+            for r, w in ent:
+                tc[r, fill[r]] = c[r, w] - cb * bc
+                tv[r, fill[r]] = v[r, w]
+                fill[r] += 1
+            row_tiles.append((cb, tc, tv))
             Wt = max(Wt, w_t)
         T = max(T, len(row_tiles))
         tiles.append(row_tiles)
@@ -77,20 +104,27 @@ def build_tiles(cols: np.ndarray, vals: np.ndarray, Rx: int, br: int, bc: int):
     return tile_cb, tcols, tvals
 
 
-def _kernel(tile_cb, tcols, tvals, xblk, out, *, n_tiles):
+def _kernel(tile_cb, tcols, tvals, xblk, y0blk, out, *, n_tiles):
     t = pl.program_id(2)
 
     @pl.when(t == 0)
     def _init():
-        out[...] = jnp.zeros_like(out)
+        out[...] = y0blk[...]
 
     c = tcols[0, 0]  # [br, Wt] tile-local columns
     v = tvals[0, 0]
     xb = xblk[...]  # [bc, bn]
-    acc = out[...]
-    for w in range(c.shape[1]):
-        acc = acc + v[:, w : w + 1] * jnp.take(xb, c[:, w], axis=0)
-    out[...] = acc
+
+    # rolled slot loop, NOT an unrolled python loop: XLA compiles an
+    # unrolled mul-add chain with FMA contraction (differently rounded),
+    # while the rolled loop emits the same one-mul-one-add iteration body
+    # as the engines' lax.scan — bit-identical accumulation
+    def slot(w, acc):
+        cw = jax.lax.dynamic_slice_in_dim(c, w, 1, axis=1)[:, 0]
+        vw = jax.lax.dynamic_slice_in_dim(v, w, 1, axis=1)
+        return acc + vw * jnp.take(xb, cw, axis=0)
+
+    out[...] = jax.lax.fori_loop(0, c.shape[1], slot, out[...])
 
 
 @functools.partial(jax.jit, static_argnames=("br", "bc", "bn", "interpret"))
@@ -99,15 +133,28 @@ def ell_gather_spmv(
     tcols: jax.Array,    # [RB, T, br, Wt]
     tvals: jax.Array,    # [RB, T, br, Wt]
     x: jax.Array,        # [Rx_pad, nb] (padded to multiple of bc)
+    y0: jax.Array | None = None,  # [R, nb] accumulator threaded into the tiles
     br: int = DEFAULT_BR,
     bc: int = DEFAULT_BC,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
 ):
+    """Tiled ELL contraction ``y0 + A @ x`` (``y0 = 0`` when omitted).
+
+    The optional ``y0`` operand initializes each output block at tile 0,
+    so a caller that has already accumulated (e.g. the split-phase local
+    block before the halo block) THREADS its accumulator through the
+    kernel: per output element the addition chain is y0, then the
+    entries in the order-preserving tile sequence of :func:`build_tiles`
+    — the same slot order as the jnp scan, which is what keeps kernel-on
+    and kernel-off engines bit-identical.
+    """
     RB, T, _, Wt = tcols.shape
     R = RB * br
     Rx, nb = x.shape
     assert Rx % bc == 0 and nb % bn == 0
+    if y0 is None:
+        y0 = jnp.zeros((R, nb), dtype=x.dtype)
     grid = (RB, nb // bn, T)
     if _GRID_SPEC is None:
         raise NotImplementedError
@@ -118,12 +165,13 @@ def ell_gather_spmv(
             pl.BlockSpec((1, 1, br, Wt), lambda rb, cb, t, cbref: (rb, t, 0, 0)),
             pl.BlockSpec((1, 1, br, Wt), lambda rb, cb, t, cbref: (rb, t, 0, 0)),
             pl.BlockSpec((bc, bn), lambda rb, cb, t, cbref: (cbref[rb, t], cb)),
+            pl.BlockSpec((br, bn), lambda rb, cb, t, cbref: (rb, cb)),
         ],
         out_specs=pl.BlockSpec((br, bn), lambda rb, cb, t, cbref: (rb, cb)),
     )
     return pl.pallas_call(
         functools.partial(_kernel, n_tiles=T),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((R, nb), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((R, nb), y0.dtype),
         interpret=interpret,
-    )(tile_cb, tcols, tvals, x)
+    )(tile_cb, tcols, tvals, x, y0)

@@ -5,25 +5,37 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def ell_spmv_ref(cols, vals, x):
-    """y[r] = sum_w vals[r, w] * x[cols[r, w]];  cols [R,W], x [Rx, nb]."""
+def ell_spmv_acc_ref(acc, cols, vals, x):
+    """Accumulator-threaded ELL contraction: the W-step scan adds one slot
+    per step into ``acc``, so per output element the floating-point
+    addition order is exactly the slot order (ascending column). Every
+    engine path — jnp, tile kernel, split-phase, round-pipelined — must
+    reduce to this chain (possibly with bit-neutral ``+ 0.0`` pad adds
+    interspersed) for the cross-engine bit-identity grid to hold."""
     def body(acc, cw):
         c, v = cw
         return acc + v[:, None] * jnp.take(x, c, axis=0), None
 
-    acc0 = jnp.zeros((cols.shape[0], x.shape[1]), dtype=jnp.result_type(vals, x))
-    acc, _ = lax.scan(body, acc0, (cols.T, vals.T))
+    acc, _ = lax.scan(body, acc, (cols.T, vals.T))
     return acc
+
+
+def ell_spmv_ref(cols, vals, x):
+    """y[r] = sum_w vals[r, w] * x[cols[r, w]];  cols [R,W], x [Rx, nb]."""
+    acc0 = jnp.zeros((cols.shape[0], x.shape[1]), dtype=jnp.result_type(vals, x))
+    return ell_spmv_acc_ref(acc0, cols, vals, x)
 
 
 def ell_spmv_split_ref(cols_loc, vals_loc, cols_halo, vals_halo, x, halo):
     """Split-phase ELL contraction: local block against the resident shard
     x [R, nb], halo block against the received buffer halo [P*L, nb]. Per
     row, local entries accumulate before halo entries — the unsplit ELL
-    slot order."""
+    slot order. The halo block THREADS the local accumulator (rather than
+    summing separately and adding) so the addition chain is the one of
+    :func:`ell_spmv_acc_ref` over the concatenated slots, bit-for-bit."""
     y = ell_spmv_ref(cols_loc, vals_loc, x)
     if cols_halo.shape[1]:
-        y = y + ell_spmv_ref(cols_halo, vals_halo, halo)
+        y = ell_spmv_acc_ref(y, cols_halo, vals_halo, halo)
     return y
 
 

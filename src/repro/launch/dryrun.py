@@ -171,8 +171,8 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               n_search: int | None = None, verbose=True,
               plan: bool = False, spmv_comm: str = "a2a",
               spmv_schedule: str = "cyclic", spmv_balance: str = "rows",
-              spmv_reorder: str = "none", machine=None,
-              verify: bool = False) -> dict:
+              spmv_reorder: str = "none", spmv_kernel: bool = False,
+              machine=None, verify: bool = False) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
     surrogate with the *exact* χ-derived comm plan of the real matrix.
@@ -202,6 +202,14 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     or the per-row pattern pass unaffordable at this D) are relabeled
     back to ``rows``/``none`` so the record never claims a partition
     that did not lower.
+
+    ``spmv_kernel=True`` requests the Pallas kernel engine (the ``+krn``
+    cell suffix). The surrogate's plan arrays are ShapeDtypeStructs /
+    tracers, so the host-side tile planner (``kernels/ops.py``) finds
+    nothing concrete and the engine falls back to the jnp contraction by
+    design — the lowered collectives (and hence every predicted ==
+    measured check) are identical to the kernel-off cell, which is
+    exactly the census contract the kernels must keep.
 
     ``plan=True`` adds the χ-driven planner panel: the full candidate
     ranking (``core/planner.py``) for this matrix on the production mesh,
@@ -343,7 +351,8 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         ell = spmv_mod.DistEll(cols=cols, vals=vals, send_idx=send_idx,
                                R=R, L=L, P=N_row, D=D, nbr=nbr)
         spmv = spmv_mod.make_spmv(mesh, panel_l, ell, comm=spmv_comm,
-                                  schedule=spmv_schedule)
+                                  schedule=spmv_schedule,
+                                  use_kernel=spmv_kernel)
         Q, _ = tsqr(V)
         Vp = to_panel(Q)
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
@@ -358,7 +367,8 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                                cols_halo=cols_halo, vals_halo=vals_halo,
                                nbr=nbr)
         spmv = spmv_mod.make_spmv(mesh, panel_l, ell, overlap=True,
-                                  comm=spmv_comm, schedule=spmv_schedule)
+                                  comm=spmv_comm, schedule=spmv_schedule,
+                                  use_kernel=spmv_kernel)
         Q, _ = tsqr(V)
         Vp = to_panel(Q)
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
@@ -403,10 +413,11 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                else "+mat" if spmv_schedule == "matching" else "+cmp")
     part_tag = ("+cv" if spmv_balance == "commvol" else "") + \
         ("+rcm" if spmv_reorder == "rcm" else "")
+    krn_tag = "+krn" if spmv_kernel else ""
     rec = {
         "arch": name,
         "shape": (f"fd_iter[{layout_name}{part_tag}{cmp_tag}"
-                  f"{'+ov' if overlap else ''},Ns={n_s},deg={degree}]"),
+                  f"{'+ov' if overlap else ''}{krn_tag},Ns={n_s},deg={degree}]"),
         "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": mesh.devices.size,
         "status": "ok", "t_lower_s": round(t_lower, 1),
         "t_compile_s": round(t_compile, 1), "memory": mem,
@@ -414,6 +425,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         "chi_comm_plan_L": int(L), "n_vc_max": int(n_vc.max()) if N_row > 1 else 0,
         "spmv_comm": spmv_comm, "spmv_schedule": spmv_schedule,
         "spmv_balance": spmv_balance, "spmv_reorder": spmv_reorder,
+        "spmv_kernel": spmv_kernel,
         "nbr_H": H, "nbr_rounds": len(perms),
     }
     if verify:
@@ -606,7 +618,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     if verbose:
         print(f"[dryrun-eigen] {name} "
               f"[{layout_name}{part_tag}{cmp_tag}"
-              f"{'+ov' if overlap else ''}] on {rec['mesh']}: OK "
+              f"{'+ov' if overlap else ''}{krn_tag}] on {rec['mesh']}: OK "
               f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
         if "overlap_model_speedup" in rec:
             print(f"  perf model/iter: additive={rec['t_model_additive_s']*1e3:.2f}ms "
@@ -768,6 +780,13 @@ def main(argv=None):
                     help="row order for --eigen cells: 'none' or 'rcm' "
                          "(reverse-Cuthill-McKee, applied before "
                          "partitioning — the '+rcm' cell suffix)")
+    ap.add_argument("--spmv-kernel", action="store_true",
+                    help="request the Pallas kernel engine for --eigen "
+                         "cells (the '+krn' cell suffix; --spmv-kernel of "
+                         "repro.launch.solve). The surrogate's plan "
+                         "arrays are abstract, so the cell lowers the jnp "
+                         "fallback with IDENTICAL collectives — the "
+                         "kernel census contract (docs/kernels.md)")
     ap.add_argument("--plan", action="store_true",
                     help="with --eigen: print the χ-driven planner ranking "
                          "(core/planner.py) and the predicted vs HLO-measured "
@@ -815,6 +834,7 @@ def main(argv=None):
                                      spmv_schedule=args.spmv_schedule,
                                      spmv_balance=args.spmv_balance,
                                      spmv_reorder=args.spmv_reorder,
+                                     spmv_kernel=args.spmv_kernel,
                                      machine=machine, verify=args.verify))
         elif args.all:
             for arch, shape, cell in iter_cells():

@@ -71,7 +71,9 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
                            d_pad=-(-mat.D // n_dev) * n_dev,
                            machine=machine or pm.TPU_V5E,
                            reorder=tuple(dict.fromkeys(
-                               ("none", fd.spmv_reorder))))
+                               ("none", fd.spmv_reorder))),
+                           kernel=tuple(dict.fromkeys(
+                               (False, fd.spmv_kernel))))
         best = plan.best
         if verbose:
             print(plan.report())
@@ -79,7 +81,8 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
                   f"(spmv_overlap={best.overlap}, spmv_comm={best.comm}, "
                   f"spmv_schedule={best.schedule}, "
                   f"spmv_balance={best.balance}, "
-                  f"spmv_reorder={best.reorder})")
+                  f"spmv_reorder={best.reorder}, "
+                  f"spmv_kernel={best.kernel})")
         n_row, n_col = best.n_row, best.n_col
         # the chosen split realizes the planned layout; the winning
         # candidate's rowmap (planned at P = n_row·n_col) is handed to
@@ -89,7 +92,8 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
                                  spmv_comm=best.comm,
                                  spmv_schedule=best.schedule,
                                  spmv_balance=best.balance,
-                                 spmv_reorder=best.reorder)
+                                 spmv_reorder=best.reorder,
+                                 spmv_kernel=best.kernel)
     if n_row * n_col > n_dev:
         raise RuntimeError(f"mesh {n_row}x{n_col} needs {n_row*n_col} devices, "
                            f"have {n_dev}")
@@ -179,6 +183,16 @@ def main(argv=None):
                          "dry-run's '+rcm' suffix; with --layout auto "
                          "an explicit 'rcm' widens the planner's "
                          "partition axis)")
+    ap.add_argument("--spmv-kernel", action="store_true",
+                    help="Pallas kernel engine: dispatch the local ELL "
+                         "contraction to the ell_gather tile kernel and "
+                         "the fused Chebyshev recurrence step to the "
+                         "cheb_dia kernel where the operator is comm-free "
+                         "diagonal-structured (interpret mode off-TPU; "
+                         "bit-identical to the jnp engines — see "
+                         "docs/kernels.md; with --layout auto an explicit "
+                         "kernel request widens the planner's kernel "
+                         "axis, scored with the fused kappa=5 term)")
     ap.add_argument("--machine", default="tpu-v5e",
                     help="machine model for --layout auto planning: "
                          "'tpu-v5e', 'meggie', or a path to a JSON model "
@@ -200,7 +214,8 @@ def main(argv=None):
                   spmv_comm=args.spmv_comm,
                   spmv_schedule=args.spmv_schedule,
                   spmv_balance=args.spmv_balance,
-                  spmv_reorder=args.spmv_reorder)
+                  spmv_reorder=args.spmv_reorder,
+                  spmv_kernel=args.spmv_kernel)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok,
                 machine=machine)

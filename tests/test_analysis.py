@@ -215,6 +215,72 @@ print("DEPENDENT HALO CAUGHT")
     assert "DEPENDENT HALO CAUGHT" in out
 
 
+def test_round_pipeline_prefix_chain_proof():
+    """check_round_pipeline proves the pipelined compressed engine's
+    prefix-chain property (round-r contraction depends on no later
+    round's collective; prefix lengths 0, n, and a strict intermediate
+    all witnessed) and rejects both the unpipelined control body
+    (pipeline=False — no strict prefix) and a planted out-of-order
+    dependence (a contraction consuming round 2 without round 1)."""
+    out = run_distributed("""
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.analysis.overlap_check import check_round_pipeline
+from repro.core import layouts as lo
+from repro.core.planner import layout_on_mesh
+from repro.core.spmv import build_dist_ell, make_spmv
+from repro.matrices import SpinChainXXZ
+
+matrix = SpinChainXXZ(10, 5)
+mesh = lo.make_solver_mesh(4, 2)
+panel_l = layout_on_mesh(mesh, "panel")
+D_pad = -(-matrix.D // 8) * 8
+ell = build_dist_ell(matrix, 4, d_pad=D_pad, split_halo=True)
+V = jax.ShapeDtypeStruct((D_pad, 4), jax.numpy.float64)
+for use_kernel in (False, True):
+    spmv = make_spmv(mesh, panel_l, ell, use_kernel=use_kernel,
+                     overlap=True, comm="compressed", schedule="cyclic")
+    with mesh:
+        rep = check_round_pipeline(spmv, V)
+    assert rep.ok, rep.describe()
+    assert rep.n_rounds >= 2
+    assert 0 in rep.prefix_lengths and rep.n_rounds in rep.prefix_lengths
+    assert any(0 < k < rep.n_rounds for k in rep.prefix_lengths)
+    # the unpipelined control witnesses only {0, n} and must fail
+    flat = make_spmv(mesh, panel_l, ell, use_kernel=use_kernel,
+                     overlap=True, comm="compressed", schedule="cyclic",
+                     pipeline=False)
+    with mesh:
+        rep0 = check_round_pipeline(flat, V)
+    assert not rep0.ok
+    assert rep0.prefix_lengths == [0, rep0.n_rounds]
+    assert any("not round-pipelined" in e for e in rep0.errors)
+
+# planted defect: a contraction that consumes round 2's buffer without
+# round 1's — the dependence set {c2} is not a prefix of (c1, c2)
+def bad_engine(x):
+    fwd = [(i, (i + 1) % 4) for i in range(4)]
+    h1 = lax.ppermute(x, "row", fwd)
+    h2 = lax.ppermute(x, "row", [(i, (i + 2) % 4) for i in range(4)])
+    def body(c, w):
+        return c + w * h2, None
+    y, _ = lax.scan(body, x * 0.5, jnp.arange(3.0))
+    return y + h1
+
+fn = shard_map(bad_engine, mesh=mesh, in_specs=P(None, None),
+               out_specs=P(None, None), check_rep=False)
+x = jax.ShapeDtypeStruct((16, 8), jax.numpy.float64)
+with mesh:
+    bad = check_round_pipeline(fn, x)
+assert not bad.ok
+assert any("not a prefix" in e for e in bad.errors), bad.errors
+print("PIPELINE PROOF OK")
+""")
+    assert "PIPELINE PROOF OK" in out
+
+
 # --------------------------------------------------------- census (compile) --
 
 def test_census_catches_spurious_allgather():

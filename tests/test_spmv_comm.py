@@ -1,12 +1,15 @@
 """Sparsity-compressed (neighbor-permute) SpMV engine vs the padded a2a.
 
-Property-style checks of the ISSUE-3 engine grid {a2a, compressed} x
-{plain, overlap}:
+Property-style checks of the engine grid {a2a, compressed} x
+{plain, overlap} x {kernel off, kernel on}:
 
-  * all four engines agree on every layout (stack/panel/pillar), for a
+  * all eight engines agree on every layout (stack/panel/pillar), for a
     structured pattern (SpinChainXXZ) and a comm-imbalanced one
     (RoadNet) — compressed is bit-identical to its a2a counterpart
-    because the halo re-base never re-sorts ELL slots,
+    because the halo re-base never re-sorts ELL slots, and kernel-on is
+    bit-identical to kernel-off because the Pallas tile kernel
+    accumulates in the same slot order (the schedule axis completes the
+    twelve-engine grid in ``test_spmv_schedule.py``),
   * the compressed engine's HLO-measured collective-permute bytes equal
     the pattern-only ``comm_plan`` prediction exactly and never exceed
     the padded all_to_all volume — strictly less on RoadNet, by at least
@@ -33,9 +36,10 @@ ROADNET_SMALL = dict(n=4000, w=2, m=256, k=4)
 
 
 def test_all_engines_agree_all_layouts():
-    """a2a, compressed, and both overlap variants agree on stack, panel,
-    and pillar, for a structured and an imbalanced pattern; the compressed
-    engines are bit-identical to their a2a counterparts."""
+    """a2a, compressed, both overlap variants, and their kernelized
+    counterparts agree on stack, panel, and pillar, for a structured and
+    an imbalanced pattern; the compressed engines are bit-identical to
+    their a2a counterparts and kernel-on to kernel-off."""
     out = run_distributed("""
 import numpy as np, jax, jax.numpy as jnp
 from repro.matrices import RoadNet, SpinChainXXZ
@@ -55,16 +59,25 @@ for mat in (SpinChainXXZ(10, 5), RoadNet(n=4000, w=2, m=256, k=4)):
         X = np.zeros((D_pad, 8)); X[:D] = rng.standard_normal((D, 8))
         with mesh:
             Xs = jax.device_put(jnp.asarray(X), lay.vec_sharding(mesh))
-            Y = {(c, o): np.asarray(make_spmv(mesh, lay, ell, comm=c,
-                                              overlap=o)(Xs))
-                 for c in ("a2a", "compressed") for o in (False, True)}
+            Y = {(c, o, k): np.asarray(make_spmv(mesh, lay, ell, comm=c,
+                                                 overlap=o,
+                                                 use_kernel=k)(Xs))
+                 for c in ("a2a", "compressed") for o in (False, True)
+                 for k in (False, True)}
         ref = csr.matvec(X[:D])
-        assert np.abs(Y[("a2a", False)][:D] - ref).max() < 1e-11
+        assert np.abs(Y[("a2a", False, False)][:D] - ref).max() < 1e-11
         # compressed == a2a bit-for-bit (same slot-order accumulation)
-        assert np.array_equal(Y[("compressed", False)], Y[("a2a", False)])
-        assert np.array_equal(Y[("compressed", True)], Y[("a2a", True)])
+        # and kernel-on == kernel-off (the tile kernel accumulates in
+        # the identical slot order)
+        base = Y[("a2a", False, False)]
+        ov = Y[("a2a", True, False)]
+        for k in (False, True):
+            assert np.array_equal(Y[("compressed", False, k)], base), k
+            assert np.array_equal(Y[("compressed", True, k)], ov), k
+            assert np.array_equal(Y[("a2a", False, k)], base), k
+            assert np.array_equal(Y[("a2a", True, k)], ov), k
         # split-phase vs combined: same order, same sums
-        assert np.abs(Y[("a2a", True)] - Y[("a2a", False)]).max() < 1e-11
+        assert np.abs(ov - base).max() < 1e-11
         print(f"{mat.name} {lay.name} ok")
     # fused Chebyshev step: all four engines vs the composed baseline
     lay = panel(mesh)

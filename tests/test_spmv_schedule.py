@@ -13,9 +13,15 @@ Property-style checks of the scheduler axis ``schedule={"cyclic",
     equal the pattern-only ``SpmvCommPlan`` prediction exactly for BOTH
     schedules, and ``--layout auto`` (the planner) picks the matching
     schedule,
-  * all six engine combinations {a2a, compressed-cyclic,
-    compressed-matching} x {plain, overlap} agree bit-for-bit on stack,
-    panel, and pillar for SpinChainXXZ, RoadNet, and HubNet,
+  * all twelve engine combinations {a2a, compressed-cyclic,
+    compressed-matching} x {plain, overlap} x {kernel off, kernel on}
+    agree bit-for-bit on stack, panel, and pillar for SpinChainXXZ,
+    RoadNet, and HubNet (kernel-on runs the Pallas tile kernel in
+    interpret mode on CPU), including on planned commvol/rcm RowMaps,
+  * the round-pipelined compressed overlap body (``pipeline=True``, the
+    default) is bit-identical to the unpipelined control
+    (``pipeline=False``) — per-row accumulation order is pinned to the
+    ELL slot order regardless of how the halo rounds are grouped,
   * ``perf_model.schedule_comm_time`` (the round-sum cost
     T_comm = Σ_r L_r·S_d/b_c) equals the Eq. 12 comm term at the
     engine's effective χ — the two views of the schedule cost cannot
@@ -190,11 +196,11 @@ def test_schedule_comm_time_equals_chi_path():
             assert t_round == pytest.approx(t_chi, rel=1e-12)
 
 
-def test_six_engines_bit_identical_all_layouts():
+def test_twelve_engines_bit_identical_all_layouts():
     """{a2a, compressed-cyclic, compressed-matching} x {plain, overlap}
-    produce bit-for-bit identical SpMV results on stack, panel, and
-    pillar for SpinChainXXZ, RoadNet, and HubNet; the fused Chebyshev
-    step agrees across schedules too."""
+    x {kernel off, kernel on} produce bit-for-bit identical SpMV results
+    on stack, panel, and pillar for SpinChainXXZ, RoadNet, and HubNet;
+    the fused Chebyshev step agrees across schedules too."""
     out = run_distributed(f"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.matrices import HubNet, RoadNet, SpinChainXXZ
@@ -203,10 +209,10 @@ from repro.core import (make_solver_mesh, panel, pillar, build_dist_ell,
 from repro.core.spmv import make_fused_cheb_step
 mesh = make_solver_mesh(4, 2)
 rng = np.random.default_rng(0)
-ENGINES = [(c, s, o) for c, s in (("a2a", "cyclic"),
-                                  ("compressed", "cyclic"),
-                                  ("compressed", "matching"))
-           for o in (False, True)]
+ENGINES = [(c, s, o, k) for c, s in (("a2a", "cyclic"),
+                                     ("compressed", "cyclic"),
+                                     ("compressed", "matching"))
+           for o in (False, True) for k in (False, True)]
 for mat in (SpinChainXXZ(10, 5), RoadNet(**{ROADNET_SMALL!r}),
             HubNet(**{HUBNET_SMALL!r})):
     csr = mat.build_csr()
@@ -221,9 +227,10 @@ for mat in (SpinChainXXZ(10, 5), RoadNet(**{ROADNET_SMALL!r}),
             Xs = jax.device_put(jnp.asarray(X), lay.vec_sharding(mesh))
             Y = {{eng: np.asarray(make_spmv(mesh, lay, ell, comm=eng[0],
                                             schedule=eng[1],
-                                            overlap=eng[2])(Xs))
+                                            overlap=eng[2],
+                                            use_kernel=eng[3])(Xs))
                  for eng in ENGINES}}
-        ref = Y[("a2a", "cyclic", False)]
+        ref = Y[("a2a", "cyclic", False, False)]
         assert np.abs(ref[:D] - csr.matvec(X[:D])).max() < 1e-11
         for eng, got in Y.items():
             assert np.array_equal(got, ref), (mat.name, lay.name, eng)
@@ -239,22 +246,26 @@ for mat in (SpinChainXXZ(10, 5), RoadNet(**{ROADNET_SMALL!r}),
         w2 = jax.device_put(jnp.asarray(W2), sh)
         F = {{eng: np.asarray(make_fused_cheb_step(
                  mesh, lay, ell, comm=eng[0], schedule=eng[1],
-                 overlap=eng[2])(w1, w2, 0.7, -0.2)) for eng in ENGINES}}
+                 overlap=eng[2], use_kernel=eng[3])(w1, w2, 0.7, -0.2))
+             for eng in ENGINES}}
         for o in (False, True):
-            ref = F[("a2a", "cyclic", o)]
+            ref = F[("a2a", "cyclic", o, False)]
             for s in ("cyclic", "matching"):
-                assert np.array_equal(F[("compressed", s, o)], ref), (s, o)
-        assert np.abs(F[("a2a", "cyclic", True)]
-                      - F[("a2a", "cyclic", False)]).max() < 1e-12
+                for k in (False, True):
+                    assert np.array_equal(F[("compressed", s, o, k)],
+                                          ref), (s, o, k)
+            assert np.array_equal(F[("a2a", "cyclic", o, True)], ref), o
+        assert np.abs(F[("a2a", "cyclic", True, False)]
+                      - F[("a2a", "cyclic", False, False)]).max() < 1e-12
     print(f"{{mat.name}} fused ok")
-print("SIX ENGINE GRID OK")
+print("TWELVE ENGINE GRID OK")
 """, timeout=1500)
-    assert "SIX ENGINE GRID OK" in out
+    assert "TWELVE ENGINE GRID OK" in out
 
 
-def test_six_engines_bit_identical_on_planned_partitions():
-    """ISSUE-5 satellite: the six-engine grid stays bit-for-bit
-    identical on planned (commvol / rcm) partitions of the
+def test_twelve_engines_bit_identical_on_planned_partitions():
+    """The twelve-engine grid (incl. the kernelized engines) stays
+    bit-for-bit identical on planned (commvol / rcm) partitions of the
     hub-and-spoke family, and the HLO permute bytes still equal the
     pattern-only prediction of the planned map for both schedulers."""
     from repro.core.partition import plan_rowmap
@@ -280,10 +291,10 @@ lay = panel(mesh)
 rng = np.random.default_rng(0)
 X0 = rng.standard_normal((hub.D, 8))
 ref = csr.matvec(X0)
-ENGINES = [(c, s, o) for c, s in (("a2a", "cyclic"),
-                                  ("compressed", "cyclic"),
-                                  ("compressed", "matching"))
-           for o in (False, True)]
+ENGINES = [(c, s, o, k) for c, s in (("a2a", "cyclic"),
+                                     ("compressed", "cyclic"),
+                                     ("compressed", "matching"))
+           for o in (False, True) for k in (False, True)]
 for ro in ("rcm",):
     rm = plan_rowmap(hub, 4, balance="commvol", reorder=ro)
     ell = build_dist_ell(csr, 4, rowmap=rm, split_halo=True)
@@ -292,23 +303,108 @@ for ro in ("rcm",):
         sh = lay.vec_sharding(mesh)
         Xs = jax.device_put(jnp.asarray(Xp), sh)
         Y = {{}}
-        for c, s, o in ENGINES:
+        for c, s, o, k in ENGINES:
             f = jax.jit(make_spmv(mesh, lay, ell, comm=c, schedule=s,
-                                  overlap=o))
+                                  overlap=o, use_kernel=k))
             comp = f.lower(Xs).compile()
             h = analyze_hlo(comp.as_text())
             if c == "compressed" and not o:
+                # the kernelized engine emits the identical exchange
                 assert int(h.coll_breakdown["collective-permute"]) \
-                    == preds[ro][s], (ro, s, h.coll_breakdown)
-            Y[(c, s, o)] = np.asarray(f(Xs))
-    base = Y[("a2a", "cyclic", False)]
+                    == preds[ro][s], (ro, s, k, h.coll_breakdown)
+            Y[(c, s, o, k)] = np.asarray(f(Xs))
+    base = Y[("a2a", "cyclic", False, False)]
     assert np.abs(rm.extract(base) - ref).max() < 1e-11, ro
-    for k, y in Y.items():
-        assert np.array_equal(y, base), (ro, k)
+    for key, y in Y.items():
+        assert np.array_equal(y, base), (ro, key)
     print(f"planned {{ro}} ok")
-print("SIX ENGINES PLANNED OK")
+print("TWELVE ENGINES PLANNED OK")
 """, timeout=1500)
-    assert "SIX ENGINES PLANNED OK" in out
+    assert "TWELVE ENGINES PLANNED OK" in out
+
+
+def test_pipeline_matches_unpipelined_accumulation_order():
+    """The round-pipelined compressed overlap body (the default,
+    ``pipeline=True``) is bit-identical to the unpipelined control body
+    (``pipeline=False``) for both schedulers, kernel off and on — the
+    per-row addition chain is pinned to the ELL slot order no matter how
+    the halo rows are grouped into round sub-blocks. Also asserts the
+    pipelined path is actually taken (``halo_rounds`` built, >= 2
+    rounds), so the comparison can never silently degenerate."""
+    out = run_distributed(f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.matrices import SpinChainXXZ
+from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
+mat = SpinChainXXZ(10, 5)
+csr = mat.build_csr()
+D = csr.shape[0]
+D_pad = -(-D // 8) * 8
+mesh = make_solver_mesh(4, 2)
+lay = panel(mesh)
+ell = build_dist_ell(csr, 4, d_pad=D_pad, split_halo=True)
+rng = np.random.default_rng(0)
+X = np.zeros((D_pad, 8)); X[:D] = rng.standard_normal((D, 8))
+for sched in ("cyclic", "matching"):
+    nbr = ell.neighbor_plan(split_halo=True, schedule=sched)
+    assert nbr.halo_rounds is not None, sched
+    assert len(nbr.halo_rounds) >= 2, sched
+    with mesh:
+        Xs = jax.device_put(jnp.asarray(X), lay.vec_sharding(mesh))
+        for k in (False, True):
+            y_pipe = np.asarray(make_spmv(
+                mesh, lay, ell, comm="compressed", schedule=sched,
+                overlap=True, use_kernel=k)(Xs))
+            y_flat = np.asarray(make_spmv(
+                mesh, lay, ell, comm="compressed", schedule=sched,
+                overlap=True, use_kernel=k, pipeline=False)(Xs))
+            assert np.array_equal(y_pipe, y_flat), (sched, k)
+    print(f"{{sched}} pipelined == unpipelined")
+print("PIPELINE ORDER OK")
+""")
+    assert "PIPELINE ORDER OK" in out
+
+
+def test_fused_dia_kernel_dispatch_bit_identical():
+    """On the comm-free pillar layout the kernelized fused step
+    dispatches the whole three-term recurrence to the ``cheb_dia`` DIA
+    kernel (``plan_dia`` finds a diagonal form of the SpinChain local
+    block) and stays bit-identical to the jnp fused step; the composed
+    spmv-then-axpy path agrees to roundoff."""
+    out = run_distributed(f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.matrices import SpinChainXXZ
+from repro.core import make_solver_mesh, pillar, build_dist_ell
+from repro.core.spmv import make_fused_cheb_step
+from repro.kernels import ops
+mat = SpinChainXXZ(10, 5)
+csr = mat.build_csr()
+D = csr.shape[0]
+D_pad = -(-D // 8) * 8
+mesh = make_solver_mesh(4, 2)
+lay = pillar(mesh)
+ell = build_dist_ell(csr, 1, d_pad=D_pad, split_halo=True)
+# the pillar local block really is diagonal-structured: plan_dia accepts
+dia = ops.plan_dia(ell.cols, ell.vals, ell.R)
+assert dia is not None
+assert len(dia.offsets) <= ops.DIA_MAX_DIAGS
+rng = np.random.default_rng(0)
+W1 = np.zeros((D_pad, 8)); W1[:D] = rng.standard_normal((D, 8))
+W2 = np.zeros((D_pad, 8)); W2[:D] = rng.standard_normal((D, 8))
+with mesh:
+    sh = lay.vec_sharding(mesh)
+    w1 = jax.device_put(jnp.asarray(W1), sh)
+    w2 = jax.device_put(jnp.asarray(W2), sh)
+    y_jnp = np.asarray(make_fused_cheb_step(mesh, lay, ell)(
+        w1, w2, 0.7, -0.2))
+    y_krn = np.asarray(make_fused_cheb_step(mesh, lay, ell,
+                                            use_kernel=True)(
+        w1, w2, 0.7, -0.2))
+assert np.array_equal(y_jnp, y_krn)
+ref = 2 * 0.7 * csr.matvec(W1[:D]) + 2 * (-0.2) * W1[:D] - W2[:D]
+assert np.abs(y_jnp[:D] - ref).max() < 1e-11
+print("FUSED DIA OK", len(dia.offsets), "diagonals")
+""")
+    assert "FUSED DIA OK" in out
 
 
 def test_matching_hlo_bytes_below_cyclic_on_hubnet():
