@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table5,fig4,fig5,table3,table4,"
                          "spmv_overlap,spmv_comm,spmv_schedule,partition,"
-                         "kernels,planner,roofline")
+                         "kernels,sstep,planner,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable perf artifact (e.g. "
                          "BENCH_spmv.json): per family x engine predicted "
@@ -44,6 +44,7 @@ def main() -> None:
         "spmv_schedule": tables.spmv_schedule,
         "partition": tables.partition_table,
         "kernels": tables.kernels_table,
+        "sstep": tables.sstep_table,
         "planner": tables.planner_table,
         "roofline": tables.roofline_table,
     }

@@ -21,7 +21,7 @@ SCHEMA = "bench-spmv/v1"
 TABLES = frozenset({
     "table1", "table2", "table3", "table4", "table5", "fig4", "fig5",
     "spmv_overlap", "spmv_comm", "spmv_schedule", "partition", "planner",
-    "roofline", "kernels",
+    "roofline", "kernels", "sstep",
 })
 
 #: engine-axis enums as the tables print them
@@ -34,6 +34,9 @@ REORDER_VALUES = frozenset({"none", "rcm"})
 #: Pallas kernels with the round-pipelined halo contraction (the
 #: ``--spmv-kernel`` default)
 KERNEL_VALUES = frozenset({"off", "on", "pipelined"})
+#: the s-step axis as the sstep table records it: ghost-zone depth of
+#: the communication-avoiding filter (1 = the classic per-SpMV halo)
+SSTEP_VALUES = frozenset({1, 2, 3})
 
 _NUMERIC_NONNEG = ("pred_bytes_per_device", "meas_bytes_per_device",
                    "us_per_call", "rounds", "plan_us", "t_pass_s")
@@ -67,6 +70,14 @@ def validate_record(rec, where: str = "record") -> list[str]:
     if "kernel" in rec and rec["kernel"] not in KERNEL_VALUES:
         errors.append(f"{where}: kernel {rec['kernel']!r} not in "
                       f"{sorted(KERNEL_VALUES)}")
+    if "s" in rec:
+        s = rec["s"]
+        if not isinstance(s, int) or isinstance(s, bool) or s < 0:
+            errors.append(f"{where}: s must be a nonnegative integer, "
+                          f"got {s!r}")
+        elif s not in SSTEP_VALUES:
+            errors.append(f"{where}: s = {s} not in "
+                          f"{sorted(SSTEP_VALUES)}")
     for key in _NUMERIC_NONNEG:
         if key in rec:
             v = rec[key]

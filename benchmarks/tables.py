@@ -709,6 +709,154 @@ def kernels_table():
     return rows
 
 
+#: S-step-axis bench script: the full degree-8 Chebyshev filter at ghost
+#: depths s = 1, 2, 3 on the plain panel engine. The s = 1 reference is
+#: the classic per-SpMV halo path (``chebyshev_filter``); s > 1 runs the
+#: communication-avoiding grouped applier (``make_sstep_cheb``). All
+#: depths must be bit-identical; the collective census of each compiled
+#: filter (exact while-loop multiplicities) is printed for the host-side
+#: byte check.
+_SSTEP_BENCH_SCRIPT = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+jax.config.update('jax_enable_x64', True)
+from repro.matrices import HubNet, RoadNet, SpinChainXXZ
+from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
+from repro.core.spmv import build_sstep_ell, make_sstep_cheb
+from repro.core.chebyshev import chebyshev_filter
+from repro.launch.hlo_analysis import collective_census
+mat = {family}
+comm, sched, degree = {comm!r}, {sched!r}, {degree}
+csr = mat.build_csr()
+D = csr.shape[0]
+mesh = make_solver_mesh(4, 2)
+lay = panel(mesh)
+D_pad = -(-D // 8) * 8
+rng = np.random.default_rng(0)
+X = np.zeros((D_pad, 8)); X[:D] = rng.standard_normal((D, 8))
+mu = np.linspace(1.0, 0.5, degree + 1)
+ys = {{}}
+with mesh:
+    Xs = jax.device_put(jnp.asarray(X), lay.vec_sharding(mesh))
+    for s in (1, 2, 3):
+        if s == 1:
+            ell = build_dist_ell(csr, 4, d_pad=D_pad)
+            spmv = make_spmv(mesh, lay, ell, comm=comm, schedule=sched)
+            f = jax.jit(lambda V: chebyshev_filter(spmv, mu, 0.5, 0.1, V))
+        else:
+            sell = build_sstep_ell(csr, 4, s, d_pad=D_pad)
+            app = make_sstep_cheb(mesh, lay, sell, comm=comm,
+                                  schedule=sched)
+            f = jax.jit(lambda V: app(V, mu, 0.5, 0.1))
+        c = f.lower(Xs).compile()
+        meas = sum(int(op.bytes * op.mult) for op in
+                   collective_census(c.as_text())
+                   if op.kind in ("all-to-all", "collective-permute"))
+        y = f(Xs); jax.block_until_ready(y)
+        n = 10
+        t0 = time.perf_counter()
+        for _ in range(n):
+            y = f(Xs)
+        jax.block_until_ready(y)
+        ys[s] = np.asarray(y)
+        print(f"ROW {{s}} {{(time.perf_counter() - t0) / n * 1e6:.1f}} {{meas}}")
+for s in (2, 3):
+    assert np.array_equal(ys[s], ys[1]), s
+print("SSTEP AGREE OK")
+"""
+
+
+def sstep_table():
+    """§S-step axis: the communication-avoiding depth-s filter (s = 1, 2,
+    3) on the plain panel engine, per family and comm engine.
+
+    For each cell the table shows the pattern-predicted per-device filter
+    exchange bytes (s = 1: ``degree`` per-SpMV halo exchanges; s > 1: the
+    whole-filter ``SpmvCommPlan.sstep_collectives`` terms — one
+    single-width seed exchange plus ``ceil(degree/s) - 1`` width-doubled
+    group exchanges), the census-measured bytes of the compiled filter
+    (must match exactly), the exchange count, the redundant-work factor,
+    and the measured µs/call on 8 fake CPU devices (correctness+overhead
+    check — on CPU the round-latency term the s-step engine buys back is
+    negligible; the byte/round columns are the hardware story). The
+    subprocess asserts all depths bit-identical (``np.array_equal``).
+    Every row lands in :data:`RECORDS` with the ``s`` field of
+    ``schema.SSTEP_VALUES`` for the ``run.py --json`` artifact."""
+    import subprocess
+    import sys
+
+    rows = []
+    degree = 8
+    fams = [("spinchain", "SpinChainXXZ(12, 6)"),
+            ("hubnet", "HubNet(n=4000, w=2, h=4, m=192, k=4)")]
+    engines = [("a2a", "a2a", "cyclic"),
+               ("cmp", "compressed", "matching")]
+    print("\n=== S-step filter axis (8 fake devices, panel 4x2, "
+          f"degree {degree}) ===")
+    print(f"{'family':10s} {'engine':7s} {'s':>2s} {'exchanges':>9s} "
+          f"{'pred B/dev':>11s} {'meas B/dev':>11s} {'work':>6s} "
+          f"{'us/call':>9s}")
+    from repro.core.planner import comm_plan
+    from repro.matrices import HubNet, SpinChainXXZ
+
+    ctors = {"HubNet": HubNet, "SpinChainXXZ": SpinChainXXZ}
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    env.pop("XLA_FLAGS", None)
+    n_b, S_d = 8 // 2, 8
+    for label, ctor in fams:
+        mat = eval(ctor, {"__builtins__": {}}, ctors)
+        D_pad = -(-mat.D // 8) * 8
+        for eng, comm, sched in engines:
+            pred, n_ex, wf = {}, {}, {}
+            for s in (1, 2, 3):
+                cp = comm_plan(mat, 4, d_pad=D_pad, sstep=s) if s > 1 \
+                    else comm_plan(mat, 4, d_pad=D_pad, exact=True)
+                if s == 1:
+                    pred[s] = degree * cp.comm_bytes_per_device(
+                        comm, n_b, S_d, sched)
+                    n_ex[s] = degree
+                else:
+                    pred[s] = sum(b * c for _, b, c in cp.sstep_collectives(
+                        comm, sched, n_b, S_d, degree))
+                    n_ex[s] = cp.n_groups(degree)
+                wf[s] = cp.sstep_work_factor()
+            script = _SSTEP_BENCH_SCRIPT.format(family=ctor, comm=comm,
+                                                sched=sched, degree=degree)
+            r = subprocess.run([sys.executable, "-c", script], env=env,
+                               capture_output=True, text=True, timeout=900)
+            if r.returncode != 0:
+                print(f"sstep subprocess failed for {label}/{eng}:\n"
+                      f"{r.stderr[-1500:]}")
+                rows.append((f"sstep_{label}_{eng}", 0.0, "status=fail"))
+                continue
+            assert "SSTEP AGREE OK" in r.stdout
+            for line in r.stdout.splitlines():
+                if not line.startswith("ROW "):
+                    continue
+                _, s, us, meas = line.split()
+                s, us, meas = int(s), float(us), int(meas)
+                assert meas == pred[s], (label, eng, s, meas, pred[s])
+                print(f"{label:10s} {eng:7s} {s:2d} {n_ex[s]:9d} "
+                      f"{pred[s]:11d} {meas:11d} {wf[s]:6.3f} {us:9.1f}")
+                rows.append((f"sstep_{label}_{eng}_s{s}", us,
+                             f"pred={pred[s]} meas={meas} "
+                             f"exchanges={n_ex[s]} work={wf[s]:.3f}"))
+                RECORDS.append(dict(
+                    table="sstep", family=label, engine=eng,
+                    schedule=sched, s=s, rounds=n_ex[s],
+                    pred_bytes_per_device=int(pred[s]),
+                    meas_bytes_per_device=meas, us_per_call=us,
+                    work_factor=wf[s]))
+            print(f"{label:10s} {eng:7s} depths bit-identical; s=3 runs "
+                  f"{n_ex[1]}->{n_ex[3]} exchanges at "
+                  f"{pred[3] / max(pred[1], 1):.2f}x the bytes")
+    return rows
+
+
 #: Partition-cell bench script: build each planned RowMap, lower the a2a
 #: and compressed-matching engines on it, HLO-parse the collective bytes,
 #: time the call, and check bit-identity + un-permuted correctness.

@@ -11,6 +11,12 @@ exactly the communication the paper's χ model predicts:
      zero-halo plans collapse to empty schedules, and SpmvCommPlan byte
      accounting is internally consistent — for SpinChain/RoadNet/HubNet
      at several shard counts x partition balances;
+  1b. **s-step plan lint** (``lint_sstep``): the depth-s ghost-zone plan
+     of the seventh engine axis covers the depth-1 halo, ``ghost_cum``
+     is monotone with its depth-1 slice equal to the classic halo, and
+     the whole-filter ``sstep_collectives`` byte totals equal
+     ``moved x (2.ceil(n/s) - 1) x n_b x S_d`` for both comm engines —
+     with the depth-1 plan rejected as the non-vacuity control;
   2. **overlap dependency check** (``repro.analysis.overlap_check``):
      the jaxpr of every split-phase engine — kernel off AND kernel on —
      shows its halo collective has no data dependence on the local
@@ -31,7 +37,10 @@ exactly the communication the paper's χ model predicts:
      compiled (``.lower().compile()`` only) on a fake-CPU mesh and every
      collective in the optimized HLO is attributed to a predicted term —
      zero unattributed, zero missing; kernelized cells (``+krn``) are
-     attributed against the *same* terms as the jnp cells;
+     attributed against the *same* terms as the jnp cells; s-step cells
+     (``+s2``/``+s3``) are attributed against the grouped
+     ``sstep_collectives`` terms (one single-width seed exchange plus
+     width-doubled exchanges for the remaining groups);
   4. **bench artifact schema** (``benchmarks/schema.py``): the merged
      ``BENCH_spmv.json`` trajectory validates, if present;
   5. **linters**: ``ruff`` / ``mypy`` over ``src/repro/core`` +
@@ -110,6 +119,50 @@ def check_plan_invariants(fast: bool = False) -> list[str]:
         print(f"[check_comm] plan-lint {name}: "
               f"{'OK' if not errs else f'{len(errs)} error(s)'}")
         errors += [f"plan-lint: {e}" for e in errs]
+    return errors
+
+
+def check_sstep_plans(fast: bool = False) -> list[str]:
+    """Section 1b: depth-s ghost-zone plan lint (the seventh engine axis).
+
+    For each family the depth-1 and depth-s plans of the SAME partition
+    are cross-checked by :func:`repro.analysis.plan_lint.lint_sstep`:
+    ghost coverage (the depth-s set contains the halo, ``ghost_cum``
+    monotone with the depth-1 slice matching the classic plan) and byte
+    accounting (``sstep_collectives`` totals equal
+    ``moved x (2.ceil(n/s) - 1) x n_b x S_d`` for both comm engines).
+    """
+    import warnings
+
+    from repro.analysis.plan_lint import lint_comm_plan, lint_sstep
+    from repro.core.partition import plan_rowmap
+    from repro.core.planner import comm_plan
+
+    errors: list[str] = []
+    depths = (2,) if fast else (2, 3)
+    for name, matrix in _families(fast):
+        for P in ((4,) if fast else (4, 8)):
+            cp1 = comm_plan(matrix, P, exact=True)
+            for s in depths:
+                cell = f"{name}/P{P}+s{s}"
+                cps = comm_plan(matrix, P, sstep=s)
+                errs = lint_sstep(cp1, cps, label=cell)
+                errs += lint_comm_plan(cps, label=cell)
+                # planned-partition variant: the rowmap is planned at
+                # depth s, so no stale-depth warning may fire
+                rm = plan_rowmap(matrix, P, balance="commvol", sstep=s)
+                with warnings.catch_warnings():
+                    warnings.simplefilter("error", UserWarning)
+                    cps_m = comm_plan(matrix, P, rowmap=rm, sstep=s)
+                cp1_m = comm_plan(matrix, P, rowmap=rm)
+                errs += lint_sstep(cp1_m, cps_m, label=cell + "+cv")
+                # non-vacuity: a depth-1 plan must be rejected outright
+                if not lint_sstep(cp1, cp1, label=cell):
+                    errs.append(f"[{cell}] lint_sstep accepted a depth-1 "
+                                f"plan — the linter is vacuous")
+                print(f"[check_comm] sstep-lint {cell}: "
+                      f"{'OK' if not errs else f'{len(errs)} error(s)'}")
+                errors += [f"sstep-lint: {e}" for e in errs]
     return errors
 
 
@@ -282,32 +335,45 @@ def check_census(fast: bool = False, families=("spinchain",)) -> list[str]:
             "roadnet": ("RoadNet-small", RoadNet(**ROADNET_SMALL)),
             "hubnet": ("HubNet-small", HubNet(**HUBNET_SMALL))}
     if fast:
-        grid = [("panel", "a2a", "cyclic", False, "rows", "none", False),
+        grid = [("panel", "a2a", "cyclic", False, "rows", "none", False, 1),
                 ("panel", "compressed", "matching", True, "commvol", "rcm",
-                 False),
+                 False, 1),
                 # kernel-parity cell: the kernelized engine (Pallas
                 # interpret mode) must attribute to the same terms
                 ("panel", "compressed", "matching", True, "rows", "none",
-                 True)]
+                 True, 1),
+                # seventh-axis cell: the s=2 engine's sstep_collectives
+                # terms must attribute the grouped (single + doubled-width)
+                # exchanges exactly
+                ("panel", "a2a", "cyclic", False, "rows", "none", False, 2)]
         families = ("spinchain",)
     else:
         # the panel/rows column runs the full twelve-engine grid
         # (6 combos x kernel off/on); the other columns stay kernel-off
-        grid = [(layout, comm, schedule, overlap, balance, "none", uk)
+        grid = [(layout, comm, schedule, overlap, balance, "none", uk, 1)
                 for layout in ("stack", "panel", "pillar")
                 for comm, schedule, overlap in ENGINE_COMBOS
                 for balance in ("rows", "commvol")
                 for uk in ((False, True)
                            if layout == "panel" and balance == "rows"
                            else (False,))]
+        # s-step column: both comm engines at s=2 plus one s=3 cell,
+        # plain panel (the depth-s engine lowers the plain path)
+        grid += [("panel", "a2a", "cyclic", False, "rows", "none", False, 2),
+                 ("panel", "compressed", "matching", False, "rows", "none",
+                  False, 2),
+                 ("panel", "compressed", "cyclic", False, "commvol", "none",
+                  False, 3)]
     errors: list[str] = []
     for fam in families:
         name, matrix = mats[fam]
-        for layout, comm, schedule, overlap, balance, reorder, uk in grid:
+        for (layout, comm, schedule, overlap, balance, reorder, uk,
+             sstep) in grid:
             rep = run_census_cell(matrix, P_total=8, layout=layout,
                                   comm=comm, schedule=schedule,
                                   overlap=overlap, use_kernel=uk,
-                                  balance=balance, reorder=reorder)
+                                  balance=balance, reorder=reorder,
+                                  sstep=sstep)
             print(f"[check_comm] census {name} {rep.cell}: "
                   f"{'OK' if rep.ok else f'{len(rep.errors)} error(s)'}")
             if not rep.ok:
@@ -401,6 +467,7 @@ def check_linters() -> list[str]:
 def run_all(fast: bool = False, census: bool = True,
             families=("spinchain",)) -> list[str]:
     errors = check_plan_invariants(fast)
+    errors += check_sstep_plans(fast)
     errors += check_overlap(fast)
     errors += check_pipeline(fast)
     errors += check_kernel_parity(fast)
@@ -415,8 +482,9 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fast", action="store_true",
                     help="small subset (the tier-1 pre-commit loop): "
-                         "SpinChain-only lint, all overlap checks, two "
-                         "census cells")
+                         "SpinChain-only lint (incl. one s=2 s-step "
+                         "plan cell), all overlap checks, four census "
+                         "cells (incl. one +s2)")
     ap.add_argument("--no-census", action="store_true",
                     help="skip the compile-only census section")
     ap.add_argument("--family", action="append", default=None,

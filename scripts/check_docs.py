@@ -51,11 +51,12 @@ CLI_SOURCES = {
 REQUIRED_FLAGS = {
     "repro.launch.solve": ["--layout", "--spmv-overlap", "--spmv-comm",
                            "--spmv-schedule", "--spmv-balance",
-                           "--spmv-reorder", "--spmv-kernel", "--machine"],
+                           "--spmv-reorder", "--spmv-kernel",
+                           "--spmv-sstep", "--machine"],
     "repro.launch.dryrun": ["--layout", "--plan", "--spmv-comm",
                             "--spmv-schedule", "--spmv-balance",
                             "--spmv-reorder", "--spmv-kernel",
-                            "--fit-machine", "--verify"],
+                            "--spmv-sstep", "--fit-machine", "--verify"],
     "benchmarks.run": ["--only", "--json"],
 }
 
@@ -64,7 +65,7 @@ REQUIRED_FLAGS = {
 #: silently drop out of the navigation.
 REQUIRED_DOCS = ("docs/comm-engines.md", "docs/planner.md",
                  "docs/partitioning.md", "docs/analysis.md",
-                 "docs/kernels.md")
+                 "docs/kernels.md", "docs/s-step.md")
 
 #: CLIs whose *every* declared flag must be documented in README/docs
 #: (check 5). benchmarks.run is covered by REQUIRED_FLAGS only.

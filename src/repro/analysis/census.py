@@ -131,12 +131,24 @@ def expected_census(cp, *, comm: str, schedule: str, degree: int, n_b: int,
                     D_pad: int) -> list:
     """Predicted terms of one FD macro-iteration: the halo exchange of
     ``degree`` SpMV applications plus the layout-level collectives.
-    ``n_b`` is the filter layout's local bundle width (n_s / N_col)."""
+    ``n_b`` is the filter layout's local bundle width (n_s / N_col).
+
+    A depth-s plan (``cp.sstep > 1``) swaps the per-SpMV halo term for
+    the χ(A^s) exchange terms of :meth:`SpmvCommPlan.sstep_collectives`
+    — one single-width seed exchange plus ``⌈degree/s⌉ - 1``
+    width-doubled group exchanges, already whole-filter counts."""
     terms = []
-    for kind, b, cnt in cp.spmv_collectives(comm, schedule, n_b, S_d):
-        terms.append(ExpectedTerm(
-            label=f"halo-exchange[{comm}/{schedule}]", kind=kind, bytes=b,
-            count=cnt * degree))
+    if getattr(cp, "sstep", 1) > 1:
+        for k, (kind, b, cnt) in enumerate(cp.sstep_collectives(
+                comm, schedule, n_b, S_d, degree)):
+            terms.append(ExpectedTerm(
+                label=f"sstep-exchange[{comm}/{schedule}#{k}]",
+                kind=kind, bytes=b, count=cnt))
+    else:
+        for kind, b, cnt in cp.spmv_collectives(comm, schedule, n_b, S_d):
+            terms.append(ExpectedTerm(
+                label=f"halo-exchange[{comm}/{schedule}]", kind=kind,
+                bytes=b, count=cnt * degree))
     if P_total > 1:
         levels = int(math.log2(P_total))
         terms.append(ExpectedTerm("tsqr-butterfly", "collective-permute",
@@ -156,6 +168,7 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
                     comm: str = "a2a", schedule: str = "cyclic",
                     overlap: bool = False, use_kernel: bool = False,
                     balance: str = "rows", reorder: str = "none",
+                    sstep: int = 1,
                     n_s: int = 8, degree: int = 6,
                     dtype=None, wrap=None) -> CensusReport:
     """Compile one engine cell on a fake-CPU mesh of ``P_total`` devices
@@ -173,7 +186,12 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
     CPU); the predicted terms are *identical* to the jnp cell's — the
     kernels only replace the local contraction, never the exchange — so
     the census holds the kernelized engines to exactly the same
-    collective attribution (the cell tag gains ``+krn``). ``wrap`` is
+    collective attribution (the cell tag gains ``+krn``). ``sstep > 1``
+    lowers the communication-avoiding s-step filter cell
+    (``build_sstep_ell`` + ``make_sstep_cheb``, the ``+s2``/``+s3``
+    tags): the filter then runs ⌈degree/s⌉ depth-s ghost exchanges and
+    the census attributes every one to the χ(A^s) terms of
+    ``SpmvCommPlan.sstep_collectives``. ``wrap`` is
     the planted-defect seam
     used by the negative tests: ``wrap(iteration, mesh, stack_layout)``
     may return a mutated iteration whose extra collectives the census
@@ -188,7 +206,8 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
     from ..core.partition import plan_rowmap
     from ..core.planner import comm_plan, layout_on_mesh
     from ..core.redistribute import make_redistribute
-    from ..core.spmv import build_dist_ell, make_spmv
+    from ..core.spmv import (build_dist_ell, build_sstep_ell, make_spmv,
+                             make_sstep_cheb)
     from ..launch.hlo_analysis import collective_census
 
     if len(jax.devices()) < P_total:
@@ -215,12 +234,15 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
     n_s = -(-n_s // max(N_col, 1)) * max(N_col, 1)
     n_b = n_s // max(N_col, 1)
 
+    sstep = int(sstep)
+    if sstep < 1:
+        raise ValueError(f"sstep must be >= 1 (got {sstep})")
     extra_errors = []
     rowmap = None
     if (balance, reorder) != ("rows", "none"):
         if N_row > 1:
             rowmap = plan_rowmap(matrix, N_row, balance=balance,
-                                 reorder=reorder,
+                                 reorder=reorder, sstep=sstep,
                                  block_multiple=P_total // N_row)
             if rowmap.identity:
                 rowmap = None  # planned map degenerated to equal rows
@@ -230,24 +252,45 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
     D_pad = rowmap.D_pad if rowmap is not None \
         else -(-D // P_total) * P_total
 
-    ell = build_dist_ell(matrix, N_row, dtype=dtype, d_pad=D_pad,
-                         split_halo=overlap, rowmap=rowmap)
-    if rowmap is not None:
-        cp = comm_plan(matrix, N_row, rowmap=rowmap)
+    if sstep > 1:
+        # depth-s cell: the real SstepEll (one exchange per s recurrence
+        # steps) and the pattern-only depth-s plan it must agree with
+        sell = build_sstep_ell(matrix, N_row, sstep, dtype=dtype,
+                               d_pad=D_pad, rowmap=rowmap)
+        if rowmap is not None:
+            cp = comm_plan(matrix, N_row, rowmap=rowmap, sstep=sstep)
+        else:
+            cp = comm_plan(matrix, N_row, d_pad=D_pad, sstep=sstep)
+        if cp.L != sell.L:
+            extra_errors.append(f"depth-{sstep} comm_plan L = {cp.L} != "
+                                f"engine L = {sell.L}")
+        if (cp.pair_counts is not None and sell.pair_counts is not None
+                and not np.array_equal(cp.pair_counts, sell.pair_counts)):
+            extra_errors.append(f"depth-{sstep} comm_plan pair_counts "
+                                f"diverge from the built operator's")
+        cheb_apply = make_sstep_cheb(mesh, panel_l, sell,
+                                     use_kernel=use_kernel,
+                                     overlap=overlap, comm=comm,
+                                     schedule=schedule)
     else:
-        cp = comm_plan(matrix, N_row, d_pad=D_pad, exact=True)
-    # static plan vs built engine: the census prediction below comes from
-    # the pattern-only comm_plan, so it only proves anything if the plan
-    # and the operator agree on the volumes
-    if cp.L != ell.L:
-        extra_errors.append(f"comm_plan L = {cp.L} != engine L = {ell.L}")
-    if (cp.pair_counts is not None and ell.pair_counts is not None
-            and not np.array_equal(cp.pair_counts, ell.pair_counts)):
-        extra_errors.append("comm_plan pair_counts diverge from the built "
-                            "operator's pair_counts")
-
-    spmv = make_spmv(mesh, panel_l, ell, use_kernel=use_kernel,
-                     overlap=overlap, comm=comm, schedule=schedule)
+        ell = build_dist_ell(matrix, N_row, dtype=dtype, d_pad=D_pad,
+                             split_halo=overlap, rowmap=rowmap)
+        if rowmap is not None:
+            cp = comm_plan(matrix, N_row, rowmap=rowmap)
+        else:
+            cp = comm_plan(matrix, N_row, d_pad=D_pad, exact=True)
+        # static plan vs built engine: the census prediction below comes
+        # from the pattern-only comm_plan, so it only proves anything if
+        # the plan and the operator agree on the volumes
+        if cp.L != ell.L:
+            extra_errors.append(f"comm_plan L = {cp.L} != engine L = "
+                                f"{ell.L}")
+        if (cp.pair_counts is not None and ell.pair_counts is not None
+                and not np.array_equal(cp.pair_counts, ell.pair_counts)):
+            extra_errors.append("comm_plan pair_counts diverge from the "
+                                "built operator's pair_counts")
+        spmv = make_spmv(mesh, panel_l, ell, use_kernel=use_kernel,
+                         overlap=overlap, comm=comm, schedule=schedule)
     tsqr = make_tsqr(mesh, stack_l)
     to_panel, to_stack = make_redistribute(mesh, stack_l, panel_l)
     gram = make_gram(mesh, stack_l)
@@ -256,7 +299,10 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
     def iteration(V):
         Q, _ = tsqr(V)
         Vp = to_panel(Q)
-        W = chebyshev_filter(spmv, mu, 0.5, 0.1, Vp)
+        if sstep > 1:
+            W = cheb_apply(Vp, mu, 0.5, 0.1)
+        else:
+            W = chebyshev_filter(spmv, mu, 0.5, 0.1, Vp)
         Vs = to_stack(W)
         return Vs, gram(Vs, Vs)
 
@@ -274,6 +320,7 @@ def run_census_cell(matrix, *, P_total: int, layout: str = "panel",
                                P_total=P_total, n_col=N_col, D_pad=D_pad)
     cell = (f"{layout}/{comm}-{schedule}{'+ov' if overlap else ''}"
             f"{'+krn' if use_kernel else ''}"
+            f"{f'+s{sstep}' if sstep > 1 else ''}"
             f"/{balance}+{reorder}/P{P_total}")
     return attribute(measured, expected, cell=cell,
                      extra_errors=[f"[{cell}] {e}" for e in extra_errors])

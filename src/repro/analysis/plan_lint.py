@@ -27,7 +27,8 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["lint_rounds", "lint_schedules", "lint_rowmap",
-           "lint_comm_plan", "lint_dist_ell", "run_plan_lint"]
+           "lint_comm_plan", "lint_dist_ell", "lint_sstep",
+           "run_plan_lint"]
 
 
 def lint_rounds(pair_counts, perms, round_L, label: str = "") -> list[str]:
@@ -258,6 +259,92 @@ def lint_dist_ell(ell, label: str = "") -> list[str]:
         if len(set(pairs)) != len(pairs):
             errors.append(f"{tag}{sched} schedule repeats a (src, dst) "
                           f"pair across rounds")
+    return errors
+
+
+def lint_sstep(cp1, cps, label: str = "", n_b: int = 3, S_d: int = 8,
+               degree: int = 8) -> list[str]:
+    """Depth-s ghost-zone plan invariants against the depth-1 plan.
+
+    ``cp1`` is the classic per-SpMV halo plan, ``cps`` the depth-s plan
+    of the SAME matrix on the SAME partition. Two families of checks:
+
+    * **ghost coverage** — the depth-s ghost set contains the depth-1
+      halo (``n_vc_s >= n_vc_1`` and ``pair_counts_s >= pair_counts_1``
+      elementwise; BFS reachability is monotone in depth), and the
+      per-depth cumulative counts ``ghost_cum`` rise monotonically from
+      0 to the full ghost count, with depth 1 matching the classic halo;
+    * **byte accounting** — the plan's own column sums, pad ``L``, and
+      the whole-filter :meth:`SpmvCommPlan.sstep_collectives` terms,
+      whose total must equal ``moved x (2.ceil(n/s) - 1) x n_b x S_d``
+      for both comm engines (the first exchange ships single width, the
+      remaining ``ceil(n/s) - 1`` ship the doubled ``[w1 | w2]`` payload).
+    """
+    tag = f"[{label}] " if label else ""
+    errors: list[str] = []
+    s = int(getattr(cps, "sstep", 1))
+    if s < 2:
+        return [f"{tag}lint_sstep called on a depth-{s} plan"]
+    if getattr(cp1, "sstep", 1) != 1:
+        errors.append(f"{tag}reference plan has sstep = {cp1.sstep} != 1")
+    if cps.n_row != cp1.n_row:
+        return errors + [f"{tag}plans disagree on the shard count "
+                         f"({cps.n_row} vs {cp1.n_row})"]
+    # --- ghost coverage -------------------------------------------------
+    nv1 = np.asarray(cp1.n_vc, dtype=np.int64)
+    nvs = np.asarray(cps.n_vc, dtype=np.int64)
+    if (nvs < nv1).any():
+        errors.append(f"{tag}depth-{s} ghost count smaller than the "
+                      f"depth-1 halo on some shard (coverage hole)")
+    if (cp1.pair_counts is not None and cps.pair_counts is not None
+            and (np.asarray(cps.pair_counts)
+                 < np.asarray(cp1.pair_counts)).any()):
+        errors.append(f"{tag}depth-{s} pair_counts drop below the "
+                      f"depth-1 volumes for some (sender, receiver) pair")
+    gc = cps.ghost_cum
+    if gc is None or len(gc) != s + 1:
+        errors.append(f"{tag}ghost_cum missing or wrong length "
+                      f"({None if gc is None else len(gc)} != {s + 1})")
+    else:
+        if gc[0] != 0:
+            errors.append(f"{tag}ghost_cum[0] = {gc[0]} != 0")
+        if any(gc[d] > gc[d + 1] for d in range(s)):
+            errors.append(f"{tag}ghost_cum not monotone: {gc}")
+        if int(gc[s]) != int(nvs.max(initial=0)):
+            errors.append(f"{tag}ghost_cum[{s}] = {gc[s]} != max ghost "
+                          f"count {int(nvs.max(initial=0))}")
+        if int(gc[1]) != int(nv1.max(initial=0)):
+            errors.append(f"{tag}ghost_cum[1] = {gc[1]} != depth-1 halo "
+                          f"max {int(nv1.max(initial=0))} (depth-1 slice "
+                          f"of the BFS diverges from the classic plan)")
+        if cps.sstep_work_factor() < 1.0:
+            errors.append(f"{tag}sstep_work_factor < 1")
+    # --- byte accounting ------------------------------------------------
+    if cps.pair_counts is not None:
+        pcs = np.asarray(cps.pair_counts)
+        if int(pcs.max(initial=0)) != cps.L:
+            errors.append(f"{tag}depth-{s} L = {cps.L} != max pair "
+                          f"volume {int(pcs.max(initial=0))}")
+        if not np.array_equal(pcs.sum(axis=0), nvs):
+            errors.append(f"{tag}depth-{s} pair_counts column sums "
+                          f"disagree with n_vc")
+    ng = cps.n_groups(degree)
+    if ng != -(-degree // s):
+        errors.append(f"{tag}n_groups({degree}) = {ng} != ceil({degree}/"
+                      f"{s})")
+    for comm, sched in (("a2a", "cyclic"), ("compressed", "cyclic"),
+                        ("compressed", "matching")):
+        moved = cps.moved_entries_per_device(comm, sched)
+        want = moved * (2 * ng - 1) * n_b * S_d
+        terms = cps.sstep_collectives(comm, sched, n_b, S_d, degree)
+        got = sum(b * c for _, b, c in terms)
+        if got != want:
+            errors.append(f"{tag}sstep_collectives({comm}, {sched}) total "
+                          f"bytes {got} != moved*(2*ng-1)*n_b*S_d = {want}")
+        if sum(c for _, _, c in terms) != ng * cps.rounds_per_exchange(
+                comm, sched):
+            errors.append(f"{tag}sstep_collectives({comm}, {sched}) op "
+                          f"count disagrees with ng * rounds_per_exchange")
     return errors
 
 

@@ -14,7 +14,8 @@ import numpy as np
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["scale_params", "chebyshev_filter", "kpm_moments"]
+__all__ = ["scale_params", "chebyshev_filter", "chebyshev_filter_sstep",
+           "kpm_moments"]
 
 
 def scale_params(lambda_l: float, lambda_r: float) -> tuple[float, float]:
@@ -61,6 +62,61 @@ def chebyshev_filter(spmv, mu, alpha: float, beta: float, V, fused_step=None):
 
     if n >= 3:
         (Y, _, _), _ = lax.scan(body, (Y, W2, W1), mu[3:])
+    return Y
+
+
+def chebyshev_filter_sstep(group, mu, alpha: float, beta: float, V, s: int):
+    """Communication-avoiding filter evaluation: ⌈n/s⌉ ghost exchanges.
+
+    ``group(n_steps, first)`` (built by
+    :func:`~repro.core.spmv.make_sstep_cheb`) returns a fused closure
+    running ONE depth-s ghost exchange followed by ``n_steps`` recurrence
+    steps on the extended block, returning the owned step outputs
+    stacked (``[n_steps, D, nb]``) plus the shifted carries. The
+    degree-n loop is split into a first group (seeds off V alone, so its
+    exchange ships single width), a ``lax.scan`` over the uniform middle
+    groups (one fused HLO body — the s-step analogue of the base
+    filter's scanned step), and an explicit tail group of the n mod s
+    leftover steps. The μ-accumulation happens HERE, in the main graph,
+    with the identical op tree to :func:`chebyshev_filter` — the init
+    ``mu0·V + mu1·T1 + mu2·T2`` followed by scanned ``Y + mu_k·T_k``
+    updates — so XLA's fused-multiply-add choices match and the result
+    is bit-identical to the s=1 engines for every s.
+    """
+    mu = jnp.asarray(mu, dtype=V.real.dtype if jnp.iscomplexobj(V) else V.dtype)
+    n = int(mu.shape[0]) - 1
+    s = int(s)
+    assert n >= 2, "filter degree must be >= 2"
+    assert s >= 2, "s=1 is the per-step engine grid (chebyshev_filter)"
+    n_groups = -(-n // s)
+    s1 = min(s, n)
+
+    def acc(Yk, mu_T):
+        mu_k, Tk = mu_T
+        return Yk + mu_k * Tk, None
+
+    Ts, w1, w2 = group(s1, True)(V, alpha, beta)
+    Y = mu[0] * V + mu[1] * Ts[0] + mu[2] * Ts[1]
+    if s1 > 2:
+        Y, _ = lax.scan(acc, Y, (mu[3:1 + s1], Ts[2:]))
+    if s1 == n:
+        return Y
+    r_tail = n - (n_groups - 1) * s
+    n_mid = (n_groups - 1) - (0 if r_tail == s else 1)
+    if n_mid:
+        g = group(s, False)
+        mus_mid = mu[1 + s:1 + s + n_mid * s].reshape(n_mid, s)
+
+        def body(carry, mus_k):
+            Yk, a1, a2 = carry
+            Ts_k, a1, a2 = g(a1, a2, alpha, beta)
+            Yk, _ = lax.scan(acc, Yk, (mus_k, Ts_k))
+            return (Yk, a1, a2), None
+
+        (Y, w1, w2), _ = lax.scan(body, (Y, w1, w2), mus_mid)
+    if r_tail != s:
+        Ts_t, w1, w2 = group(r_tail, False)(w1, w2, alpha, beta)
+        Y, _ = lax.scan(acc, Y, (mu[1 + n - r_tail:], Ts_t))
     return Y
 
 

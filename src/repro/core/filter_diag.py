@@ -53,7 +53,8 @@ from .lanczos import lanczos_interval
 from .layouts import Layout
 from .orthogonalize import make_gram, make_svqb, make_tsqr
 from .redistribute import make_redistribute
-from .spmv import build_dist_ell, make_fused_cheb_step, make_spmv
+from .spmv import (build_dist_ell, build_sstep_ell, make_fused_cheb_step,
+                   make_spmv, make_sstep_cheb)
 
 __all__ = ["FDConfig", "FDResult", "FilterDiag"]
 
@@ -78,6 +79,7 @@ class FDConfig:
     spmv_balance: str = "rows"  # row partition: rows | commvol (planned cuts)
     spmv_reorder: str = "none"  # row order: none | rcm (bandwidth-reducing)
     spmv_kernel: bool = False   # Pallas kernels for the local contraction
+    spmv_sstep: int = 1         # s-step filter: depth-s ghosts, ceil(n/s) exchanges
     dtype: str = "float64"
     seed: int = 7
 
@@ -127,6 +129,9 @@ class FilterDiag:
         self.N_col = self.panel_layout.n_col(mesh)
         if cfg.n_search % max(self.N_col, 1):
             raise ValueError("n_search must be divisible by N_col")
+        if cfg.spmv_sstep < 1:
+            raise ValueError(f"spmv_sstep must be >= 1 "
+                             f"(got {cfg.spmv_sstep})")
         dt = jnp.dtype(cfg.dtype)
         if getattr(matrix, "is_complex", False) and not jnp.issubdtype(dt, jnp.complexfloating):
             dt = jnp.dtype("complex128" if dt == jnp.float64 else "complex64")
@@ -143,7 +148,8 @@ class FilterDiag:
 
             self.rowmap = plan_rowmap(matrix, self.P_total,
                                       balance=cfg.spmv_balance,
-                                      reorder=cfg.spmv_reorder)
+                                      reorder=cfg.spmv_reorder,
+                                      sstep=cfg.spmv_sstep)
             if self.rowmap.identity:
                 self.rowmap = None  # planned map degenerated to equal rows
         # one padded extent for both layouts (the planned map's when set)
@@ -160,6 +166,14 @@ class FilterDiag:
                                             rowmap=self.rowmap)
         else:
             self.ell_panel = self.ell_stack
+        # s-step filter operator (seventh engine axis): depth-s ghost
+        # zones at the panel level only — Lanczos and the Ritz residual
+        # are single SpMVs, so the stack operator stays s=1
+        self.sell_panel = (
+            build_sstep_ell(matrix, self.N_row, cfg.spmv_sstep, dtype=dt,
+                            d_pad=self.D_pad, rowmap=self.rowmap)
+            if cfg.spmv_sstep > 1 else None
+        )
         self._build_fns(matrix)
 
     # ------------------------------------------------------------------
@@ -186,7 +200,8 @@ class FilterDiag:
                 matrix, mesh, n_search=cfg.n_search,
                 d_pad=-(-D // P) * P,
                 reorder=tuple(dict.fromkeys(("none", cfg.spmv_reorder))),
-                kernel=tuple(dict.fromkeys((False, cfg.spmv_kernel))))
+                kernel=tuple(dict.fromkeys((False, cfg.spmv_kernel))),
+                sstep=tuple(dict.fromkeys((1, cfg.spmv_sstep))))
             best = self.plan.best
             cfg.spmv_overlap = best.overlap
             cfg.spmv_comm = best.comm
@@ -194,6 +209,7 @@ class FilterDiag:
             cfg.spmv_balance = best.balance
             cfg.spmv_reorder = best.reorder
             cfg.spmv_kernel = best.kernel
+            cfg.spmv_sstep = best.sstep
             # the operators below are built from exactly the map the
             # winning candidate was scored on
             if self.rowmap is None:
@@ -228,6 +244,17 @@ class FilterDiag:
                                  schedule=cfg.spmv_schedule)
             if cfg.spmv_kernel else None
         )
+        # s-step filter applier (spmv_sstep > 1): the whole degree-n
+        # filter in ceil(n/s) depth-s ghost exchanges, bit-identical to
+        # the per-step engines (core/spmv.py make_sstep_cheb)
+        self.cheb_sstep = (
+            make_sstep_cheb(mesh, self.panel_layout, self.sell_panel,
+                            use_kernel=cfg.spmv_kernel,
+                            overlap=cfg.spmv_overlap,
+                            comm=cfg.spmv_comm,
+                            schedule=cfg.spmv_schedule)
+            if self.sell_panel is not None else None
+        )
         if cfg.ortho == "tsqr":
             self._tsqr = make_tsqr(mesh, self.stack_layout)
             self.orthogonalize = jax.jit(lambda V: self._tsqr(V)[0])
@@ -257,12 +284,15 @@ class FilterDiag:
 
     def _cheb(self, degree: int):
         if degree not in self._cheb_cache:
-            spmv = self.spmv_panel
-            fused_step = self.fused_step_panel
+            if self.cheb_sstep is not None:
+                run = self.cheb_sstep
+            else:
+                spmv = self.spmv_panel
+                fused_step = self.fused_step_panel
 
-            def run(V, mu, alpha, beta):
-                return chebyshev_filter(spmv, mu, alpha, beta, V,
-                                        fused_step=fused_step)
+                def run(V, mu, alpha, beta):
+                    return chebyshev_filter(spmv, mu, alpha, beta, V,
+                                            fused_step=fused_step)
 
             self._cheb_cache[degree] = jax.jit(run)
         return self._cheb_cache[degree]

@@ -119,6 +119,11 @@ class RowMap:
     perm: np.ndarray         # [D] original row at each reordered position
     boundaries: np.ndarray   # [P+1] block cuts in reordered row space
     R: int                   # padded rows per plan-level block
+    #: ghost-zone depth the map was planned/validated at (the
+    #: ``spmv_sstep`` axis). A map planned at s=1 scored under an s>1
+    #: comm plan under-counts the depth-s volumes its cuts were never
+    #: optimized for — ``planner.comm_plan`` warns on the mismatch.
+    sstep: int = 1
     _pos: np.ndarray | None = dataclasses.field(default=None, repr=False)
     _row_of: np.ndarray | None = dataclasses.field(default=None, repr=False)
 
@@ -613,7 +618,7 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
                 block_multiple: int = 1, alpha: float = 1.0,
                 beta: float = 4.0, sweeps: int = 3,
                 growth: float = 1.5, refine_passes: int = 3,
-                pattern=None) -> RowMap:
+                pattern=None, sstep: int = 1) -> RowMap:
     """Plan the row decomposition of ``matrix`` at ``P`` shards.
 
     ``balance`` ∈ :data:`SPMV_BALANCES` picks the block cuts (equal rows
@@ -626,10 +631,16 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
     divisible ``D_pad``. ``pattern`` may carry a precomputed
     ``(indptr, cols)`` pair so callers planning several maps of one
     matrix (the planner's balance × reorder axis) pay the pattern pass
-    once.
+    once. ``sstep`` stamps the ghost-zone depth the map is intended for
+    (:attr:`RowMap.sstep`); the cut objective itself stays the depth-1
+    wire volume (a proxy for the depth-s one — the stamp is what lets
+    ``planner.comm_plan`` warn when a map is scored at a different
+    depth, rather than silently under-counting).
 
     Deterministic: same matrix, same arguments → the same map.
     """
+    if int(sstep) < 1:
+        raise ValueError(f"sstep must be >= 1, got {sstep}")
     if balance not in SPMV_BALANCES:
         raise ValueError(f"unknown balance {balance!r} "
                          f"(expected one of {SPMV_BALANCES})")
@@ -642,6 +653,7 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
         if block_multiple > 1 and rm.R % block_multiple:
             R = -(-rm.R // block_multiple) * block_multiple
             rm = RowMap.rows(D, P, R * P)
+        rm.sstep = int(sstep)
         return rm
     if pattern is None:
         pattern = _pattern_csr(matrix)
@@ -658,4 +670,5 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
     R = max(R, 1)
     R = -(-R // block_multiple) * block_multiple
     return RowMap(D=D, P=P, balance=balance, reorder=reorder, perm=perm,
-                  boundaries=np.asarray(boundaries, dtype=np.int64), R=R)
+                  boundaries=np.asarray(boundaries, dtype=np.int64), R=R,
+                  sstep=int(sstep))

@@ -34,7 +34,8 @@ import json
 
 import numpy as np
 
-__all__ = ["MachineModel", "MEGGIE", "TPU_V5E", "engine_chi",
+__all__ = ["MachineModel", "MEGGIE", "TPU_V5E", "TPU_V5E_HIGHLAT",
+           "engine_chi",
            "FUSED_KERNEL_KAPPA", "fused_kernel_machine",
            "schedule_comm_time",
            "cheb_iter_time", "cheb_iter_time_overlap", "overlap_speedup",
@@ -49,6 +50,11 @@ class MachineModel:
     b_m: float  # memory bandwidth per process [B/s]
     b_c: float  # effective inter-process communication bandwidth [B/s]
     kappa: float  # vector traffic factor (>=5 for the fused kernel)
+    #: per-collective-round launch latency [s] — the α of the s-step cost
+    #: model α·⌈n/s⌉ + β·bytes(s). Zero (the default) reproduces the
+    #: pure-bandwidth Eq. 12 exactly; only a latency-bound model can make
+    #: the planner prefer spmv_sstep > 1.
+    alpha: float = 0.0
 
     @property
     def bc_over_bm(self) -> float:
@@ -57,15 +63,17 @@ class MachineModel:
     @classmethod
     def fit(cls, samples, *, b_m: float, name: str = "fitted",
             S_i: int = 4) -> "MachineModel":
-        """Least-squares fit of (κ, b_c) to measured iteration times.
+        """Least-squares fit of (κ, b_c, α) to measured iteration times.
 
         Each sample is a dict with keys ``t`` (measured seconds of one
         fused Chebyshev iteration) plus the Eq. 12 inputs ``D, N_p, n_b,
-        chi, n_nzr, S_d``. Eq. 12 is linear in κ and 1/b_c once b_m is
-        fixed (the paper fits the same way, b_m from STREAM):
+        chi, n_nzr, S_d`` and optionally ``rounds`` (collective rounds
+        launched during the measured iteration). Eq. 12 + the round
+        latency term is linear in κ, 1/b_c and α once b_m is fixed (the
+        paper fits the bandwidth part the same way, b_m from STREAM):
 
             t = scale·(S_d+S_i)·n_nzr/n_b / b_m  +  κ·scale·S_d/b_m
-                                                 +  (1/b_c)·scale·χ·S_d
+                +  (1/b_c)·scale·χ·S_d           +  α·rounds
 
         with ``scale = n_b·D/N_p``. At least one sample must have χ > 0
         to identify b_c; with only χ = 0 samples the fit is deliberately
@@ -76,6 +84,13 @@ class MachineModel:
         +inf and a ``RuntimeWarning`` flags that the model prices
         communication as free — a ranking built on it would favor max-χ
         layouts.
+
+        α is identifiable only when the ``rounds`` column is not
+        collinear with the χ·bytes column — i.e. the samples include
+        *small-message* cells whose round count varies while their wire
+        bytes stay tiny (``dryrun --fit-machine`` emits such tiny-halo
+        cells for exactly this purpose). Without any ``rounds`` data the
+        latency column is dropped and α stays 0.
         """
         import warnings
 
@@ -86,16 +101,20 @@ class MachineModel:
         for s in samples:
             scale = s["n_b"] * s["D"] / s["N_p"]
             mat_term = scale * (s["S_d"] + S_i) * s["n_nzr"] / s["n_b"] / b_m
-            rows.append([scale * s["S_d"] / b_m, scale * s["chi"] * s["S_d"]])
+            rows.append([scale * s["S_d"] / b_m, scale * s["chi"] * s["S_d"],
+                         float(s.get("rounds", 0.0))])
             rhs.append(s["t"] - mat_term)
         A = np.asarray(rows, dtype=np.float64)
         y = np.asarray(rhs, dtype=np.float64)
         has_comm = bool((A[:, 1] > 0).any())
-        if not has_comm:
-            A = A[:, :1]
-        sol, *_ = np.linalg.lstsq(A, y, rcond=None)
+        has_rounds = bool((A[:, 2] > 0).any())
+        keep = [0] + ([1] if has_comm else []) + ([2] if has_rounds else [])
+        sol_k, *_ = np.linalg.lstsq(A[:, keep], y, rcond=None)
+        sol = np.zeros(3)
+        sol[keep] = sol_k
         kappa = float(max(sol[0], 0.0))
         inv_bc = float(max(sol[1], 0.0)) if has_comm else 0.0
+        alpha = float(max(sol[2], 0.0)) if has_rounds else 0.0
         b_c = (1.0 / inv_bc) if inv_bc > 0 else float("inf")
         if has_comm and inv_bc == 0.0:
             warnings.warn(
@@ -104,7 +123,7 @@ class MachineModel:
                 "with chi on this host); b_c left at +inf — the model "
                 "treats communication as FREE and is unsuitable for "
                 "comm-sensitive planning", RuntimeWarning, stacklevel=2)
-        return cls(name=name, b_m=b_m, b_c=b_c, kappa=kappa)
+        return cls(name=name, b_m=b_m, b_c=b_c, kappa=kappa, alpha=alpha)
 
 
 #: Vector-traffic factor of the fused Chebyshev kernel (paper §3.2): the
@@ -129,13 +148,20 @@ MEGGIE = MachineModel("meggie-socket", b_m=53.3e9, b_c=2.82e9, kappa=7.3)
 # v5e chip: 819 GB/s HBM; ICI ~50 GB/s per link. kappa=5 assumes the fused
 # Pallas Chebyshev kernel reads W1 once and streams W2/V.
 TPU_V5E = MachineModel("tpu-v5e-chip", b_m=819e9, b_c=50e9, kappa=5.0)
+#: A latency-bound variant of the v5e model (e.g. DCN-bridged slices or
+#: host-mediated collectives): 50 μs per collective round. This is the
+#: regime where the s-step engine's α·⌈n/s⌉ round saving beats its
+#: doubled-width β·bytes(s) cost — exposed as a builtin so the planner's
+#: s>1 behavior is reproducible from the CLIs.
+TPU_V5E_HIGHLAT = MachineModel("tpu-v5e-highlat", b_m=819e9, b_c=50e9,
+                               kappa=5.0, alpha=50e-6)
 
 
 def save_machine(m: MachineModel, path: str) -> None:
     """Persist a (fitted) machine model as JSON (``dryrun --fit-machine``)."""
     with open(path, "w") as f:
         json.dump({"name": m.name, "b_m": m.b_m, "b_c": m.b_c,
-                   "kappa": m.kappa}, f)
+                   "kappa": m.kappa, "alpha": m.alpha}, f)
 
 
 def load_machine(path: str) -> MachineModel:
@@ -143,11 +169,13 @@ def load_machine(path: str) -> MachineModel:
     with open(path) as f:
         d = json.load(f)
     return MachineModel(name=d["name"], b_m=float(d["b_m"]),
-                        b_c=float(d["b_c"]), kappa=float(d["kappa"]))
+                        b_c=float(d["b_c"]), kappa=float(d["kappa"]),
+                        alpha=float(d.get("alpha", 0.0)))
 
 
 #: Built-in machine models addressable by name on the CLIs.
-BUILTIN_MACHINES = {"tpu-v5e": TPU_V5E, "meggie": MEGGIE}
+BUILTIN_MACHINES = {"tpu-v5e": TPU_V5E, "meggie": MEGGIE,
+                    "tpu-v5e-highlat": TPU_V5E_HIGHLAT}
 
 
 def resolve_machine(name_or_path: str) -> MachineModel:
@@ -197,15 +225,28 @@ def schedule_comm_time(m: MachineModel, round_L, *, n_b: int,
 
 
 def cheb_iter_time(m: MachineModel, *, D: int, N_p: int, n_b: int, chi: float,
-                   n_nzr: float, S_d: int, S_i: int = 4) -> float:
-    """Eq. (12): execution time of one fused Chebyshev-filter iteration."""
-    per_entry = ((S_d + S_i) * n_nzr / n_b + m.kappa * S_d) / m.b_m + chi * S_d / m.b_c
-    return per_entry * n_b * D / N_p
+                   n_nzr: float, S_d: int, S_i: int = 4,
+                   rounds: float = 0.0, work_factor: float = 1.0) -> float:
+    """Eq. (12): execution time of one fused Chebyshev-filter iteration.
+
+    ``rounds`` is the number of collective rounds launched per iteration
+    (1 for the a2a engine, the schedule's round count for the compressed
+    engine, ``⌈n/s⌉·rounds_per_exchange / n`` for the s-step engine) —
+    each costs the machine's ``alpha`` launch latency on top of the
+    bandwidth terms. ``work_factor`` scales the matrix-traffic term for
+    engines that contract redundant rows (the s-step ghost-zone rows:
+    ``1 + Σ_{d<s} ghosts(d) / (s·R)``). The defaults reproduce the
+    pure Eq. 12 value bit-for-bit.
+    """
+    per_entry = ((S_d + S_i) * n_nzr * work_factor / n_b
+                 + m.kappa * S_d) / m.b_m + chi * S_d / m.b_c
+    return per_entry * n_b * D / N_p + m.alpha * rounds
 
 
 def cheb_iter_time_overlap(m: MachineModel, *, D: int, N_p: int, n_b: int,
                            chi: float, n_nzr: float, S_d: int, S_i: int = 4,
-                           halo_frac: float | None = None) -> float:
+                           halo_frac: float | None = None,
+                           rounds: float = 0.0) -> float:
     """Overlap-aware variant of Eq. (12): ``T = max(T_comm, T_local) + T_halo``.
 
     The split-phase engine (``make_spmv(..., overlap=True)``) issues the
@@ -217,7 +258,10 @@ def cheb_iter_time_overlap(m: MachineModel, *, D: int, N_p: int, n_b: int,
 
     ``halo_frac`` defaults to ``min(1, chi / n_nzr)`` — every communicated
     vector entry feeds at least one halo nonzero (exact value available
-    from ``DistEll.halo_nnz_fraction``).
+    from ``DistEll.halo_nnz_fraction``). ``rounds`` adds the machine's
+    per-round ``alpha`` launch latency (the collective must be *issued*
+    before local work can hide its bytes, so the latency term stays
+    additive).
     """
     if N_p <= 1 or chi <= 0:
         return cheb_iter_time(m, D=D, N_p=N_p, n_b=n_b, chi=0.0,
@@ -232,7 +276,7 @@ def cheb_iter_time_overlap(m: MachineModel, *, D: int, N_p: int, n_b: int,
     # streaming happens while bytes are in flight)
     t_local = ((S_d + S_i) * nnz_loc / n_b + m.kappa * S_d) / m.b_m * scale
     t_halo = (S_d + S_i) * nnz_halo / n_b / m.b_m * scale
-    return max(t_comm, t_local) + t_halo
+    return max(t_comm, t_local) + t_halo + m.alpha * rounds
 
 
 def overlap_speedup(m: MachineModel, *, D: int, N_p: int, n_b: int, chi: float,

@@ -134,6 +134,13 @@ class SpmvCommPlan:
     exact: bool
     d_pad: int | None = None
     pair_counts: np.ndarray | None = None  # [P, P] L_qp (sender q -> recv p)
+    #: ghost-zone depth the stats describe: 1 = the per-SpMV halo (the
+    #: classic plan), s > 1 = the depth-s ghost set of the s-step engine
+    #: (χ(A^s)-derived volumes; always an exact pattern pass)
+    sstep: int = 1
+    #: [s+1] max-over-shards ghost count at BFS depth ≤ d (d = 0 is 0) —
+    #: the s-step engine's redundant-work statistic
+    ghost_cum: tuple | None = None
     #: schedule name -> (perms, round_L) memo — the greedy matching
     #: decomposition is O(P² log P), and plan_layout asks for it several
     #: times per candidate
@@ -232,6 +239,78 @@ class SpmvCommPlan:
         return tuple(("collective-permute", Lk * n_b * S_d, 1)
                      for Lk in round_L)
 
+    # ----------------------------------------------------- s-step stats --
+
+    @property
+    def level_R(self) -> int:
+        """Padded rows per shard the plan's volumes were computed on."""
+        if self.rowmap is not None and not self.rowmap.identity:
+            return self.rowmap.level_R(self.n_row)
+        if self.d_pad is not None:
+            return self.d_pad // self.n_row
+        return -(-self.D // self.n_row)
+
+    def n_groups(self, degree: int) -> int:
+        """Exchanges of a degree-n s-step filter: ⌈n/s⌉."""
+        return -(-int(degree) // self.sstep)
+
+    def rounds_per_exchange(self, comm: str, schedule: str = "cyclic") -> int:
+        """Collective rounds one exchange launches: 1 for the a2a engine,
+        the schedule's round count for the compressed engine (the α
+        latency multiplier of the perf model)."""
+        if self.n_row <= 1 or self.L == 0:
+            return 0
+        if comm == "a2a":
+            return 1
+        if comm != "compressed":
+            raise ValueError(f"unknown comm engine {comm!r}")
+        return len(self.permute_schedule(schedule)[1])
+
+    def sstep_work_factor(self) -> float:
+        """Matrix-traffic inflation of the s-step engine: the group's
+        steps also contract the ghost rows still needed at later depths,
+        ``1 + Σ_{d=1}^{s-1} ghosts(≤d) / (s·R)`` (exactly 1 at s = 1 —
+        depth-1 ghosts have no rows of their own)."""
+        if self.sstep < 2 or not self.ghost_cum:
+            return 1.0
+        extra = float(sum(self.ghost_cum[1:self.sstep]))
+        return 1.0 + extra / (self.sstep * max(self.level_R, 1))
+
+    def sstep_collectives(self, comm: str, schedule: str, n_b: int, S_d: int,
+                          degree: int) -> tuple[tuple[str, int, int], ...]:
+        """Whole-filter (HLO kind, operand bytes, op count) terms of the
+        s-step engine at filter degree ``degree`` — the census contract
+        of the seventh axis. The first group ships the single-width seed
+        (``n_b`` columns); every later group ships the width-doubled
+        ``[w1 | w2]`` payload in the SAME collective, so a2a emits one
+        single-width + ``⌈n/s⌉ - 1`` double-width all-to-alls, and the
+        compressed engine emits that pattern per schedule round. Unlike
+        :meth:`spmv_collectives` these terms already cover the whole
+        filter — they are NOT scaled by the degree again.
+        """
+        if self.sstep < 2:
+            raise ValueError("sstep_collectives needs a depth-s plan "
+                             "(comm_plan(..., sstep>=2))")
+        if self.n_row <= 1 or self.L == 0:
+            return ()
+        ng = self.n_groups(degree)
+        if comm == "a2a":
+            b1 = self.n_row * self.L * n_b * S_d
+            terms = [("all-to-all", b1, 1)]
+            if ng > 1:
+                terms.append(("all-to-all", 2 * b1, ng - 1))
+            return tuple(terms)
+        if comm != "compressed":
+            raise ValueError(f"unknown comm engine {comm!r}")
+        _, round_L = self.permute_schedule(schedule)
+        terms = []
+        for Lk in round_L:
+            terms.append(("collective-permute", Lk * n_b * S_d, 1))
+            if ng > 1:
+                terms.append(("collective-permute", 2 * Lk * n_b * S_d,
+                              ng - 1))
+        return tuple(terms)
+
 
 def _remote_cols(matrix, a: int, b: int, chunk: int = 2_000_000) -> np.ndarray:
     """Distinct columns outside [a, b) referenced by rows [a, b)."""
@@ -266,7 +345,8 @@ def _mapped_row_cols(matrix, rows: np.ndarray, chunk: int = 2_000_000):
 def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
               exact: bool | None = None,
               n_vc: np.ndarray | None = None,
-              rowmap: RowMap | None = None) -> SpmvCommPlan:
+              rowmap: RowMap | None = None,
+              sstep: int = 1) -> SpmvCommPlan:
     """Communication plan of the SpMV engine at ``n_row`` shards, computed
     from the sparsity pattern without building the operator.
 
@@ -288,8 +368,24 @@ def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
     :attr:`SpmvCommPlan.chi` is then computed on the planned block
     sizes. ``L == 0`` (a zero-halo partition) predicts zero bytes, which
     the engines realize exactly — no phantom 1-entry pad.
+
+    ``sstep > 1`` computes the **depth-s ghost-zone** stats instead of
+    the per-SpMV halo: per-pair volumes are the χ(A^s)-derived distinct
+    BFS-reachable positions (the same ``spmv.sstep_ghosts`` pass
+    ``build_sstep_ell`` runs, so predicted == built), and
+    :attr:`SpmvCommPlan.ghost_cum` carries the per-depth redundant-work
+    counts. The depth-s pass is always exact (it needs the full
+    pattern); it warns when scored on a :class:`RowMap` planned at a
+    different depth (a stale s=1 map's cuts silently under-count the
+    depth-s volumes they never optimized).
     """
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
+    sstep = int(sstep)
+    if sstep < 1:
+        raise ValueError(f"sstep must be >= 1, got {sstep}")
+    if sstep > 1:
+        return _sstep_comm_plan(matrix, D, n_row, sstep, d_pad=d_pad,
+                                rowmap=rowmap)
     if rowmap is not None and not rowmap.identity:
         if rowmap.D != D:
             raise ValueError("rowmap.D does not match the matrix")
@@ -346,6 +442,68 @@ def comm_plan(matrix, n_row: int, *, d_pad: int | None = None,
                         pair_counts=pair_counts)
 
 
+def _sstep_comm_plan(matrix, D: int, n_row: int, sstep: int, *,
+                     d_pad: int | None, rowmap: RowMap | None
+                     ) -> SpmvCommPlan:
+    """Depth-s ghost-zone stats via the engine's own BFS
+    (``spmv.sstep_ghosts``) over the pattern in position space."""
+    import warnings
+
+    from .partition import _pattern_csr
+    from .spmv import sstep_ghosts
+
+    mapped = rowmap is not None and not rowmap.identity
+    if mapped and rowmap.D != D:
+        raise ValueError("rowmap.D does not match the matrix")
+    if mapped and int(getattr(rowmap, "sstep", 1)) != sstep:
+        warnings.warn(
+            f"comm_plan(sstep={sstep}) scored on a RowMap planned at "
+            f"sstep={getattr(rowmap, 'sstep', 1)} — its cuts were not "
+            f"optimized for the depth-{sstep} ghost volumes, so the "
+            f"redistribution/byte accounting may under-count; re-plan "
+            f"with plan_rowmap(..., sstep={sstep})",
+            UserWarning, stacklevel=3)
+    if n_row <= 1:
+        return SpmvCommPlan(1, D, 0, np.zeros(1, np.int64), True,
+                            rowmap.D_pad if mapped else d_pad,
+                            sstep=sstep, ghost_cum=(0,) * (sstep + 1),
+                            rowmap=rowmap)
+    indptr, cols = _pattern_csr(matrix)
+    if mapped:
+        R = rowmap.level_R(n_row)
+        pos = rowmap.pos
+        rows = np.repeat(np.arange(D, dtype=np.int64), np.diff(indptr))
+        prow, pcol = pos[rows], pos[cols]
+        order = np.lexsort((pcol, prow))
+        prow, pcol = prow[order], pcol[order]
+        counts = np.bincount(prow, minlength=n_row * R)
+        indptr_pos = np.concatenate([[0], np.cumsum(counts)])
+        cols_pos = pcol
+        pad = rowmap.D_pad
+    else:
+        R = (d_pad // n_row) if d_pad is not None else -(-D // n_row)
+        # equal-rows cuts put row g at position g; pad rows are empty
+        indptr_pos = np.concatenate(
+            [indptr, np.full(n_row * R - D, indptr[-1], dtype=indptr.dtype)])
+        cols_pos = cols
+        pad = d_pad
+    ghosts = sstep_ghosts(indptr_pos, cols_pos, n_row, R, sstep)
+    n_vc = np.zeros(n_row, dtype=np.int64)
+    pair_counts = np.zeros((n_row, n_row), dtype=np.int64)
+    ghost_cum = np.zeros(sstep + 1, dtype=np.int64)
+    for p, (gpos, gdep) in enumerate(ghosts):
+        n_vc[p] = gpos.size
+        if gpos.size:
+            pair_counts[:, p] = np.bincount(gpos // R, minlength=n_row)
+        for d in range(1, sstep + 1):
+            ghost_cum[d] = max(ghost_cum[d], int((gdep <= d).sum()))
+    L = int(pair_counts.max()) if pair_counts.size else 0
+    return SpmvCommPlan(n_row, D, L, n_vc, True, pad,
+                        pair_counts=pair_counts, sstep=sstep,
+                        ghost_cum=tuple(int(g) for g in ghost_cum),
+                        rowmap=rowmap)
+
+
 def estimate_nnzr(matrix, probe_rows: int = 4096) -> float:
     """Average stored nonzeros per row: exact for CSR, leading-row probe
     for generator families (pattern rows are statistically homogeneous)."""
@@ -382,6 +540,7 @@ class Candidate:
     balance: str = "rows"   # row partition: "rows" | "commvol"
     reorder: str = "none"   # row order: "none" | "rcm"
     kernel: bool = False    # fused Pallas kernel engine (κ=5 traffic term)
+    sstep: int = 1          # ghost-zone depth (s-step filter; 1 = per-SpMV)
     #: the planned RowMap behind a non-default balance/reorder (shared by
     #: every candidate of that combo; None for the equal-rows partition).
     #: FilterDiag builds its operators from exactly this map, so the
@@ -395,7 +554,7 @@ class Candidate:
         ``+cmp``/``+mat``/``+ov`` engine suffixes (``+cv`` = commvol
         boundaries, ``+rcm`` = RCM row order, ``+cmp`` =
         compressed-cyclic, ``+mat`` = compressed with the matching
-        scheduler)."""
+        scheduler, ``+s2``/``+s3`` = the s-step ghost-zone depth)."""
         suffix = ""
         if self.balance == "commvol":
             suffix += "+cv"
@@ -407,6 +566,8 @@ class Candidate:
             suffix += "+ov"
         if self.kernel:
             suffix += "+krn"
+        if self.sstep > 1:
+            suffix += f"+s{self.sstep}"
         return self.layout + suffix
 
     def describe(self) -> str:
@@ -442,7 +603,8 @@ class Plan:
         the slowest candidate (``report()`` says which)."""
         for c in self.candidates:
             if c.n_col == 1 and not c.overlap and c.comm == "a2a" \
-                    and c.balance == "rows" and c.reorder == "none":
+                    and c.balance == "rows" and c.reorder == "none" \
+                    and c.sstep == 1:
                 return c
         return max(self.candidates, key=lambda c: c.t_pass)
 
@@ -483,6 +645,7 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 balance: tuple[str, ...] = ("rows", "commvol"),
                 reorder: tuple[str, ...] = ("none",),
                 kernel: tuple[bool, ...] = (False,),
+                sstep: tuple[int, ...] = (1,),
                 splits=None, S_d: int | None = None,
                 n_nzr: float | None = None, d_pad: int | None = None,
                 exact_comm: bool | None = None,
@@ -525,6 +688,23 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     to off (``(False,)``); pass ``kernel=(False, True)`` to let the
     ranking decide (``--spmv-kernel`` with ``--layout auto`` does).
 
+    ``sstep`` widens the grid with the **seventh axis** — the s-step
+    ghost-zone depth of the communication-avoiding filter
+    (``make_sstep_cheb``). An s>1 candidate replaces the per-SpMV halo
+    with one depth-s exchange per s recurrence steps: per iteration it
+    pays ``(2·⌈n/s⌉-1)/n`` of the depth-s exchange bytes (later groups
+    ship the width-doubled ``[w1|w2]`` payload), ``⌈n/s⌉·rounds/n`` of
+    the machine's per-round α latency, and a matrix-traffic term
+    inflated by the redundant ghost-row contractions
+    (``SpmvCommPlan.sstep_work_factor``). With the default α = 0 model
+    s=1 always wins (strictly fewer bytes and no saved latency to
+    cash); only a latency-bound machine justifies s>1 — exactly the
+    planner behavior the acceptance gate checks. s>1 candidates are
+    enumerated on the default partition with ``overlap=False`` only
+    (the depth-s pass needs the exact pattern; steps ≥ 1 of a group
+    have a data dependence on the ghosts, so only step 0 could ever
+    overlap — the additive model is the honest one).
+
     ``n_vc_by_row`` maps n_row -> precomputed n_vc counts (on
     ``Partition(D, n_row, d_pad)`` boundaries) and ``comm_plan_by_row``
     maps n_row -> a full precomputed :class:`SpmvCommPlan` (same
@@ -549,6 +729,10 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
         # happens to exclude "compressed"
         if sch not in SPMV_SCHEDULES:
             raise ValueError(f"unknown schedule {sch!r}")
+    ssteps = tuple(dict.fromkeys(int(s) for s in sstep))
+    for s in ssteps:
+        if s < 1:
+            raise ValueError(f"sstep values must be >= 1, got {s}")
     partitions: list[tuple[str, str]] = []
     for bal in dict.fromkeys(balance):
         if bal not in SPMV_BALANCES:
@@ -562,6 +746,7 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     plan_ok = partition_plan_default(matrix, P)
 
     plans: dict[int, SpmvCommPlan] = dict(comm_plan_by_row or {})
+    sstep_plans: dict[tuple[int, int], SpmvCommPlan] = {}  # (n_row, s>1)
     mapped_plans: dict[tuple[str, str, int], SpmvCommPlan] = {}
     rowmaps: dict[tuple[str, str], RowMap] = {}
     pattern = None  # one pattern pass shared by every planned combo
@@ -631,28 +816,61 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                     # schedule volume — never claim a compressed win the
                     # pattern hasn't proven
                     continue
-                chi_eng = pm.engine_chi(
-                    cp.moved_entries_per_device(eng, sch), D, n_row)
-                kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi_eng,
-                          n_nzr=n_nzr, S_d=S_d)
-                for ov in sorted(set(overlap)):
-                    if ov and chi1 <= 0.0:
-                        continue  # overlap is a no-op without an exchange
-                    for kn in sorted(set(kernel)):
-                        mk = pm.fused_kernel_machine(machine) if kn else machine
-                        t_iter = (pm.cheb_iter_time_overlap(mk, **kw)
-                                  if ov else pm.cheb_iter_time(mk, **kw))
-                        cands.append(Candidate(
-                            layout=name, n_row=n_row, n_col=n_col, overlap=ov,
-                            comm=eng, schedule=sch, redistribute=n_col > 1,
-                            chi1=chi1, chi2=chim.chi2, chi_eng=chi_eng,
-                            t_iter=t_iter, t_redist=t_red,
-                            t_pass=degree * t_iter + 2.0 * t_red,
-                            comm_bytes_per_device=cp.comm_bytes_per_device(
-                                eng, n_b, S_d, sch),
-                            balance=bal, reorder=ro, kernel=kn,
-                            rowmap=None if default_part else rowmap,
-                        ))
+                for s in ssteps:
+                    if s == 1:
+                        moved = cp.moved_entries_per_device(eng, sch)
+                        rounds = float(cp.rounds_per_exchange(eng, sch))
+                        wf = 1.0
+                        bytes_dev = cp.comm_bytes_per_device(eng, n_b,
+                                                             S_d, sch)
+                    else:
+                        # seventh axis: default partition only (the
+                        # depth-s BFS needs the exact pattern; a planned
+                        # map would need re-planning at depth s), and
+                        # only where there is an exchange to avoid
+                        if not default_part or chi1 <= 0.0 or not cp.exact:
+                            continue
+                        if (n_row, s) not in sstep_plans:
+                            sstep_plans[(n_row, s)] = comm_plan(
+                                matrix, n_row, d_pad=d_pad, sstep=s)
+                        cps = sstep_plans[(n_row, s)]
+                        ng = cps.n_groups(degree)
+                        # bytes per iteration: one single-width + ng-1
+                        # double-width exchanges over the whole filter
+                        moved = (cps.moved_entries_per_device(eng, sch)
+                                 * (2 * ng - 1) / degree)
+                        rounds = (cps.rounds_per_exchange(eng, sch)
+                                  * ng / degree)
+                        wf = cps.sstep_work_factor()
+                        bytes_dev = int(round(moved * n_b * S_d))
+                    chi_eng = pm.engine_chi(moved, D, n_row)
+                    kw = dict(D=D, N_p=n_row, n_b=n_b, chi=chi_eng,
+                              n_nzr=n_nzr, S_d=S_d)
+                    for ov in sorted(set(overlap)):
+                        if ov and chi1 <= 0.0:
+                            continue  # overlap is a no-op without an exchange
+                        if ov and s > 1:
+                            continue  # steps >= 1 depend on the ghosts
+                        for kn in sorted(set(kernel)):
+                            mk = (pm.fused_kernel_machine(machine)
+                                  if kn else machine)
+                            t_iter = (pm.cheb_iter_time_overlap(
+                                          mk, **kw, rounds=rounds)
+                                      if ov else pm.cheb_iter_time(
+                                          mk, **kw, rounds=rounds,
+                                          work_factor=wf))
+                            cands.append(Candidate(
+                                layout=name, n_row=n_row, n_col=n_col,
+                                overlap=ov, comm=eng, schedule=sch,
+                                redistribute=n_col > 1,
+                                chi1=chi1, chi2=chim.chi2, chi_eng=chi_eng,
+                                t_iter=t_iter, t_redist=t_red,
+                                t_pass=degree * t_iter + 2.0 * t_red,
+                                comm_bytes_per_device=bytes_dev,
+                                balance=bal, reorder=ro, kernel=kn,
+                                sstep=s,
+                                rowmap=None if default_part else rowmap,
+                            ))
     if not cands:
         raise ValueError(
             f"no candidate survived for P={P}, n_search={n_search}, "
@@ -667,7 +885,7 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     cands.sort(key=lambda c: (c.t_pass, c.comm_bytes_per_device,
                               c.comm != "a2a", c.schedule != "cyclic",
                               c.balance != "rows", c.reorder != "none",
-                              c.overlap, c.kernel, c.n_col))
+                              c.overlap, c.kernel, c.sstep, c.n_col))
     return Plan(matrix=_matrix_label(matrix), D=D, n_devices=P,
                 n_search=n_search, degree=degree, machine=machine.name,
                 candidates=tuple(cands))

@@ -109,7 +109,8 @@ from .partition import RowMap
 
 __all__ = ["Partition", "DistEll", "NeighborPlan", "build_dist_ell",
            "make_spmv", "make_fused_cheb_step", "neighbor_schedule",
-           "SPMV_COMM_ENGINES", "SPMV_SCHEDULES"]
+           "SstepEll", "SstepNeighbor", "build_sstep_ell", "sstep_ghosts",
+           "make_sstep_cheb", "SPMV_COMM_ENGINES", "SPMV_SCHEDULES"]
 
 #: Horizontal-layer communication engines of ``make_spmv``.
 SPMV_COMM_ENGINES = ("a2a", "compressed")
@@ -1177,3 +1178,607 @@ def make_fused_cheb_step(mesh: Mesh, layout: Layout, ell: DistEll, *,
     return _build_engine(mesh, layout, ell, use_kernel=use_kernel,
                          overlap=overlap, comm=comm, schedule=schedule,
                          pipeline=pipeline, fused=True)
+
+
+# --------------------------------------------------------------------------
+# s-step (communication-avoiding) engine axis
+# --------------------------------------------------------------------------
+
+
+def sstep_ghosts(indptr: np.ndarray, cols: np.ndarray, P_row: int, R: int,
+                 s: int) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per-shard depth-``s`` ghost zones of a position-space pattern.
+
+    ``(indptr, cols)`` is a CSR pattern over the padded position space
+    ``[0, P_row * R)`` (pad positions have empty rows). For each shard p
+    a breadth-first search from its owned positions ``[p*R, (p+1)*R)``
+    collects every position first reached at depth d ∈ [1, s] — exactly
+    the reachability frontier of the pattern powers A^1 .. A^s, so the
+    depth-d ghost set is a statistic of A^d alone. Returns, per shard,
+    ``(gpos, gdep)``: ghost positions sorted ascending (≡ sorted by
+    (owner, position) since owner = pos // R is monotone) and each
+    ghost's BFS depth. Single source of truth for the builder
+    (:func:`build_sstep_ell`) and the planner's χ(A^s) statistics
+    (``planner.comm_plan(sstep=...)``) — which is what keeps the s-step
+    byte prediction exact.
+    """
+    from ..matrices.sparse import gather_row_entry_idx
+
+    indptr = np.asarray(indptr, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    D_pos = P_row * R
+    assert len(indptr) == D_pos + 1, "pattern must cover the padded space"
+    out = []
+    for p in range(P_row):
+        seen = np.zeros(D_pos, dtype=bool)
+        seen[p * R:(p + 1) * R] = True
+        frontier = np.arange(p * R, (p + 1) * R, dtype=np.int64)
+        gpos_parts: list[np.ndarray] = []
+        gdep_parts: list[np.ndarray] = []
+        for d in range(1, s + 1):
+            if not frontier.size:
+                break
+            gather, _ = gather_row_entry_idx(indptr, frontier)
+            nxt = np.unique(cols[gather])
+            new = nxt[~seen[nxt]]
+            if not new.size:
+                break
+            seen[new] = True
+            gpos_parts.append(new)
+            gdep_parts.append(np.full(new.size, d, dtype=np.int64))
+            frontier = new
+        if gpos_parts:
+            gpos = np.concatenate(gpos_parts)
+            gdep = np.concatenate(gdep_parts)
+            order = np.argsort(gpos, kind="stable")
+            gpos, gdep = gpos[order], gdep[order]
+        else:
+            gpos = np.zeros(0, dtype=np.int64)
+            gdep = np.zeros(0, dtype=np.int64)
+        out.append((gpos, gdep))
+    return out
+
+
+@dataclasses.dataclass
+class SstepNeighbor:
+    """Compressed-engine schedule of the depth-s ghost exchange.
+
+    Same permutation rounds as :class:`NeighborPlan` (both come from
+    :func:`neighbor_schedule`, here applied to the depth-s pair-volume
+    matrix); ``gather`` maps ghost slot j of each shard into the compact
+    round-concatenated receive buffer (``off_by_pair[owner_j] +
+    rank_within_pair_j``), so the gathered ghost block is identical to
+    the a2a engine's — the per-step ELLs are comm-engine independent.
+    """
+
+    perms: tuple[tuple[tuple[int, int], ...], ...]
+    round_L: tuple[int, ...]
+    send_nbr: np.ndarray  # [P, max(H, 1)] int32, round-major send slots
+    gather: np.ndarray    # [P, G] int32 into the compact [H] buffer
+
+    @property
+    def H(self) -> int:
+        return int(sum(self.round_L))
+
+
+@dataclasses.dataclass
+class SstepEll:
+    """Depth-s ghost-zone operator: per-step ELL blocks + one exchange plan.
+
+    Shard p's extended address space is ``[0, R + G)``: owned rows at
+    their local offsets, ghost j (of the ascending-position ghost list)
+    at address ``R + j`` (``G`` is the max ghost count over shards; pad
+    slots beyond a shard's own ghost count are never referenced). Step i
+    of a group (0-indexed) holds the ELL rows whose outputs are still
+    needed — owned rows plus ghosts at BFS depth ≤ s-1-i; deeper ghost
+    rows are all-zero rows. Every row's entries are sorted by
+    ``(owner(col) != owner(row), owner(col), position(col))`` — for
+    owned rows that reproduces :class:`DistEll`'s slot order exactly,
+    and for ghost rows it reproduces the order of the row's HOME shard,
+    so each recurrence step accumulates in the same order everywhere and
+    the s-step engines agree bit-for-bit with the s=1 engines.
+
+    ``steps[i] = (cols, vals)`` with shapes [P, R+G, W_i]; the exchange
+    plan (``send_idx``/``pair_counts``/``gather_a2a``) covers the full
+    depth-s ghost set, so one exchange feeds all s recurrence steps of a
+    group. ``ghost_cum[d]`` is the max-over-shards count of ghosts at
+    depth ≤ d (the planner's redundant-work statistic).
+    """
+
+    steps: tuple  # s x (cols [P, R+G, W_i] int32, vals [P, R+G, W_i])
+    send_idx: jax.Array    # [P, P, L] int32 local rows to ship (depth-s)
+    gather_a2a: jax.Array  # [P, G] int32 into the padded [P*L] a2a buffer
+    R: int
+    G: int
+    L: int
+    P: int
+    D: int
+    s: int
+    n_vc: np.ndarray | None = None          # per-shard ghost counts
+    pair_counts: np.ndarray | None = None   # [P, P] depth-s volumes L_qp
+    ghost_cum: tuple | None = None          # [s+1] max ghosts at depth <= d
+    ghost_owner: np.ndarray | None = None   # [P, G] host: owner of ghost j
+    ghost_rank: np.ndarray | None = None    # [P, G] host: rank within pair
+    cols_loc: np.ndarray | None = None  # [P, R, W_loc] step-0 local prefix
+    vals_loc: np.ndarray | None = None
+    cols_post: np.ndarray | None = None  # [P, R+G, W_post] step-0 remainder
+    vals_post: np.ndarray | None = None
+    nbr: dict | None = None  # schedule name -> SstepNeighbor (cached)
+    rowmap: RowMap | None = None
+
+    def n_groups(self, degree: int) -> int:
+        """ceil(degree / s) exchanges for a degree-term filter."""
+        return -(-int(degree) // self.s)
+
+    def split(self):
+        """Step-0 split for the overlap engine: ``(cols_loc, vals_loc)``
+        is the owned rows' local-address prefix (contracted while the
+        exchange is in flight), ``(cols_post, vals_post)`` the owned
+        rows' ghost-address suffix plus the full ghost rows — contracted
+        against the extended vector afterwards, threading the
+        accumulator, so the per-row summand order is unchanged."""
+        if self.cols_loc is not None:
+            return self.cols_loc, self.vals_loc, self.cols_post, self.vals_post
+        cols = np.asarray(self.steps[0][0])
+        vals = np.asarray(self.steps[0][1])
+        Pn, RG, W = cols.shape
+        R = self.R
+        stored = vals != 0
+        own_row = np.zeros((Pn, RG, 1), dtype=bool)
+        own_row[:, :R, :] = True
+        pre = stored & own_row & (cols < R)
+        post = stored & ~pre
+        W_loc = max(int(pre.sum(axis=2).max()) if W else 0, 1)
+        W_post = int(post.sum(axis=2).max()) if W else 0
+        cols_loc = np.zeros((Pn, R, W_loc), dtype=np.int32)
+        vals_loc = np.zeros((Pn, R, W_loc), dtype=vals.dtype)
+        cols_post = np.zeros((Pn, RG, W_post), dtype=np.int32)
+        vals_post = np.zeros((Pn, RG, W_post), dtype=vals.dtype)
+        for p in range(Pn):
+            for mask, carr, varr, nrows in (
+                (pre[p, :R], cols_loc[p], vals_loc[p], R),
+                (post[p], cols_post[p], vals_post[p], RG),
+            ):
+                rows_, slots = np.nonzero(mask)
+                if not len(rows_):
+                    continue
+                counts = np.bincount(rows_, minlength=nrows)
+                out_slot = np.arange(len(rows_)) - np.repeat(
+                    np.cumsum(counts) - counts, counts)
+                carr[rows_, out_slot] = cols[p, :nrows][rows_, slots]
+                varr[rows_, out_slot] = vals[p, :nrows][rows_, slots]
+        # cached as HOST arrays: split() may first run inside a jit trace
+        # (the group builders are lazy), and caching device arrays made
+        # under a trace would leak tracers into later traces.
+        self.cols_loc = cols_loc
+        self.vals_loc = vals_loc
+        self.cols_post = cols_post
+        self.vals_post = vals_post
+        return self.cols_loc, self.vals_loc, self.cols_post, self.vals_post
+
+    def neighbor_plan(self, schedule: str = "cyclic") -> SstepNeighbor:
+        """Compressed-engine rounds over the depth-s pair volumes; cached
+        per scheduler. The ghost gather indexes the compact buffer at
+        each scheduled pair's round offset, so the gathered block equals
+        the a2a engine's bit-for-bit."""
+        if self.nbr is None:
+            self.nbr = {}
+        plan = self.nbr.get(schedule)
+        if plan is not None:
+            return plan
+        if self.pair_counts is None:
+            raise ValueError("compressed s-step engine needs per-pair "
+                             "volumes (pair_counts=None)")
+        perms, round_L = neighbor_schedule(self.pair_counts, schedule)
+        off_by_pair = np.full((self.P, self.P), -1, dtype=np.int64)
+        H = 0
+        for perm, Lk in zip(perms, round_L):
+            for src, dst in perm:
+                off_by_pair[src, dst] = H
+            H += Lk
+        send_idx = np.asarray(self.send_idx)
+        send_nbr = np.zeros((self.P, max(H, 1)), dtype=np.int32)
+        off = 0
+        for perm, Lk in zip(perms, round_L):
+            for src, dst in perm:
+                send_nbr[src, off:off + Lk] = send_idx[src, dst, :Lk]
+            off += Lk
+        gather = np.zeros((self.P, self.G), dtype=np.int32)
+        for p in range(self.P):
+            ng = int(self.n_vc[p])
+            if ng:
+                own = self.ghost_owner[p, :ng]
+                offg = off_by_pair[own, p]
+                assert (offg >= 0).all(), "ghost with unscheduled sender"
+                gather[p, :ng] = (offg + self.ghost_rank[p, :ng]
+                                  ).astype(np.int32)
+        plan = SstepNeighbor(perms=perms, round_L=round_L,
+                             send_nbr=send_nbr, gather=gather)
+        self.nbr[schedule] = plan
+        return plan
+
+    def as_dist_ell(self) -> DistEll:
+        """s=1 round trip: the depth-1 ghost operator re-expressed in
+        :class:`DistEll`'s halo addressing (``R + owner*L + rank``) —
+        bit-identical to ``build_dist_ell`` by construction (same per-row
+        slot order, same send plan, same widths)."""
+        if self.s != 1:
+            raise ValueError("as_dist_ell requires s == 1")
+        cols = np.array(np.asarray(self.steps[0][0])[:, :self.R, :],
+                        dtype=np.int32)
+        vals = np.asarray(self.steps[0][1])[:, :self.R, :]
+        for p in range(self.P):
+            m = cols[p] >= self.R
+            if m.any():
+                j = cols[p][m] - self.R
+                cols[p][m] = (self.R + self.ghost_owner[p, j] * self.L
+                              + self.ghost_rank[p, j]).astype(np.int32)
+        return DistEll(cols=jnp.asarray(cols), vals=jnp.asarray(vals),
+                       send_idx=self.send_idx, R=self.R, L=self.L,
+                       P=self.P, D=self.D, n_vc=self.n_vc,
+                       pair_counts=self.pair_counts, rowmap=self.rowmap)
+
+
+def build_sstep_ell(
+    matrix: MatrixFamily | CSR,
+    P_row: int,
+    sstep: int,
+    dtype=None,
+    d_pad: int | None = None,
+    split_halo: bool = False,
+    rowmap: RowMap | None = None,
+) -> SstepEll:
+    """Build the depth-``sstep`` ghost-zone operator for P_row shards.
+
+    BFS over the pattern from each shard's rows collects the depth-s
+    ghost set (:func:`sstep_ghosts`); the exchange plan ships it in ONE
+    collective per group of s recurrence steps, and per-step ELL blocks
+    over the extended address space ``[0, R + G)`` apply the operator to
+    owned + still-needed ghost rows. ``sstep=1`` reproduces today's
+    :class:`DistEll` bit-exactly (see :meth:`SstepEll.as_dist_ell`).
+    Accepts the same ``rowmap`` planned decompositions as
+    ``build_dist_ell`` — the BFS runs in position space.
+    """
+    s = int(sstep)
+    if s < 1:
+        raise ValueError(f"sstep must be >= 1 (got {sstep})")
+    D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
+    pos = None
+    if rowmap is not None:
+        if rowmap.D != D:
+            raise ValueError("rowmap.D does not match the matrix")
+        if d_pad is not None and d_pad != rowmap.D_pad:
+            raise ValueError(f"d_pad={d_pad} conflicts with the rowmap's "
+                             f"D_pad={rowmap.D_pad}")
+        if rowmap.identity:
+            R = Partition(D, P_row, rowmap.D_pad).R
+        else:
+            R = rowmap.level_R(P_row)
+            pos = rowmap.pos
+    else:
+        R = Partition(D, P_row, d_pad).R
+    D_pos = P_row * R
+
+    if isinstance(matrix, CSR):
+        rows, cols, vals = _csr_rows(matrix, 0, D)
+    else:
+        rows, cols, vals = matrix.row_entries(np.arange(D, dtype=np.int64))
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        vals = np.asarray(vals)
+    if pos is not None:
+        rows = pos[rows]
+        cols = pos[cols]
+    # stable (position-row, position-col) sort: duplicate entries keep
+    # their fetch order, exactly like build_dist_ell's per-shard lexsort
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    indptr = np.zeros(D_pos + 1, dtype=np.int64)
+    indptr[1:] = np.cumsum(np.bincount(rows, minlength=D_pos))
+
+    ghosts = sstep_ghosts(indptr, cols, P_row, R, s)
+    n_vc = np.array([g.size for g, _ in ghosts], dtype=np.int64)
+    G = int(n_vc.max()) if len(n_vc) else 0
+
+    # depth-s exchange plan: true per-pair volumes, within-pair slots in
+    # ascending position order (= DistEll's need-set order at s=1)
+    pair_counts = np.zeros((P_row, P_row), dtype=np.int64)
+    for p, (gpos, _) in enumerate(ghosts):
+        if gpos.size:
+            pair_counts[:, p] = np.bincount(gpos // R, minlength=P_row)
+    L = int(pair_counts.max()) if pair_counts.size else 0
+    send_idx = np.zeros((P_row, P_row, L), dtype=np.int32)
+    ghost_owner = np.zeros((P_row, G), dtype=np.int64)
+    ghost_rank = np.zeros((P_row, G), dtype=np.int64)
+    for p, (gpos, _) in enumerate(ghosts):
+        if not gpos.size:
+            continue
+        own = gpos // R
+        starts = np.searchsorted(own, np.arange(P_row))
+        rank = np.arange(gpos.size) - starts[own]
+        for q in np.unique(own):
+            m = own == q
+            send_idx[int(q), p, :int(m.sum())] = (gpos[m] - int(q) * R
+                                                  ).astype(np.int32)
+        ghost_owner[p, :gpos.size] = own
+        ghost_rank[p, :gpos.size] = rank
+    gather_a2a = (ghost_owner * L + ghost_rank).astype(np.int32)
+
+    cum = np.zeros((max(P_row, 1), s + 1), dtype=np.int64)
+    for p, (_, gdep) in enumerate(ghosts):
+        for d in range(1, s + 1):
+            cum[p, d] = int((gdep <= d).sum())
+    ghost_cum = tuple(int(v) for v in cum.max(axis=0))
+
+    # per-shard entry lists for every row that is an OUTPUT of some step
+    # (owned rows + ghosts at depth <= s-1), sorted per row by the
+    # universal (owner != row_owner, owner, position) key
+    from ..matrices.sparse import gather_row_entry_idx
+
+    shard_data = []
+    for p, (gpos, gdep) in enumerate(ghosts):
+        inc = gdep <= s - 1
+        inc_pos = np.concatenate([np.arange(p * R, (p + 1) * R,
+                                            dtype=np.int64), gpos[inc]])
+        inc_ext = np.concatenate([np.arange(R, dtype=np.int64),
+                                  R + np.nonzero(inc)[0]])
+        inc_owner = np.concatenate([np.full(R, p, dtype=np.int64),
+                                    gpos[inc] // R])
+        inc_depth = np.concatenate([np.zeros(R, dtype=np.int64), gdep[inc]])
+        gather, counts = gather_row_entry_idx(indptr, inc_pos)
+        e_cols = cols[gather]
+        e_vals = vals[gather]
+        e_row = np.repeat(inc_ext, counts)
+        e_rowner = np.repeat(inc_owner, counts)
+        e_depth = np.repeat(inc_depth, counts)
+        e_own = e_cols // R
+        local_m = e_own == p
+        e_addr = np.empty(e_cols.size, dtype=np.int64)
+        e_addr[local_m] = e_cols[local_m] - p * R
+        if (~local_m).any():
+            rc = e_cols[~local_m]
+            idx = np.searchsorted(gpos, rc)
+            ok = (idx < gpos.size) & (gpos[np.minimum(idx, max(gpos.size - 1,
+                                                               0))] == rc)
+            if not ok.all():
+                raise AssertionError("s-step BFS closure violated: an "
+                                     "output row references a position "
+                                     "outside the depth-s ghost zone")
+            e_addr[~local_m] = R + idx
+        remote_flag = (e_own != e_rowner).astype(np.int64)
+        e_order = np.lexsort((e_cols, e_own, remote_flag, e_row))
+        e_row = e_row[e_order]
+        e_addr = e_addr[e_order]
+        e_vals = e_vals[e_order]
+        e_depth = e_depth[e_order]
+        rcounts = np.bincount(e_row, minlength=R + G)
+        slot = np.arange(e_row.size) - np.repeat(
+            np.cumsum(rcounts) - rcounts, rcounts)
+        shard_data.append((e_row, e_addr, e_vals, e_depth, slot))
+
+    vdtype = np.dtype(dtype) if dtype is not None else vals.dtype
+    steps = []
+    for i in range(s):
+        lim = s - 1 - i
+        W_i = 0
+        for e_row, e_addr, e_vals, e_depth, slot in shard_data:
+            m = e_depth <= lim
+            if m.any():
+                W_i = max(W_i, int(slot[m].max()) + 1)
+        ci = np.zeros((P_row, R + G, W_i), dtype=np.int32)
+        vi = np.zeros((P_row, R + G, W_i), dtype=vdtype)
+        for p, (e_row, e_addr, e_vals, e_depth, slot) in enumerate(
+                shard_data):
+            m = e_depth <= lim
+            ci[p, e_row[m], slot[m]] = e_addr[m]
+            vi[p, e_row[m], slot[m]] = e_vals[m].astype(vdtype)
+        steps.append((jnp.asarray(ci), jnp.asarray(vi)))
+
+    sell = SstepEll(
+        steps=tuple(steps),
+        send_idx=jnp.asarray(send_idx),
+        gather_a2a=jnp.asarray(gather_a2a),
+        R=R, G=G, L=L, P=P_row, D=D, s=s,
+        n_vc=n_vc,
+        pair_counts=pair_counts,
+        ghost_cum=ghost_cum,
+        ghost_owner=ghost_owner,
+        ghost_rank=ghost_rank,
+        rowmap=rowmap,
+    )
+    if split_halo:
+        sell.split()
+    return sell
+
+
+def _build_sstep_group(mesh: Mesh, layout: Layout, sell: SstepEll, *,
+                       n_steps: int, first: bool, use_kernel: bool,
+                       overlap: bool, comm: str, schedule: str):
+    """One fused s-step GROUP: a single depth-s ghost exchange followed by
+    ``n_steps`` three-term recurrence steps applied on the extended block.
+
+    The first group ships only ``V`` (the recurrence seeds off one
+    vector); later groups ship ``[w1 | w2]`` width-doubled in the same
+    collective, so a degree-n filter runs ⌈n/s⌉ exchanges total. Step i
+    contracts the step-i ELL (outputs valid at depth ≤ s-1-i), applies
+    the same fused epilogue expression as the s=1 engines, and shifts
+    the recurrence carries — all inside one shard_map body. The owned
+    slices of the step outputs come back STACKED (``[n_steps, R, nb]``
+    per shard) so the μ-accumulation runs in the caller's main graph
+    with exactly the same op tree as :func:`chebyshev_filter` — keeping
+    XLA's fused-multiply-add formation, and therefore the bits,
+    identical to the s=1 engines. With ``overlap=True`` the
+    exchange is launched first and step 0's local prefix contracts while
+    the ghost bytes fly (steps >= 1 have a data dependence on the ghosts
+    and cannot overlap anything). With ``use_kernel=True`` step 0's
+    block dispatches to the Pallas ``ell_gather`` tile kernel.
+    """
+    _validate_engine(comm, schedule)
+    dist = layout.dist_axes
+    vec_spec = layout.vec_pspec()
+
+    def pspec(a):
+        return P(dist if dist else None, *((None,) * (a.ndim - 1)))
+
+    kops = None
+    if use_kernel:
+        from ..kernels import ops as kops_mod
+
+        kops = kops_mod
+
+    R, G = sell.R, sell.G
+    has_halo = sell.P > 1 and G > 0
+    nbrp = sell.neighbor_plan(schedule) if comm == "compressed" else None
+    if comm == "compressed":
+        ex_args = [nbrp.send_nbr, nbrp.gather]
+    else:
+        ex_args = [sell.send_idx, sell.gather_a2a]
+
+    later = [a for cv in sell.steps[1:n_steps] for a in cv]
+    if overlap:
+        cl, vl, cpost, vpost = sell.split()
+        tiles_plan = kops.plan_ell_tiles(cl, vl, R) if use_kernel else None
+        step0 = [cl, vl, cpost, vpost]
+    else:
+        c0, v0 = sell.steps[0]
+        tiles_plan = (kops.plan_ell_tiles(c0, v0, R + G)
+                      if use_kernel else None)
+        step0 = [c0, v0]
+    tile_args = list(tiles_plan.arrays()) if tiles_plan else []
+    args = ex_args + step0 + later + tile_args
+    n_ex = len(ex_args)
+    n0 = n_ex + len(step0)
+    n_later = 2 * (n_steps - 1)
+    n_args = len(args)
+
+    def group_dev(w1, w2, a, b, dev):
+        ex = dev[:n_ex]
+        sarrs = dev[n_ex:n0]
+        later_arrs = dev[n0:n0 + n_later]
+        tiles = _dev_tiles(tiles_plan, dev[n0 + n_later:])
+        nb = w1.shape[1]
+        adt = jnp.result_type(sarrs[1].dtype, w1.dtype)
+        payload = w1 if first else jnp.concatenate([w1, w2], axis=1)
+        if has_halo:
+            if comm == "compressed":
+                send_nbr, gather = ex
+                buf = _halo_exchange_nbr(payload, send_nbr, dist,
+                                         nbrp.perms, nbrp.round_L)
+            else:
+                send_idx, gather = ex
+                buf = lax.all_to_all(
+                    jnp.take(payload, send_idx, axis=0), dist,
+                    split_axis=0, concat_axis=0, tiled=False,
+                ).reshape(sell.P * sell.L, payload.shape[1])
+
+        def take_ghosts():
+            if has_halo:
+                return jnp.take(buf, gather, axis=0)  # [G, payload width]
+            return jnp.zeros((G, payload.shape[1]), dtype=payload.dtype)
+
+        if overlap:
+            cl_, vl_, cpost_, vpost_ = sarrs
+            # local prefix contracts while the ghost exchange is in flight
+            y_pre = _contract_block(jnp.zeros((R, nb), dtype=adt),
+                                    cl_, vl_, w1, tiles)
+            ghosts = take_ghosts()
+            w1e = jnp.concatenate([w1, ghosts[:, :nb]], axis=0)
+            w2e = (None if first
+                   else jnp.concatenate([w2, ghosts[:, nb:]], axis=0))
+            y = jnp.concatenate([y_pre, jnp.zeros((G, nb), dtype=adt)],
+                                axis=0)
+            if cpost_.shape[1]:
+                y = _ell_contract(y, cpost_, vpost_, w1e)
+        else:
+            c0_, v0_ = sarrs
+            ghosts = take_ghosts()
+            w1e = jnp.concatenate([w1, ghosts[:, :nb]], axis=0)
+            w2e = (None if first
+                   else jnp.concatenate([w2, ghosts[:, nb:]], axis=0))
+            y = _contract_block(jnp.zeros((R + G, nb), dtype=adt),
+                                c0_, v0_, w1e, tiles)
+
+        ts = []
+        for i in range(n_steps):
+            if i:
+                ci, vi = later_arrs[2 * (i - 1)], later_arrs[2 * i - 1]
+                y = _ell_contract(jnp.zeros((R + G, nb), dtype=adt),
+                                  ci, vi, w1e)
+            if first and i == 0:
+                t = a * y + b * w1e
+            else:
+                t = 2.0 * a * y + 2.0 * b * w1e - w2e
+            ts.append(t[:R])
+            w2e, w1e = w1e, t
+        return jnp.stack(ts), w1e[:R], w2e[:R]
+
+    plan_specs = tuple(pspec(a) for a in args)
+    vec_in = (vec_spec,) if first else (vec_spec, vec_spec)
+    stk_spec = P(None, *tuple(vec_spec))
+
+    def local_fn(*ins):
+        dev = [a[0] for a in ins[:n_args]]
+        if first:
+            w1, a, b = ins[n_args:]
+            return group_dev(w1, None, a, b, dev)
+        w1, w2, a, b = ins[n_args:]
+        return group_dev(w1, w2, a, b, dev)
+
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=plan_specs + vec_in + (P(), P()),
+        out_specs=(stk_spec, vec_spec, vec_spec),
+        check_rep=False,
+    )
+
+    if first:
+        def group1(V, alpha, beta):
+            rdt = jnp.zeros((), dtype=V.dtype).real.dtype
+            a = jnp.asarray(alpha, dtype=rdt)
+            b = jnp.asarray(beta, dtype=rdt)
+            return fn(*args, V, a, b)
+
+        return group1
+
+    def group(w1, w2, alpha, beta):
+        rdt = jnp.zeros((), dtype=w1.dtype).real.dtype
+        a = jnp.asarray(alpha, dtype=rdt)
+        b = jnp.asarray(beta, dtype=rdt)
+        return fn(*args, w1, w2, a, b)
+
+    return group
+
+
+def make_sstep_cheb(mesh: Mesh, layout: Layout, sell: SstepEll, *,
+                    use_kernel: bool = False, overlap: bool = False,
+                    comm: str = "a2a", schedule: str = "cyclic"):
+    """Communication-avoiding Chebyshev filter application (seventh engine
+    axis, ``spmv_sstep = sell.s``): ``apply(V, mu, alpha, beta)`` runs
+    the whole degree-n filter in ⌈n/s⌉ depth-s ghost exchanges — s
+    three-term recurrence steps per exchange — instead of n per-SpMV
+    halo exchanges. Composes with the comm engine (``a2a`` /
+    ``compressed`` + scheduler), the overlap split of step 0, and the
+    Pallas tile kernel, and agrees bit-for-bit with every s=1 engine.
+    ``s == 1`` callers should use :func:`make_fused_cheb_step` /
+    :func:`make_spmv` (one exchange per step IS the s=1 engine)."""
+    from .chebyshev import chebyshev_filter_sstep
+
+    if sell.s < 2:
+        raise ValueError("make_sstep_cheb requires s >= 2; the s=1 axis "
+                         "point is the existing make_spmv engine grid")
+    cache: dict = {}
+
+    def factory(n_steps: int, first: bool):
+        key = (int(n_steps), bool(first))
+        if key not in cache:
+            cache[key] = _build_sstep_group(
+                mesh, layout, sell, n_steps=key[0], first=key[1],
+                use_kernel=use_kernel, overlap=overlap, comm=comm,
+                schedule=schedule)
+        return cache[key]
+
+    def apply(V, mu, alpha, beta):
+        return chebyshev_filter_sstep(factory, mu, alpha, beta, V, sell.s)
+
+    return apply

@@ -16,6 +16,8 @@ Usage:
       --spmv-comm compressed --spmv-schedule matching --plan
   PYTHONPATH=src python -m repro.launch.dryrun --eigen hubnet48k --layout panel \
       --spmv-comm compressed --spmv-schedule matching --spmv-balance commvol --plan
+  PYTHONPATH=src python -m repro.launch.dryrun --eigen hubnet48k --layout panel \
+      --spmv-sstep 2 --verify
   PYTHONPATH=src python -m repro.launch.dryrun --fit-machine --fit-out machine_fit.json
 """
 import os
@@ -172,6 +174,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               plan: bool = False, spmv_comm: str = "a2a",
               spmv_schedule: str = "cyclic", spmv_balance: str = "rows",
               spmv_reorder: str = "none", spmv_kernel: bool = False,
+              spmv_sstep: int = 1,
               machine=None, verify: bool = False) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
@@ -210,6 +213,16 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     design — the lowered collectives (and hence every predicted ==
     measured check) are identical to the kernel-off cell, which is
     exactly the census contract the kernels must keep.
+
+    ``spmv_sstep > 1`` lowers the communication-avoiding s-step filter
+    cell (the ``+s2``/``+s3`` suffixes): the surrogate carries the real
+    pattern's depth-s ghost plan (``comm_plan(..., sstep=s)``), the
+    filter runs ⌈degree/s⌉ depth-s exchanges — a single-width seed
+    exchange plus width-doubled ``[w1 | w2]`` group exchanges — and the
+    ``--verify`` census attributes every one of them to the χ(A^s)
+    terms of ``SpmvCommPlan.sstep_collectives``. s-step cells lower the
+    plain (non-overlap) engine only, and need the exact pattern pass
+    (requests it cannot honor are relabeled back to ``s = 1``).
 
     ``plan=True`` adds the χ-driven planner panel: the full candidate
     ranking (``core/planner.py``) for this matrix on the production mesh,
@@ -323,6 +336,41 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                           for k in range(1, N_row))
             round_L = (L,) * (N_row - 1)
     H = int(sum(round_L))
+
+    # communication-avoiding s-step cell (the +s2/+s3 suffixes): the
+    # surrogate carries the real pattern's depth-s ghost plan so the
+    # lowered ⌈degree/s⌉ exchanges (one single-width seed + width-doubled
+    # group payloads) are the engine's true wire footprint. Plain engine
+    # only; requests the exact pattern pass cannot honor fall back to
+    # the per-step cell so the record never claims an s that did not
+    # lower.
+    sstep = max(int(spmv_sstep), 1)
+    if sstep > 1 and overlap:
+        raise ValueError("s-step dry-run cells lower the plain engine "
+                         "only (drop the '+ov' layout suffix)")
+    if sstep > 1 and N_row <= 1:
+        sstep = 1  # comm-free layout: every s is the same cell
+    if sstep > 1 and rowmap is None and not exact_comm_default(fam):
+        if verbose:
+            print(f"[dryrun-eigen] {name}: depth-{sstep} ghost plan needs "
+                  "the exact pattern pass — relabeling to s=1")
+        sstep = 1
+    cp_s = None
+    G_s = L_s = 0
+    perms_s, round_L_s = (), ()
+    if sstep > 1:
+        cp_s = (_comm_plan(fam, N_row, rowmap=rowmap, sstep=sstep)
+                if rowmap is not None
+                else _comm_plan(fam, N_row, d_pad=D_pad, sstep=sstep))
+        G_s = int(cp_s.n_vc.max())
+        L_s = int(cp_s.L)
+        if G_s == 0:
+            sstep, cp_s = 1, None  # no halo at this split
+        elif compressed:
+            perms_s, round_L_s = cp_s.permute_schedule(spmv_schedule)
+            perms, round_L = perms_s, round_L_s  # the lowered schedule
+            H = int(sum(round_L_s))
+
     ell_spec = dict(
         cols=jax.ShapeDtypeStruct((N_row, R, W), jnp.int32),
         vals=jax.ShapeDtypeStruct((N_row, R, W), dt),
@@ -374,6 +422,30 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         Vp = chebyshev_filter(spmv, mu, alpha, beta, Vp)
         return to_stack(Vp)
 
+    def fd_iteration_ss(V, mu, alpha, beta, ex_a, ex_b, *steps_flat):
+        # depth-s surrogate: the per-step ELL blocks and the exchange
+        # plan arrive as jit arguments; the compressed schedule's host
+        # rounds (perms_s/round_L_s) are planted so neighbor_plan never
+        # touches tracer pair counts
+        steps = tuple((steps_flat[2 * i], steps_flat[2 * i + 1])
+                      for i in range(sstep))
+        nbr = None
+        if compressed:
+            nbr = {spmv_schedule: spmv_mod.SstepNeighbor(
+                perms=perms_s, round_L=round_L_s,
+                send_nbr=ex_a, gather=ex_b)}
+        sell = spmv_mod.SstepEll(steps=steps, send_idx=ex_a, gather_a2a=ex_b,
+                                 R=R, G=G_s, L=L_s, P=N_row, D=D, s=sstep,
+                                 nbr=nbr)
+        cheb = spmv_mod.make_sstep_cheb(mesh, panel_l, sell,
+                                        comm=spmv_comm,
+                                        schedule=spmv_schedule,
+                                        use_kernel=spmv_kernel)
+        Q, _ = tsqr(V)
+        Vp = to_panel(Q)
+        Vp = cheb(Vp, mu, alpha, beta)
+        return to_stack(Vp)
+
     V = jax.ShapeDtypeStruct((D_pad, n_s), dt)
     mu = jax.ShapeDtypeStruct((degree + 1,), jnp.float32)
     dist = panel_l.dist_axes
@@ -383,7 +455,27 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     scalar = jax.ShapeDtypeStruct((), jnp.float32)
     with mesh:
         vsh = jax.NamedSharding(mesh, stack_l.vec_pspec())
-        if overlap:
+        if sstep > 1:
+            S = jax.ShapeDtypeStruct
+            if compressed:
+                ex_specs = (S((N_row, max(H, 1)), jnp.int32),
+                            S((N_row, G_s), jnp.int32))
+                ex_sh = (send_sh, send_sh)
+            else:
+                ex_specs = (S((N_row, N_row, L_s), jnp.int32),
+                            S((N_row, G_s), jnp.int32))
+                ex_sh = (plan_sh, send_sh)
+            step_specs = tuple(
+                spec for _ in range(sstep)
+                for spec in (S((N_row, R + G_s, W), jnp.int32),
+                             S((N_row, R + G_s, W), dt)))
+            jitted = jax.jit(fd_iteration_ss,
+                             in_shardings=(vsh, None, None, None) + ex_sh
+                             + (plan_sh,) * (2 * sstep),
+                             out_shardings=vsh, donate_argnums=(0,))
+            lowered = jitted.lower(V, mu, scalar, scalar,
+                                   *ex_specs, *step_specs)
+        elif overlap:
             jitted = jax.jit(fd_iteration_ov,
                              in_shardings=(vsh, None, None, None)
                              + (plan_sh,) * 5 + (send_sh,),
@@ -414,10 +506,12 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     part_tag = ("+cv" if spmv_balance == "commvol" else "") + \
         ("+rcm" if spmv_reorder == "rcm" else "")
     krn_tag = "+krn" if spmv_kernel else ""
+    ss_tag = f"+s{sstep}" if sstep > 1 else ""
     rec = {
         "arch": name,
         "shape": (f"fd_iter[{layout_name}{part_tag}{cmp_tag}"
-                  f"{'+ov' if overlap else ''}{krn_tag},Ns={n_s},deg={degree}]"),
+                  f"{'+ov' if overlap else ''}{krn_tag}{ss_tag},"
+                  f"Ns={n_s},deg={degree}]"),
         "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": mesh.devices.size,
         "status": "ok", "t_lower_s": round(t_lower, 1),
         "t_compile_s": round(t_compile, 1), "memory": mem,
@@ -425,9 +519,14 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         "chi_comm_plan_L": int(L), "n_vc_max": int(n_vc.max()) if N_row > 1 else 0,
         "spmv_comm": spmv_comm, "spmv_schedule": spmv_schedule,
         "spmv_balance": spmv_balance, "spmv_reorder": spmv_reorder,
-        "spmv_kernel": spmv_kernel,
+        "spmv_kernel": spmv_kernel, "spmv_sstep": sstep,
         "nbr_H": H, "nbr_rounds": len(perms),
     }
+    if sstep > 1:
+        rec["sstep_L"] = L_s
+        rec["sstep_ghosts_max"] = G_s
+        rec["sstep_groups"] = cp_s.n_groups(degree)
+        rec["sstep_work_factor"] = round(cp_s.sstep_work_factor(), 4)
     if verify:
         # static communication verifier (repro.analysis): attribute every
         # collective in the compiled HLO to a χ-predicted term and lint
@@ -441,7 +540,16 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         S_cell = jnp.dtype(dt).itemsize
         n_b_cell = max(n_s // max(n_col, 1), 1)
         terms = []
-        if N_row > 1 and L > 0:
+        if sstep > 1:
+            # χ(A^s) attribution: one single-width seed exchange plus
+            # ⌈degree/s⌉ - 1 width-doubled group exchanges, already
+            # whole-filter terms (sstep_collectives is NOT degree-scaled)
+            for k, (kind, byts, cnt) in enumerate(cp_s.sstep_collectives(
+                    spmv_comm, spmv_schedule, n_b_cell, S_cell, degree)):
+                terms.append(ExpectedTerm(
+                    f"sstep-exchange[{spmv_comm}/s{sstep}#{k}]",
+                    kind, int(byts), cnt))
+        elif N_row > 1 and L > 0:
             if compressed:
                 for Lk in round_L:
                     terms.append(ExpectedTerm(
@@ -463,7 +571,11 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                     f"redistribute[{leg}]", "all-to-all", full, 1,
                     alt_bytes=(full * (n_col - 1) // n_col,)))
         extra = []
-        if cp_nbr is not None and cp_nbr.pair_counts is not None and perms:
+        if sstep > 1 and perms_s:
+            # lint the depth-s rounds against the depth-s pair volumes
+            extra = lint_rounds(cp_s.pair_counts, perms_s, round_L_s,
+                                label=f"{name}/{spmv_schedule}+s{sstep}")
+        elif cp_nbr is not None and cp_nbr.pair_counts is not None and perms:
             extra = lint_rounds(cp_nbr.pair_counts, perms, round_L,
                                 label=f"{name}/{spmv_schedule}")
         report = attribute(collective_census(compiled.as_text()), terms,
@@ -533,6 +645,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                            machine=machine or _pm.TPU_V5E,
                            reorder=tuple(dict.fromkeys(
                                ("none", spmv_reorder))),
+                           sstep=tuple(dict.fromkeys((1, sstep))),
                            comm_plan_by_row=None
                            if cp_nbr is None or rowmap is not None
                            else {N_row: cp_nbr},
@@ -573,8 +686,14 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
         # plus 2 redistributions (full local slice; Eq. 17/18 is the moved
         # subset — XLA prints either convention, so report both)
         n_b_cell = n_s // max(n_col, 1)
-        spmv_entries = (H if compressed else N_row * L) if N_row > 1 else 0
-        pred_spmv = degree * spmv_entries * n_b_cell * S_cell
+        if sstep > 1:
+            # whole-filter depth-s exchange bytes (seed + doubled groups)
+            pred_spmv = sum(b * c for _, b, c in cp_s.sstep_collectives(
+                spmv_comm, spmv_schedule, n_b_cell, S_cell, degree))
+        else:
+            spmv_entries = (H if compressed else N_row * L) \
+                if N_row > 1 else 0
+            pred_spmv = degree * spmv_entries * n_b_cell * S_cell
         # TSQR butterfly: log2(P) ppermute rounds of the N_s x N_s R factor
         # (orthogonalize.py) — counted with the SpMV permutes by the HLO
         # parse, so predict it too
@@ -618,7 +737,8 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     if verbose:
         print(f"[dryrun-eigen] {name} "
               f"[{layout_name}{part_tag}{cmp_tag}"
-              f"{'+ov' if overlap else ''}{krn_tag}] on {rec['mesh']}: OK "
+              f"{'+ov' if overlap else ''}{krn_tag}{ss_tag}] "
+              f"on {rec['mesh']}: OK "
               f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
         if "overlap_model_speedup" in rec:
             print(f"  perf model/iter: additive={rec['t_model_additive_s']*1e3:.2f}ms "
@@ -647,12 +767,20 @@ def fit_machine(eigen: str | None = None, out_path: str = "machine_fit.json",
 
     Runs the real fused Chebyshev step (baseline a2a engine) of a small
     matrix instance across several mesh splits on ``n_devices`` local
-    devices, times each, and least-squares fits b_c and κ via
-    ``MachineModel.fit`` (b_m is kept from the TPU_V5E base — the paper
-    fixes b_m from STREAM and fits the rest the same way). The fitted
-    model is saved as JSON for ``solve --machine <path>`` /
-    ``dryrun --plan --machine <path>``, so planner rankings can use
-    calibrated constants instead of the hardcoded MEGGIE/TPU_V5E numbers.
+    devices, times each, and least-squares fits b_c, κ and the
+    per-round launch latency α via ``MachineModel.fit`` (b_m is kept
+    from the TPU_V5E base — the paper fixes b_m from STREAM and fits
+    the rest the same way). Every sample carries its collective round
+    count (one a2a per fused step when N_row > 1), and each halo split
+    is timed twice — at the full block width and at a *tiny* width-n_col
+    block whose wire bytes are negligible but whose round count is
+    unchanged — so the α column is not collinear with the χ·bytes
+    column and the latency term is identifiable (see
+    ``MachineModel.fit``). The fitted model is saved as JSON for
+    ``solve --machine <path>`` / ``dryrun --plan --machine <path>``, so
+    planner rankings (including the s-step axis, which only wins under
+    high α) can use calibrated constants instead of the hardcoded
+    MEGGIE/TPU_V5E numbers.
     """
     from ..core import perf_model as pm
     from ..core import spmv as spmv_mod
@@ -696,28 +824,37 @@ def fit_machine(eigen: str | None = None, out_path: str = "machine_fit.json",
         W1[:D] = rng.standard_normal((D, n_search))
         W2 = np.zeros_like(W1)
         W2[:D] = rng.standard_normal((D, n_search))
+        rounds = 1.0 if n_row > 1 else 0.0  # one a2a per fused step
         with mesh:
             sh = lay.vec_sharding(mesh)
-            w1 = jax.device_put(jnp.asarray(W1), sh)
-            w2 = jax.device_put(jnp.asarray(W2), sh)
             step = jax.jit(spmv_mod.make_fused_cheb_step(mesh, lay, ell))
-            y = step(w1, w2, 0.7, -0.2)
-            jax.block_until_ready(y)  # compile outside the timing
-            t0 = time.perf_counter()
-            for _ in range(reps):
+            # full-width cell + (on halo splits) a tiny width-n_col cell:
+            # same round count, negligible wire bytes — the contrast that
+            # makes the α latency column identifiable
+            widths = [n_search] + ([n_col] if n_row > 1 else [])
+            for width in widths:
+                w1 = jax.device_put(jnp.asarray(W1[:, :width]), sh)
+                w2 = jax.device_put(jnp.asarray(W2[:, :width]), sh)
                 y = step(w1, w2, 0.7, -0.2)
-            jax.block_until_ready(y)
-        t = (time.perf_counter() - t0) / reps
-        samples.append(dict(t=t, D=D, N_p=n_row, n_b=n_search // n_col,
-                            chi=chi_eng, n_nzr=n_nzr, S_d=S_d))
-        if verbose:
-            print(f"[fit-machine] {n_row}x{n_col}: chi_eng={chi_eng:.3f} "
-                  f"t={t * 1e6:.1f}us")
+                jax.block_until_ready(y)  # compile outside the timing
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    y = step(w1, w2, 0.7, -0.2)
+                jax.block_until_ready(y)
+                t = (time.perf_counter() - t0) / reps
+                samples.append(dict(t=t, D=D, N_p=n_row,
+                                    n_b=width // n_col, chi=chi_eng,
+                                    n_nzr=n_nzr, S_d=S_d, rounds=rounds))
+                if verbose:
+                    print(f"[fit-machine] {n_row}x{n_col} n_b="
+                          f"{width // n_col}: chi_eng={chi_eng:.3f} "
+                          f"rounds={rounds:g} t={t * 1e6:.1f}us")
     fitted = pm.MachineModel.fit(samples, b_m=base.b_m, name="fitted-local")
     pm.save_machine(fitted, out_path)
     if verbose:
         bc = fitted.b_c / 1e9 if fitted.b_c != float("inf") else float("inf")
         print(f"[fit-machine] fitted b_c={bc:.2f} GB/s kappa={fitted.kappa:.2f} "
+              f"alpha={fitted.alpha*1e6:.2f}us "
               f"(b_m fixed at {fitted.b_m/1e9:.0f} GB/s) -> {out_path}")
     return fitted
 
@@ -787,6 +924,18 @@ def main(argv=None):
                          "arrays are abstract, so the cell lowers the jnp "
                          "fallback with IDENTICAL collectives — the "
                          "kernel census contract (docs/kernels.md)")
+    ap.add_argument("--spmv-sstep", type=int, default=1,
+                    help="communication-avoiding s-step filter cell for "
+                         "--eigen (the '+s2'/'+s3' shape suffixes; "
+                         "--spmv-sstep of repro.launch.solve): the "
+                         "surrogate carries the real pattern's depth-s "
+                         "ghost plan and the lowered filter runs "
+                         "ceil(degree/s) exchanges — a single-width "
+                         "seed plus width-doubled [w1|w2] group "
+                         "payloads — instead of one per SpMV; with "
+                         "--verify every exchange is attributed to the "
+                         "chi(A^s) terms of sstep_collectives; plain "
+                         "(non-overlap) cells only")
     ap.add_argument("--plan", action="store_true",
                     help="with --eigen: print the χ-driven planner ranking "
                          "(core/planner.py) and the predicted vs HLO-measured "
@@ -835,6 +984,7 @@ def main(argv=None):
                                      spmv_balance=args.spmv_balance,
                                      spmv_reorder=args.spmv_reorder,
                                      spmv_kernel=args.spmv_kernel,
+                                     spmv_sstep=args.spmv_sstep,
                                      machine=machine, verify=args.verify))
         elif args.all:
             for arch, shape, cell in iter_cells():

@@ -73,7 +73,9 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
                            reorder=tuple(dict.fromkeys(
                                ("none", fd.spmv_reorder))),
                            kernel=tuple(dict.fromkeys(
-                               (False, fd.spmv_kernel))))
+                               (False, fd.spmv_kernel))),
+                           sstep=tuple(dict.fromkeys(
+                               (1, fd.spmv_sstep))))
         best = plan.best
         if verbose:
             print(plan.report())
@@ -82,7 +84,8 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
                   f"spmv_schedule={best.schedule}, "
                   f"spmv_balance={best.balance}, "
                   f"spmv_reorder={best.reorder}, "
-                  f"spmv_kernel={best.kernel})")
+                  f"spmv_kernel={best.kernel}, "
+                  f"spmv_sstep={best.sstep})")
         n_row, n_col = best.n_row, best.n_col
         # the chosen split realizes the planned layout; the winning
         # candidate's rowmap (planned at P = n_row·n_col) is handed to
@@ -93,7 +96,8 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
                                  spmv_schedule=best.schedule,
                                  spmv_balance=best.balance,
                                  spmv_reorder=best.reorder,
-                                 spmv_kernel=best.kernel)
+                                 spmv_kernel=best.kernel,
+                                 spmv_sstep=best.sstep)
     if n_row * n_col > n_dev:
         raise RuntimeError(f"mesh {n_row}x{n_col} needs {n_row*n_col} devices, "
                            f"have {n_dev}")
@@ -193,6 +197,21 @@ def main(argv=None):
                          "docs/kernels.md; with --layout auto an explicit "
                          "kernel request widens the planner's kernel "
                          "axis, scored with the fused kappa=5 term)")
+    ap.add_argument("--spmv-sstep", type=int, default=1,
+                    help="communication-avoiding s-step filter (seventh "
+                         "engine axis): apply the degree-n Chebyshev "
+                         "filter in ceil(n/s) depth-s ghost exchanges "
+                         "instead of n per-SpMV halo exchanges — the "
+                         "exchange ships the depth-s BFS ghost zone once "
+                         "and s recurrence steps run on the extended "
+                         "block (redundant ghost-row work, fewer "
+                         "latency-bound rounds; the dry-run's '+s2'/'+s3' "
+                         "cell suffixes; bit-identical to the s=1 engines "
+                         "— see docs/s-step.md). With --layout auto an "
+                         "explicit s > 1 widens the planner's s-step "
+                         "axis, scored with the alpha-latency machine "
+                         "term (s > 1 wins only when rounds, not bytes, "
+                         "dominate)")
     ap.add_argument("--machine", default="tpu-v5e",
                     help="machine model for --layout auto planning: "
                          "'tpu-v5e', 'meggie', or a path to a JSON model "
@@ -215,7 +234,8 @@ def main(argv=None):
                   spmv_schedule=args.spmv_schedule,
                   spmv_balance=args.spmv_balance,
                   spmv_reorder=args.spmv_reorder,
-                  spmv_kernel=args.spmv_kernel)
+                  spmv_kernel=args.spmv_kernel,
+                  spmv_sstep=args.spmv_sstep)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok,
                 machine=machine)

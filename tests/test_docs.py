@@ -55,6 +55,8 @@ def test_gate_detects_undocumented_and_broken_links(tmp_path):
     assert any("`spmv_reorder`" in e for e in errs)
     assert any("`--spmv-balance`" in e for e in errs)  # partition flags
     assert any("`--spmv-reorder`" in e for e in errs)
+    assert any("`spmv_sstep`" in e for e in errs)     # s-step axis
+    assert any("`--spmv-sstep`" in e for e in errs)
     link_errs = cd.check_docs_links()
     assert any("missing.md" in e for e in link_errs)
     assert any("#nope" in e for e in link_errs)
@@ -65,4 +67,6 @@ def test_gate_detects_undocumented_and_broken_links(tmp_path):
     assert any("docs/partitioning.md" in e and "does not exist" in e
                for e in doc_errs)
     assert any("docs/partitioning.md" in e and "referenced" in e
+               for e in doc_errs)
+    assert any("docs/s-step.md" in e and "does not exist" in e
                for e in doc_errs)
