@@ -43,10 +43,17 @@ exactly the communication the paper's χ model predicts:
      width-doubled exchanges for the remaining groups);
   4. **bench artifact schema** (``benchmarks/schema.py``): the merged
      ``BENCH_spmv.json`` trajectory validates, if present;
+  4b. **plan-cache lint** (``repro.service.plan_cache``): for each of the
+     three seed families, a plan served through the persistent cache must
+     equal the freshly planned one — candidate-for-candidate, RowMap
+     arrays included — and the second fetch must be a hit that never
+     re-invokes ``plan_layout``; a stale-plan bug in the service's cache
+     would silently pin every tenant to a wrong engine, so this runs in
+     ``--fast`` too;
   5. **linters**: ``ruff`` / ``mypy`` over ``src/repro/core`` +
-     ``src/repro/analysis`` when installed (skipped with a note when the
-     container lacks them), plus a built-in unused-import scan that
-     always runs.
+     ``src/repro/analysis`` + ``src/repro/service`` when installed
+     (skipped with a note when the container lacks them), plus a built-in
+     unused-import scan that always runs.
 
 Run standalone (fast subset, the tier-1 pre-commit loop)::
 
@@ -96,7 +103,8 @@ ENGINE_COMBOS = (
 )
 
 #: directories the linters (external and built-in) are scoped to
-LINT_DIRS = ("src/repro/core", "src/repro/analysis", "src/repro/kernels")
+LINT_DIRS = ("src/repro/core", "src/repro/analysis", "src/repro/kernels",
+             "src/repro/service")
 
 
 def _families(fast: bool):
@@ -396,6 +404,62 @@ def check_bench_schema() -> list[str]:
     return [f"bench-schema: {e}" for e in errs]
 
 
+def check_plan_cache(fast: bool = False) -> list[str]:
+    """Section 4b: cached plan == freshly planned plan, seed families.
+
+    Round-trips each family's plan through a real on-disk store and
+    through ``cached_plan_layout``'s hit path, requiring (a) hit status
+    with zero extra planner calls, (b) candidate-for-candidate equality
+    (the frozen scalar fields), (c) byte-equal RowMap arrays behind every
+    planned-partition candidate — the exact objects the service hands the
+    solver on a hit.
+    """
+    import tempfile
+
+    import numpy as np
+
+    from repro.matrices import HubNet, RoadNet, SpinChainXXZ
+    from repro.service.plan_cache import PlanCache, cached_plan_layout
+
+    del fast  # the cache contract is cheap and load-bearing: always full
+    errors: list[str] = []
+    fams = [("SpinChainXXZ(10,5)", SpinChainXXZ(10, 5)),
+            ("RoadNet-small", RoadNet(**ROADNET_SMALL)),
+            ("HubNet-small", HubNet(**HUBNET_SMALL))]
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = PlanCache(os.path.join(tmp, "plans.json"))
+        for name, matrix in fams:
+            D = matrix.D
+            kw = dict(n_search=16, d_pad=-(-D // 8) * 8)
+            fresh, hit0 = cached_plan_layout(matrix, 8, cache=cache, **kw)
+            calls_before = cache.plan_calls
+            cached, hit1 = cached_plan_layout(matrix, 8, cache=cache, **kw)
+            errs: list[str] = []
+            if hit0 or not hit1:
+                errs.append(f"hit sequence (miss, hit) expected, got "
+                            f"({hit0}, {hit1})")
+            if cache.plan_calls != calls_before:
+                errs.append("the hit path re-invoked plan_layout")
+            if cached.candidates != fresh.candidates:
+                errs.append("cached candidates differ from freshly planned")
+            for c_f, c_c in zip(fresh.candidates, cached.candidates):
+                if (c_f.rowmap is None) != (c_c.rowmap is None):
+                    errs.append(f"rowmap presence differs in {c_f.layout}"
+                                f"/{c_f.comm}")
+                elif c_f.rowmap is not None and not (
+                        np.array_equal(c_f.rowmap.perm, c_c.rowmap.perm)
+                        and np.array_equal(c_f.rowmap.boundaries,
+                                           c_c.rowmap.boundaries)):
+                    errs.append(f"rowmap arrays differ in {c_f.layout}"
+                                f"/{c_f.comm}/{c_f.balance}")
+            if cached.best != fresh.best:
+                errs.append("cached plan selects a different engine cell")
+            print(f"[check_comm] plan-cache {name}: "
+                  f"{'OK' if not errs else f'{len(errs)} error(s)'}")
+            errors += [f"plan-cache[{name}]: {e}" for e in errs]
+    return errors
+
+
 def _unused_imports(path: str) -> list[str]:
     """Built-in F401-style scan: imported top-level names never used.
 
@@ -474,6 +538,7 @@ def run_all(fast: bool = False, census: bool = True,
     if census:
         errors += check_census(fast, families)
     errors += check_bench_schema()
+    errors += check_plan_cache(fast)
     errors += check_linters()
     return errors
 
@@ -484,7 +549,8 @@ def main() -> int:
                     help="small subset (the tier-1 pre-commit loop): "
                          "SpinChain-only lint (incl. one s=2 s-step "
                          "plan cell), all overlap checks, four census "
-                         "cells (incl. one +s2)")
+                         "cells (incl. one +s2); the plan-cache lint "
+                         "still covers all three seed families")
     ap.add_argument("--no-census", action="store_true",
                     help="skip the compile-only census section")
     ap.add_argument("--family", action="append", default=None,

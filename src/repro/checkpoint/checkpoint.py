@@ -46,6 +46,20 @@ def _spec_from_json(j) -> P:
     return P(*[tuple(a) if isinstance(a, list) else a for a in j])
 
 
+def _mesh_of(leaves) -> dict | None:
+    """Axis names/sizes of the saving mesh, from the first leaf with a
+    NamedSharding. The manifest's elastic-restart claim needs this on
+    disk: a restore onto a *larger* mesh (grow) must be able to tell it
+    re-sharded, and debugging a failed elastic restore needs to know
+    what shape wrote the step."""
+    for leaf in leaves:
+        mesh = getattr(getattr(leaf, "sharding", None), "mesh", None)
+        if mesh is not None and hasattr(mesh, "axis_names"):
+            return {"axes": list(mesh.axis_names),
+                    "shape": [int(mesh.shape[a]) for a in mesh.axis_names]}
+    return None
+
+
 def save(directory: str, step: int, tree, specs=None, extra: dict | None = None):
     """Write a committed checkpoint of ``tree`` at ``step``."""
     path = os.path.join(directory, f"step_{step:08d}")
@@ -57,7 +71,8 @@ def save(directory: str, step: int, tree, specs=None, extra: dict | None = None)
     spec_leaves = (jax.tree_util.tree_flatten(specs)[0]
                    if specs is not None else [None] * len(leaves))
     meta = {"step": step, "n_leaves": len(leaves),
-            "treedef": str(treedef), "extra": extra or {}, "leaves": []}
+            "treedef": str(treedef), "extra": extra or {},
+            "mesh": _mesh_of(leaves), "leaves": []}
     for i, (leaf, sp) in enumerate(zip(leaves, spec_leaves)):
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)

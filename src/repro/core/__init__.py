@@ -13,7 +13,7 @@ from .filters import FilterPoly, build_filter, degree_for, jackson_damping, wind
 from .orthogonalize import make_gram, make_svqb, make_tsqr
 from .redistribute import make_redistribute, redistribution_volume
 from .lanczos import lanczos_interval
-from .filter_diag import FDConfig, FDResult, FilterDiag
+from .filter_diag import FDConfig, FDResult, FDState, FilterDiag
 from .planner import Candidate, Plan, SpmvCommPlan, comm_plan, plan_for_mesh, plan_layout
 from . import perf_model
 
@@ -28,7 +28,7 @@ __all__ = [
     "make_gram", "make_svqb", "make_tsqr",
     "make_redistribute", "redistribution_volume",
     "lanczos_interval",
-    "FDConfig", "FDResult", "FilterDiag",
+    "FDConfig", "FDResult", "FDState", "FilterDiag",
     "Candidate", "Plan", "SpmvCommPlan", "comm_plan", "plan_for_mesh", "plan_layout",
     "perf_model",
 ]

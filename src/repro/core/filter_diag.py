@@ -56,7 +56,7 @@ from .redistribute import make_redistribute
 from .spmv import (build_dist_ell, build_sstep_ell, make_fused_cheb_step,
                    make_spmv, make_sstep_cheb)
 
-__all__ = ["FDConfig", "FDResult", "FilterDiag"]
+__all__ = ["FDConfig", "FDResult", "FDState", "FilterDiag"]
 
 
 @dataclasses.dataclass
@@ -95,6 +95,36 @@ class FDResult:
     wall_time: float
     redist_time: float
     history: list
+
+
+@dataclasses.dataclass
+class FDState:
+    """Explicit iteration state of one FD solve (Algorithm 1 unrolled).
+
+    Everything the outer loop carries between iterations lives here, so a
+    solve can be driven step-by-step (``FilterDiag.step``), checkpointed
+    at iteration boundaries (``service/jobs.py`` packs ``V`` as the pytree
+    leaf and the host fields as the manifest extra), and resumed from the
+    last committed step — the resumed trajectory is bit-identical to the
+    uninterrupted one because every per-iteration quantity is recomputed
+    from (V, lam) by the same deterministic ops.
+
+    ``pending`` is transient within one iteration only: ``step_analyze``
+    stashes the filter coefficients it chose and ``step_filter`` consumes
+    them; at checkpoint boundaries it is always ``None``.
+    """
+
+    V: jax.Array | None            # search block [D_pad, N_s], stack layout
+    lam: tuple                     # Lanczos inclusion interval (λ_l, λ_r)
+    iteration: int = 0
+    total_spmvs: int = 0
+    redistributions: int = 0
+    redist_time: float = 0.0
+    wall_time: float = 0.0
+    history: list = dataclasses.field(default_factory=list)
+    pending: tuple | None = None   # (mu [deg+1], degree) awaiting step_filter
+    done: bool = False
+    result: FDResult | None = None
 
 
 class FilterDiag:
@@ -321,7 +351,7 @@ class FilterDiag:
             return Vh[: self.D]
         return Vh[self.rowmap.pos]
 
-    def _intervals(self, theta, res, lam):
+    def _intervals(self, theta, res, lam, cfg: FDConfig | None = None):
         """Adaptive target & search intervals from the current Ritz data.
 
         Intervals are bounding boxes of the closest Ritz values rather than
@@ -329,7 +359,7 @@ class FilterDiag:
         spectrum) a τ-centered window would keep covering ≫ N_s eigenvalues
         and FD would stall — the paper's Fig. 2 (right column) failure.
         """
-        cfg = self.cfg
+        cfg = cfg if cfg is not None else self.cfg
         d = np.abs(theta - cfg.target)
         order = np.argsort(d)
         spec_w = lam[1] - lam[0]
@@ -366,79 +396,136 @@ class FilterDiag:
         return target, search
 
     # ------------------------------------------------------------------
-    def solve(self, key=None, verbose: bool = False) -> FDResult:
+    # explicit-state iteration API (resumable jobs, service batching)
+    # ------------------------------------------------------------------
+    def init_state(self, key=None) -> FDState:
+        """Fresh :class:`FDState`: Lanczos inclusion interval + random
+        search block. ``solve`` is exactly ``init_state`` followed by
+        ``step`` until ``done``."""
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(cfg.seed)
         k0, k1 = jax.random.split(key)
-        t_start = time.perf_counter()
+        t0 = time.perf_counter()
         lam = lanczos_interval(
             self.spmv_stack, self.D, self.D_pad, self.dtype, k0,
             cfg.lanczos_steps,
             mask=(None if self.rowmap is None
                   else jnp.asarray(self.rowmap.valid_mask())),
         )
-        alpha, beta = scale_params(*lam)
         V = self.random_search_vectors(k1)
-        total_spmvs = cfg.lanczos_steps
-        redists = 0
-        redist_time = 0.0
-        history = []
-        for it in range(cfg.max_iters):
-            V = self.orthogonalize(V)
-            theta, Y, res, VY = self.ritz(V)
-            total_spmvs += cfg.n_search
-            theta_h = np.asarray(theta)
-            res_h = np.asarray(res)
-            target, search = self._intervals(theta_h, res_h, lam)
-            in_t = (theta_h >= target[0]) & (theta_h <= target[1])
-            conv = in_t & (res_h <= cfg.tol)
-            history.append(
-                dict(iter=it, n_conv=int(conv.sum()), search=search,
-                     best_res=float(res_h[in_t].min()) if in_t.any() else float("nan"))
+        return FDState(V=V, lam=lam, total_spmvs=cfg.lanczos_steps,
+                       wall_time=time.perf_counter() - t0)
+
+    def step_analyze(self, state: FDState, cfg: FDConfig | None = None,
+                     verbose: bool = False) -> FDState:
+        """First half of one outer iteration: orthogonalize, Ritz extract,
+        adapt the intervals, and either finish the solve (``state.done``)
+        or stash the chosen filter in ``state.pending``.
+
+        ``cfg`` overrides the convergence-relevant fields (target, tol,
+        n_target, …) — the service batcher passes per-request configs
+        while sharing this solver's operators.
+        """
+        cfg = cfg if cfg is not None else self.cfg
+        t_begin = time.perf_counter()
+        it = state.iteration
+        if it >= cfg.max_iters:
+            # not converged within max_iters — report best effort
+            theta, Y, res, VY = self.ritz(self.orthogonalize(state.V))
+            theta_h, res_h = np.asarray(theta), np.asarray(res)
+            order = np.argsort(np.abs(theta_h - cfg.target))[: cfg.n_target]
+            state.wall_time += time.perf_counter() - t_begin
+            state.done = True
+            state.result = FDResult(
+                eigenvalues=theta_h[order], residuals=res_h[order],
+                n_converged=int((res_h[order] <= cfg.tol).sum()),
+                iterations=cfg.max_iters, total_spmvs=state.total_spmvs,
+                redistributions=state.redistributions,
+                wall_time=state.wall_time,
+                redist_time=state.redist_time, history=state.history,
             )
-            if verbose:
-                print(f"[fd] it={it:3d} conv={int(conv.sum()):4d}/{cfg.n_target} "
-                      f"search=({search[0]:+.4e},{search[1]:+.4e}) "
-                      f"best_res={history[-1]['best_res']:.2e}")
-            if conv.sum() >= cfg.n_target:
-                order = np.argsort(np.abs(theta_h - cfg.target))
-                sel = order[conv[order]][: max(cfg.n_target, int(conv.sum()))]
-                return FDResult(
-                    eigenvalues=theta_h[sel], residuals=res_h[sel],
-                    n_converged=int(conv.sum()), iterations=it,
-                    total_spmvs=total_spmvs, redistributions=redists,
-                    wall_time=time.perf_counter() - t_start,
-                    redist_time=redist_time, history=history,
-                )
-            poly = filters.build_filter(
-                search, lam, sharpness=cfg.sharpness,
-                n_max=cfg.degree_cap,
-            )
-            mu = jnp.asarray(poly.mu)
-            # start the filter from the Ritz basis (better conditioning)
-            V = VY
-            t0 = time.perf_counter()
-            if self.N_col > 1:
-                V = self.to_panel(V)
-                jax.block_until_ready(V)
-                redists += 1
-                redist_time += time.perf_counter() - t0
-            V = self._cheb(poly.degree)(V, mu, alpha, beta)
-            total_spmvs += poly.degree * cfg.n_search
-            t0 = time.perf_counter()
-            if self.N_col > 1:
-                V = self.to_stack(V)
-                jax.block_until_ready(V)
-                redists += 1
-                redist_time += time.perf_counter() - t0
-        # not converged within max_iters — report best effort
-        theta, Y, res, VY = self.ritz(self.orthogonalize(V))
-        theta_h, res_h = np.asarray(theta), np.asarray(res)
-        order = np.argsort(np.abs(theta_h - cfg.target))[: cfg.n_target]
-        return FDResult(
-            eigenvalues=theta_h[order], residuals=res_h[order],
-            n_converged=int((res_h[order] <= cfg.tol).sum()),
-            iterations=cfg.max_iters, total_spmvs=total_spmvs,
-            redistributions=redists, wall_time=time.perf_counter() - t_start,
-            redist_time=redist_time, history=history,
+            return state
+        V = self.orthogonalize(state.V)
+        theta, Y, res, VY = self.ritz(V)
+        state.total_spmvs += cfg.n_search
+        theta_h = np.asarray(theta)
+        res_h = np.asarray(res)
+        target, search = self._intervals(theta_h, res_h, state.lam, cfg=cfg)
+        in_t = (theta_h >= target[0]) & (theta_h <= target[1])
+        conv = in_t & (res_h <= cfg.tol)
+        state.history.append(
+            dict(iter=it, n_conv=int(conv.sum()), search=search,
+                 best_res=float(res_h[in_t].min()) if in_t.any() else float("nan"))
         )
+        if verbose:
+            print(f"[fd] it={it:3d} conv={int(conv.sum()):4d}/{cfg.n_target} "
+                  f"search=({search[0]:+.4e},{search[1]:+.4e}) "
+                  f"best_res={state.history[-1]['best_res']:.2e}")
+        if conv.sum() >= cfg.n_target:
+            order = np.argsort(np.abs(theta_h - cfg.target))
+            sel = order[conv[order]][: max(cfg.n_target, int(conv.sum()))]
+            state.wall_time += time.perf_counter() - t_begin
+            state.done = True
+            state.result = FDResult(
+                eigenvalues=theta_h[sel], residuals=res_h[sel],
+                n_converged=int(conv.sum()), iterations=it,
+                total_spmvs=state.total_spmvs,
+                redistributions=state.redistributions,
+                wall_time=state.wall_time,
+                redist_time=state.redist_time, history=state.history,
+            )
+            return state
+        poly = filters.build_filter(
+            search, state.lam, sharpness=cfg.sharpness,
+            n_max=cfg.degree_cap,
+        )
+        # start the filter from the Ritz basis (better conditioning)
+        state.V = VY
+        state.pending = (np.asarray(poly.mu), poly.degree)
+        state.wall_time += time.perf_counter() - t_begin
+        return state
+
+    def step_filter(self, state: FDState,
+                    cfg: FDConfig | None = None) -> FDState:
+        """Second half of one outer iteration: apply the pending Chebyshev
+        filter in the panel layout (redistributing if N_col > 1) and
+        advance the iteration counter."""
+        cfg = cfg if cfg is not None else self.cfg
+        t_begin = time.perf_counter()
+        mu_h, degree = state.pending
+        alpha, beta = scale_params(*state.lam)
+        mu = jnp.asarray(mu_h)
+        V = state.V
+        t0 = time.perf_counter()
+        if self.N_col > 1:
+            V = self.to_panel(V)
+            jax.block_until_ready(V)
+            state.redistributions += 1
+            state.redist_time += time.perf_counter() - t0
+        V = self._cheb(degree)(V, mu, alpha, beta)
+        state.total_spmvs += degree * cfg.n_search
+        t0 = time.perf_counter()
+        if self.N_col > 1:
+            V = self.to_stack(V)
+            jax.block_until_ready(V)
+            state.redistributions += 1
+            state.redist_time += time.perf_counter() - t0
+        state.V = V
+        state.pending = None
+        state.iteration += 1
+        state.wall_time += time.perf_counter() - t_begin
+        return state
+
+    def step(self, state: FDState, verbose: bool = False) -> FDState:
+        """One full outer iteration (analyze + filter) — the unit the
+        resumable-job driver checkpoints at."""
+        state = self.step_analyze(state, verbose=verbose)
+        if not state.done:
+            state = self.step_filter(state)
+        return state
+
+    def solve(self, key=None, verbose: bool = False) -> FDResult:
+        state = self.init_state(key)
+        while not state.done:
+            state = self.step(state, verbose=verbose)
+        return state.result

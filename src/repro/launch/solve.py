@@ -24,11 +24,21 @@ partition axis).
 ``--degraded-ok`` continues with a reduced search space if a column group
 is lost (the vertical layer is fault-isolating: bundles of search vectors
 are statistically interchangeable).
+
+``--plan-cache PATH`` puts a persistent plan cache in front of the
+``--layout auto`` planner (``service/plan_cache.py``): repeat matrices
+skip ``plan_layout`` entirely and run the byte-identical cached engine
+plan. ``--serve REQUESTS.json`` switches to service mode
+(``service/batcher.py``): the JSON lists eigensolve requests; compatible
+requests (same sparsity pattern, same planned engine cell) are batched
+into one panel as extra vector columns and demuxed bit-identically to
+solo solves — see docs/service.md.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import numpy as np
 import jax
@@ -53,7 +63,7 @@ def parse_params(s: str) -> dict:
 
 def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
           verbose: bool = True, degraded_ok: bool = False,
-          machine=None):
+          machine=None, plan_cache: str | None = None):
     jax.config.update("jax_enable_x64", True)
     n_dev = len(jax.devices())
     mat = get_family(family, **params)
@@ -63,19 +73,23 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
         # (overlap, comm) from the sparsity pattern before any mesh is
         # built (core/planner.py). The caller's config is left untouched
         # so it can be reused for another matrix (the plan depends on the
-        # pattern).
+        # pattern). With --plan-cache the result persists keyed by the
+        # pattern hash — a repeat matrix skips the planner entirely.
         from ..core import perf_model as pm
-        from ..core.planner import plan_layout
+        from ..service.plan_cache import PlanCache, cached_plan_layout
 
-        plan = plan_layout(mat, n_dev, n_search=fd.n_search,
-                           d_pad=-(-mat.D // n_dev) * n_dev,
-                           machine=machine or pm.TPU_V5E,
-                           reorder=tuple(dict.fromkeys(
-                               ("none", fd.spmv_reorder))),
-                           kernel=tuple(dict.fromkeys(
-                               (False, fd.spmv_kernel))),
-                           sstep=tuple(dict.fromkeys(
-                               (1, fd.spmv_sstep))))
+        cache = PlanCache(plan_cache) if plan_cache else None
+        plan, hit = cached_plan_layout(
+            mat, n_dev, n_search=fd.n_search,
+            cache=cache,
+            d_pad=-(-mat.D // n_dev) * n_dev,
+            machine=machine or pm.TPU_V5E,
+            reorder=tuple(dict.fromkeys(("none", fd.spmv_reorder))),
+            kernel=tuple(dict.fromkeys((False, fd.spmv_kernel))),
+            sstep=tuple(dict.fromkeys((1, fd.spmv_sstep))))
+        if verbose and cache is not None:
+            print(f"[plan-cache] {'hit' if hit else 'miss'} "
+                  f"({plan_cache})")
         best = plan.best
         if verbose:
             print(plan.report())
@@ -120,9 +134,53 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
             return fdd.solve(verbose=verbose)
 
 
+def serve(requests_path: str, plan_cache: str | None = None,
+          machine=None, verbose: bool = True):
+    """Service mode: solve a JSON batch of eigensolve requests.
+
+    The file is ``{"requests": [{...}], "checkpoint_root": optional,
+    "service_seed": optional}``; each request gives ``req_id``,
+    ``family``/``params`` and the per-tenant fields (``n_target``,
+    ``n_search``, ``target``, ``tol``, ``max_iters``, ``seed``).
+    Compatible requests are batched into one panel (docs/service.md).
+    """
+    jax.config.update("jax_enable_x64", True)
+    from ..service import EigenService, SolveRequest
+    from ..service.plan_cache import PlanCache
+
+    with open(requests_path) as f:
+        spec = json.load(f)
+    cache = PlanCache(plan_cache) if plan_cache else None
+    svc = EigenService(plan_cache=cache, machine=machine,
+                       ckpt_root=spec.get("checkpoint_root"),
+                       service_seed=int(spec.get("service_seed", 0)),
+                       verbose=verbose)
+    for r in spec["requests"]:
+        svc.submit(SolveRequest(
+            req_id=str(r["req_id"]), family=r["family"],
+            params=dict(r.get("params", {})),
+            n_target=int(r.get("n_target", 4)),
+            n_search=int(r.get("n_search", 16)),
+            target=float(r.get("target", 0.0)),
+            tol=float(r.get("tol", 1e-9)),
+            max_iters=int(r.get("max_iters", 40)),
+            seed=int(r.get("seed", 7))))
+    results = svc.drain()
+    if verbose:
+        if cache is not None:
+            print(f"[plan-cache] hits={cache.hits} misses={cache.misses} "
+                  f"plan_calls={cache.plan_calls}")
+        for rid in sorted(results):
+            r = results[rid]
+            print(f"[{rid}] converged {r.n_converged} in {r.iterations} "
+                  f"iterations / {r.total_spmvs} SpMVs; eigenvalues "
+                  f"{np.array2string(r.eigenvalues, precision=8)}")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--family", required=True)
+    ap.add_argument("--family")
     ap.add_argument("--params", default="")
     ap.add_argument("--n-target", type=int, default=8)
     ap.add_argument("--n-search", type=int, default=32)
@@ -218,6 +276,22 @@ def main(argv=None):
                          "saved by `dryrun --fit-machine` (calibrated "
                          "b_c/kappa)")
     ap.add_argument("--degraded-ok", action="store_true")
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="persistent plan cache (service/plan_cache.py): "
+                         "a merge-on-write JSON store of --layout auto "
+                         "planner results keyed by (pattern hash, P, "
+                         "machine fingerprint) — a repeat matrix skips "
+                         "plan_layout and runs the byte-identical cached "
+                         "engine plan; bumped cache_version invalidates "
+                         "old entries wholesale")
+    ap.add_argument("--serve", default=None, metavar="REQUESTS.json",
+                    help="service mode (service/batcher.py): solve a JSON "
+                         "batch of eigensolve requests; compatible "
+                         "requests (same sparsity pattern, same planned "
+                         "engine cell) share one SpMV panel as extra "
+                         "vector columns and demux bit-identically to "
+                         "solo solves (--family etc. are ignored; "
+                         "see docs/service.md)")
     args = ap.parse_args(argv)
     if args.spmv_schedule != "cyclic" and args.spmv_comm != "compressed" \
             and args.layout != "auto":
@@ -227,6 +301,11 @@ def main(argv=None):
     from ..core import perf_model as pm
 
     machine = pm.resolve_machine(args.machine)
+    if args.serve:
+        serve(args.serve, plan_cache=args.plan_cache, machine=machine)
+        return
+    if not args.family:
+        ap.error("--family is required (unless --serve is given)")
     fd = FDConfig(n_target=args.n_target, n_search=args.n_search,
                   target=args.target, tol=args.tol, max_iters=args.max_iters,
                   layout=args.layout, spmv_overlap=args.spmv_overlap,
@@ -238,7 +317,7 @@ def main(argv=None):
                   spmv_sstep=args.spmv_sstep)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok,
-                machine=machine)
+                machine=machine, plan_cache=args.plan_cache)
     print(f"converged {res.n_converged} eigenpairs in {res.iterations} "
           f"iterations / {res.total_spmvs} SpMVs "
           f"({res.redistributions} redistributions, "

@@ -1,5 +1,6 @@
 """Fault-tolerance runtime: health tracking, straggler detection, restart."""
-from .health import HealthMonitor, StepTimer
-from .supervisor import Supervisor
+from .health import HealthMonitor, StepTimer, StragglerWatchdog
+from .supervisor import Supervisor, SupervisorConfig
 
-__all__ = ["HealthMonitor", "StepTimer", "Supervisor"]
+__all__ = ["HealthMonitor", "StepTimer", "StragglerWatchdog",
+           "Supervisor", "SupervisorConfig"]

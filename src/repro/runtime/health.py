@@ -51,6 +51,38 @@ class StepTimer:
         return self.var ** 0.5
 
 
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Single-job straggler hook: flags a step whose wall time exceeds the
+    job's own EWMA by ``k_sigma`` standard deviations.
+
+    The fleet-level :class:`HealthMonitor` compares hosts against each
+    other; a supervised eigensolve job has one step stream, so the
+    reference is its own history (after ``warmup`` observations). The
+    supervisor (``Supervisor.run_job``) calls :meth:`observe` per
+    iteration and invokes its ``on_straggler`` remedy callback when the
+    step is flagged — step 1 of the remedy ladder above; steps 2/3
+    (commvol re-partition, elastic restart from the last committed
+    checkpoint) are what the plan cache and ``checkpoint/`` provide.
+    """
+
+    k_sigma: float = 3.0
+    warmup: int = 3
+    min_slack: float = 1e-3  # absolute floor [s] — jitter is not a straggler
+    timer: StepTimer = dataclasses.field(default_factory=StepTimer)
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = (self.timer.count >= self.warmup
+                and self.timer.ewma is not None
+                and dt > self.timer.ewma
+                + max(self.k_sigma * self.timer.std, self.min_slack))
+        self.timer.observe(dt)
+        if slow:
+            self.flagged.append((step, dt))
+        return slow
+
+
 class HealthMonitor:
     """Fleet-level view: flags stragglers and dead hosts."""
 

@@ -14,7 +14,7 @@ import logging
 from typing import Callable
 
 from ..checkpoint import CheckpointManager, restore
-from .health import HealthMonitor, StepTimer
+from .health import HealthMonitor, StepTimer, StragglerWatchdog
 
 log = logging.getLogger("repro.supervisor")
 
@@ -74,3 +74,62 @@ class Supervisor:
                     state = init_state()
                     step = 0
         return state, step
+
+    def run_job(self, job, *, fault_hook: Callable | None = None,
+                watchdog: StragglerWatchdog | None = None,
+                on_straggler: Callable | None = None):
+        """Drive a resumable job (the ``service/jobs.py`` protocol:
+        ``template / init / step / done / step_index / pack / unpack``)
+        to completion with checkpoint/restart.
+
+        Unlike :meth:`run`, the job owns its state pytree split — device
+        leaves via ``pack``/``unpack``, host fields in the manifest extra
+        — and its own termination (``done``), so an eigensolve that
+        converges early stops early. ``fault_hook(step)`` may raise to
+        inject a failure; the loop restores from the last committed
+        checkpoint (``checkpoint/`` ``_COMMITTED`` semantics: an
+        uncommitted step is ignored, the previous one restored). A
+        :class:`~repro.runtime.health.StragglerWatchdog`, when given,
+        observes every step and triggers ``on_straggler(step, dt)`` —
+        the remedy ladder's log/alert rung.
+        """
+        def _restore():
+            tree, _, extra = restore(self.manager.directory, job.template(),
+                                     mesh=getattr(job, "mesh", None),
+                                     specs=getattr(job, "specs", None))
+            return job.unpack(tree, extra)
+
+        try:
+            state = _restore()
+            log.info("resumed job at step %d", job.step_index(state))
+        except FileNotFoundError:
+            state = job.init()
+        while not job.done(state):
+            try:
+                if fault_hook is not None:
+                    fault_hook(job.step_index(state))
+                self.timer.start()
+                state = job.step(state)
+                dt = self.timer.stop()
+                if watchdog is not None and watchdog.observe(
+                        job.step_index(state), dt):
+                    log.warning("straggling step %d (%.3fs, ewma %.3fs)",
+                                job.step_index(state), dt,
+                                watchdog.timer.ewma)
+                    if on_straggler is not None:
+                        on_straggler(job.step_index(state), dt)
+                tree, extra = job.pack(state)
+                self.manager.maybe_save(job.step_index(state), tree,
+                                        specs=getattr(job, "specs", None),
+                                        extra=extra)
+            except Exception as e:  # noqa: BLE001 — restart on any fault
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                log.warning("job step failed (%s); restarting (%d/%d)",
+                            e, self.restarts, self.cfg.max_restarts)
+                try:
+                    state = _restore()
+                except FileNotFoundError:
+                    state = job.init()
+        return state

@@ -1,0 +1,31 @@
+"""Eigensolve-as-a-service: plan cache, request batching, resumable jobs.
+
+The paper's vertical layer — bundles of search vectors distributed over
+process columns — is exactly a request-batching dimension: columns are
+independent through every SpMV/filter op, so vectors from *different*
+filter-diagonalization requests can share one panel. This package turns
+the one-shot :class:`~repro.core.filter_diag.FilterDiag` solver into a
+schedulable, cacheable, resumable service:
+
+  * ``plan_cache``  — persistent χ-planner results keyed by
+    ``(pattern_hash, P, machine fingerprint)``: repeat matrices skip
+    ``plan_layout`` entirely and select the byte-identical engine plan,
+  * ``jobs``        — resumable FilterDiag jobs: the explicit
+    :class:`~repro.core.filter_diag.FDState` pytree checkpointed at
+    iteration boundaries and driven by the runtime supervisor,
+  * ``batcher``     — request queue + batcher packing compatible
+    concurrent requests into one panel as extra ``n_b`` columns, with
+    per-request demux bit-identical to solo solves.
+"""
+from .plan_cache import (CACHE_VERSION, PlanCache, cache_key,
+                         cached_plan_layout, machine_fingerprint,
+                         pattern_hash, plan_from_json, plan_to_json)
+from .jobs import FilterDiagJob, pack_state, unpack_state
+from .batcher import BatchedJob, EigenService, SolveRequest, request_compat_key
+
+__all__ = [
+    "CACHE_VERSION", "PlanCache", "cache_key", "cached_plan_layout",
+    "machine_fingerprint", "pattern_hash", "plan_from_json", "plan_to_json",
+    "FilterDiagJob", "pack_state", "unpack_state",
+    "BatchedJob", "EigenService", "SolveRequest", "request_compat_key",
+]

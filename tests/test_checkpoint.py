@@ -76,3 +76,37 @@ for shape in [(4, 2), (8, 1), (1, 8)]:
 print("ELASTIC OK")
 """)
     assert "ELASTIC OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_grow_restore(tmp_path):
+    """Regression for the grow direction the old suite never exercised:
+    save on a *2-device* mesh, restore onto the full 8-device mesh. The
+    manifest must record the saving mesh shape (the elastic-restart
+    debugging contract in the module docstring), and the restored array
+    must land re-sharded across all 8 devices with identical values."""
+    from tests.conftest import run_distributed
+
+    out = run_distributed(f"""
+import json, os
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+from repro.checkpoint import save, restore
+tree = {{"w": jnp.arange(128.0).reshape(16, 8)}}
+specs = {{"w": P("rows", None)}}
+# an explicit 2-device submesh: the "cluster" before it grew
+small = Mesh(np.array(jax.devices()[:2]).reshape(2), ("rows",))
+sharded = jax.device_put(tree["w"], NamedSharding(small, specs["w"]))
+save(r"{tmp_path}", 11, {{"w": sharded}}, specs=specs)
+with open(os.path.join(r"{tmp_path}", "step_00000011", "manifest.json")) as f:
+    meta = json.load(f)
+assert meta["mesh"] == {{"axes": ["rows"], "shape": [2]}}, meta["mesh"]
+big = jax.make_mesh((8,), ("rows",))
+t2, step, _ = restore(r"{tmp_path}", tree, mesh=big, specs=specs)
+assert step == 11
+np.testing.assert_array_equal(np.asarray(t2["w"]), np.arange(128.0).reshape(16, 8))
+assert t2["w"].sharding.mesh.shape["rows"] == 8
+assert len(t2["w"].sharding.device_set) == 8
+print("GROW OK")
+""")
+    assert "GROW OK" in out
