@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table5,fig4,fig5,table3,table4,"
                          "spmv_overlap,spmv_comm,spmv_schedule,partition,"
-                         "kernels,sstep,planner,roofline")
+                         "kernels,sstep,planner,planner-scale,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable perf artifact (e.g. "
                          "BENCH_spmv.json): per family x engine predicted "
@@ -46,6 +46,7 @@ def main() -> None:
         "kernels": tables.kernels_table,
         "sstep": tables.sstep_table,
         "planner": tables.planner_table,
+        "planner-scale": tables.planner_scale_table,
         "roofline": tables.roofline_table,
     }
     only = set(args.only.split(",")) if args.only else set(benches)

@@ -21,7 +21,7 @@ SCHEMA = "bench-spmv/v1"
 TABLES = frozenset({
     "table1", "table2", "table3", "table4", "table5", "fig4", "fig5",
     "spmv_overlap", "spmv_comm", "spmv_schedule", "partition", "planner",
-    "roofline", "kernels", "sstep",
+    "roofline", "kernels", "sstep", "planner-scale",
 })
 
 #: engine-axis enums as the tables print them
@@ -37,9 +37,14 @@ KERNEL_VALUES = frozenset({"off", "on", "pipelined"})
 #: the s-step axis as the sstep table records it: ghost-zone depth of
 #: the communication-avoiding filter (1 = the classic per-SpMV halo)
 SSTEP_VALUES = frozenset({1, 2, 3})
+#: the pattern-pass axis as the planner-scale table records it: full
+#: pattern scans vs the streaming estimator (core/sketch.py); 'auto'
+#: resolves before a record is written, so it never appears here
+PLAN_MODE_VALUES = frozenset({"exact", "sampled"})
 
 _NUMERIC_NONNEG = ("pred_bytes_per_device", "meas_bytes_per_device",
-                   "us_per_call", "rounds", "plan_us", "t_pass_s")
+                   "us_per_call", "rounds", "plan_us", "t_pass_s",
+                   "plan_seconds")
 
 
 def validate_record(rec, where: str = "record") -> list[str]:
@@ -70,6 +75,9 @@ def validate_record(rec, where: str = "record") -> list[str]:
     if "kernel" in rec and rec["kernel"] not in KERNEL_VALUES:
         errors.append(f"{where}: kernel {rec['kernel']!r} not in "
                       f"{sorted(KERNEL_VALUES)}")
+    if "plan_mode" in rec and rec["plan_mode"] not in PLAN_MODE_VALUES:
+        errors.append(f"{where}: plan_mode {rec['plan_mode']!r} not in "
+                      f"{sorted(PLAN_MODE_VALUES)}")
     if "s" in rec:
         s = rec["s"]
         if not isinstance(s, int) or isinstance(s, bool) or s < 0:

@@ -1052,6 +1052,66 @@ def planner_table():
     return rows
 
 
+def planner_scale_table():
+    """§Planner-scale: streaming-planner wall time across a RoadNet D sweep.
+
+    For each size the full planner (``plan_layout`` at P = 8) is timed in
+    ``plan_mode="sampled"`` — the core/sketch.py streaming path: sampled
+    χ/L estimation plus the coarsened commvol descent — and, up to
+    ``EXACT_MAX_D`` rows, in ``plan_mode="exact"`` next to it, so the
+    record pairs the estimated bytes with the exact planner's on the
+    sizes where both exist. The sweep then *asserts* sublinear scaling
+    of the sampled wall time in nnz (exponent bound 0.8, with a 50 ms
+    floor against timer noise): constant-size sample work plus a handful
+    of O(D) array sweeps must not track the O(nnz) exact pass."""
+    from repro.core.planner import plan_layout
+    from repro.matrices import RoadNet
+
+    rows = []
+    P, Ns = 8, 16
+    sizes = (48_000, 192_000, 768_000, 3_072_000)
+    EXACT_MAX_D = 200_000
+    print(f"\n=== Planner-scale: streaming planner across D (RoadNet, "
+          f"P={P}, Ns={Ns}) ===")
+    print(f"{'D':>9s} {'mode':8s} {'plan[s]':>8s} {'best':16s} "
+          f"{'bytes/dev':>10s} {'vs exact':>9s}")
+    times: dict = {}
+    for n in sizes:
+        fam = RoadNet(n=n)
+        nnz = fam.est_nnz()
+        bytes_by_mode: dict = {}
+        for mode in ("sampled",) + (("exact",) if n <= EXACT_MAX_D else ()):
+            t0 = time.perf_counter()
+            plan = plan_layout(fam, P, n_search=Ns, plan_mode=mode)
+            dt = time.perf_counter() - t0
+            b = plan.best
+            bytes_by_mode[mode] = b.comm_bytes_per_device
+            times[mode, n] = (dt, nnz)
+            vs = (f"{bytes_by_mode['sampled'] / max(bytes_by_mode['exact'], 1):8.3f}x"
+                  if "exact" in bytes_by_mode else "        -")
+            print(f"{n:9d} {mode:8s} {dt:8.3f} {b.describe():16s} "
+                  f"{b.comm_bytes_per_device:10d} {vs}")
+            rows.append((f"planner_scale_{mode}_{n}", dt * 1e6,
+                         f"D={n} nnz={nnz} best={b.describe()} "
+                         f"bytes={b.comm_bytes_per_device}"))
+            RECORDS.append(dict(
+                table="planner-scale", family="roadnet", D=n, nnz=nnz,
+                plan_mode=mode, plan_seconds=dt, best=b.describe(),
+                pred_bytes_per_device=b.comm_bytes_per_device))
+    (t_small, nnz_small) = times["sampled", sizes[0]]
+    (t_large, nnz_large) = times["sampled", sizes[-1]]
+    bound = max(t_small, 0.05) * (nnz_large / nnz_small) ** 0.8
+    print(f"sampled scaling: {t_small:.3f}s @ nnz={nnz_small} -> "
+          f"{t_large:.3f}s @ nnz={nnz_large} "
+          f"(sublinear bound {bound:.3f}s)")
+    if t_large > bound:
+        raise RuntimeError(
+            f"planner-scale: sampled planning time is not sublinear in "
+            f"nnz — {t_large:.3f}s at nnz={nnz_large} exceeds "
+            f"max(t_small, 50ms) * (nnz ratio)^0.8 = {bound:.3f}s")
+    return rows
+
+
 def roofline_table():
     """§Roofline source: per-cell terms from the dry-run caches.
 

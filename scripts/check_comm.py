@@ -17,6 +17,13 @@ exactly the communication the paper's χ model predicts:
      the whole-filter ``sstep_collectives`` byte totals equal
      ``moved x (2.ceil(n/s) - 1) x n_b x S_d`` for both comm engines —
      with the depth-1 plan rejected as the non-vacuity control;
+  1c. **sampled-plan lint** (``core/sketch.py``): the streaming planner's
+     half-fraction sampled comm plan passes ``lint_sampled_plan``, its
+     confidence band contains the exact χ, per-device moved entries stay
+     within tolerance of the exact plan for all three engines, and the
+     matrix-free windowed ``build_dist_ell`` is bit-identical to the
+     materialized-CSR build — for all three seed families, in ``--fast``
+     too;
   2. **overlap dependency check** (``repro.analysis.overlap_check``):
      the jaxpr of every split-phase engine — kernel off AND kernel on —
      shows its halo collective has no data dependence on the local
@@ -171,6 +178,86 @@ def check_sstep_plans(fast: bool = False) -> list[str]:
                 print(f"[check_comm] sstep-lint {cell}: "
                       f"{'OK' if not errs else f'{len(errs)} error(s)'}")
                 errors += [f"sstep-lint: {e}" for e in errs]
+    return errors
+
+
+def check_sampled_plans(fast: bool = False) -> list[str]:
+    """Section 1c: streaming-planner lint (``core/sketch.py``).
+
+    For each of the three seed families at P = 8:
+
+    * the sampled comm plan (a half-fraction seeded subsample) passes
+      :func:`repro.analysis.plan_lint.lint_sampled_plan` — every
+      structural ``SpmvCommPlan`` invariant the engines rely on, plus a
+      well-formed confidence band that contains its own center χ;
+    * the band also contains the **exact** χ of the family (the
+      statistical contract the estimator advertises at its level);
+    * per-device moved entries of the sampled plan stay within
+      ``SAMPLED_TOL`` of the exact plan's, for all three engines — the
+      planner ranks candidates on these numbers;
+    * the matrix-free windowed build is bit-identical to the CSR build
+      (``build_dist_ell`` from windowed generator calls vs from the
+      materialized CSR, every array compared with ``np.array_equal``),
+      and ``collect_row_entries`` at an awkward window equals the
+      one-shot pattern as a lexsorted multiset (the windowed protocol
+      reorders segments by construction — docs/scaling.md).
+    """
+    import numpy as np
+
+    from repro.analysis.plan_lint import lint_sampled_plan
+    from repro.core.planner import comm_plan
+    from repro.core.sketch import estimate_comm
+    from repro.core.spmv import build_dist_ell
+    from repro.matrices import HubNet, RoadNet, SpinChainXXZ
+    from repro.matrices.matfree import collect_row_entries
+
+    del fast  # the estimator contract is cheap and load-bearing: always full
+    SAMPLED_TOL = 0.2
+    errors: list[str] = []
+    fams = [("SpinChainXXZ(12,6)", SpinChainXXZ(12, 6)),
+            ("RoadNet-small", RoadNet(**ROADNET_SMALL)),
+            ("HubNet-small", HubNet(**HUBNET_SMALL))]
+    for name, matrix in fams:
+        errs: list[str] = []
+        est = estimate_comm(matrix, 8, fraction=0.5, seed=0)
+        cp_s = est.comm_plan()
+        cp_e = comm_plan(matrix, 8, exact=True)
+        errs += lint_sampled_plan(cp_s, band=est.band, label=name)
+        if not est.band.contains(cp_e.chi):
+            errs.append(f"[{name}] confidence band misses the exact χ "
+                        f"(chi1 {cp_e.chi.chi1:.4f} ∉ {est.band.chi1}, "
+                        f"chi2 {cp_e.chi.chi2:.4f} ∉ {est.band.chi2}, or "
+                        f"chi3 {cp_e.chi.chi3:.4f} ∉ {est.band.chi3})")
+        for engine, sched in (("a2a", "cyclic"), ("compressed", "cyclic"),
+                              ("compressed", "matching")):
+            m_s = cp_s.moved_entries_per_device(engine, sched)
+            m_e = cp_e.moved_entries_per_device(engine, sched)
+            if abs(m_s - m_e) > SAMPLED_TOL * max(m_e, 1):
+                errs.append(f"[{name}] sampled {engine}/{sched} moves "
+                            f"{m_s} entries/device vs exact {m_e} "
+                            f"(> {SAMPLED_TOL:.0%} off)")
+        # matrix-free windowed build vs the materialized-CSR build
+        d_pad = -(-matrix.D // 8) * 8
+        ell_mf = build_dist_ell(matrix, 8, d_pad=d_pad)
+        ell_csr = build_dist_ell(matrix.build_csr(), 8, d_pad=d_pad)
+        for field in ("cols", "vals", "send_idx", "pair_counts"):
+            a, b = getattr(ell_mf, field), getattr(ell_csr, field)
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                errs.append(f"[{name}] matfree build_dist_ell.{field} "
+                            f"differs from the CSR build (bit-identity "
+                            f"broken)")
+        rows = np.arange(matrix.D, dtype=np.int64)
+        r1, c1, v1 = matrix.row_entries(rows)
+        rw, cw, vw = collect_row_entries(matrix, rows, window=257)
+        o1, ow = np.lexsort((c1, r1)), np.lexsort((cw, rw))
+        if not (np.array_equal(r1[o1], rw[ow])
+                and np.array_equal(c1[o1], cw[ow])
+                and np.array_equal(v1[o1], vw[ow])):
+            errs.append(f"[{name}] collect_row_entries(window=257) is not "
+                        f"multiset-equal to the one-shot row_entries")
+        print(f"[check_comm] sampled-plan {name}: "
+              f"{'OK' if not errs else f'{len(errs)} error(s)'}")
+        errors += [f"sampled-plan: {e}" for e in errs]
     return errors
 
 
@@ -532,6 +619,7 @@ def run_all(fast: bool = False, census: bool = True,
             families=("spinchain",)) -> list[str]:
     errors = check_plan_invariants(fast)
     errors += check_sstep_plans(fast)
+    errors += check_sampled_plans(fast)
     errors += check_overlap(fast)
     errors += check_pipeline(fast)
     errors += check_kernel_parity(fast)

@@ -52,12 +52,13 @@ REQUIRED_FLAGS = {
     "repro.launch.solve": ["--layout", "--spmv-overlap", "--spmv-comm",
                            "--spmv-schedule", "--spmv-balance",
                            "--spmv-reorder", "--spmv-kernel",
-                           "--spmv-sstep", "--machine", "--serve",
-                           "--plan-cache"],
+                           "--spmv-sstep", "--plan-mode", "--machine",
+                           "--serve", "--plan-cache"],
     "repro.launch.dryrun": ["--layout", "--plan", "--spmv-comm",
                             "--spmv-schedule", "--spmv-balance",
                             "--spmv-reorder", "--spmv-kernel",
-                            "--spmv-sstep", "--fit-machine", "--verify"],
+                            "--spmv-sstep", "--plan-mode",
+                            "--fit-machine", "--verify"],
     "benchmarks.run": ["--only", "--json"],
 }
 
@@ -66,7 +67,8 @@ REQUIRED_FLAGS = {
 #: silently drop out of the navigation.
 REQUIRED_DOCS = ("docs/comm-engines.md", "docs/planner.md",
                  "docs/partitioning.md", "docs/analysis.md",
-                 "docs/kernels.md", "docs/s-step.md", "docs/service.md")
+                 "docs/kernels.md", "docs/s-step.md", "docs/service.md",
+                 "docs/scaling.md")
 
 #: CLIs whose *every* declared flag must be documented in README/docs
 #: (check 5). benchmarks.run is covered by REQUIRED_FLAGS only.

@@ -28,7 +28,7 @@ import numpy as np
 
 __all__ = ["lint_rounds", "lint_schedules", "lint_rowmap",
            "lint_comm_plan", "lint_dist_ell", "lint_sstep",
-           "run_plan_lint"]
+           "lint_sampled_plan", "run_plan_lint"]
 
 
 def lint_rounds(pair_counts, perms, round_L, label: str = "") -> list[str]:
@@ -345,6 +345,29 @@ def lint_sstep(cp1, cps, label: str = "", n_b: int = 3, S_d: int = 8,
                 comm, sched):
             errors.append(f"{tag}sstep_collectives({comm}, {sched}) op "
                           f"count disagrees with ng * rounds_per_exchange")
+    return errors
+
+
+def lint_sampled_plan(cp, band=None, label: str = "") -> list[str]:
+    """Sampled-plan invariants: the estimated plan must satisfy every
+    structural :func:`lint_comm_plan` check (the engines consume it
+    through the same code paths as an exact plan), it must be marked
+    estimated (``exact=False`` is what keeps the s-step axis off it),
+    and its advertised confidence band (``core/sketch.py ChiBand``) must
+    be well-formed and contain the plan's own center χ — a band that
+    excludes its own point estimate is a broken error model, whatever
+    the true values are."""
+    tag = f"[{label}] " if label else ""
+    errors = lint_comm_plan(cp, label=label)
+    if cp.exact:
+        errors.append(f"{tag}sampled plan is marked exact=True (the "
+                      f"planner would trust it for depth-s ghosts)")
+    if band is not None:
+        if not band.valid():
+            errors.append(f"{tag}confidence band is malformed: {band}")
+        elif not band.contains(cp.chi):
+            errors.append(f"{tag}band does not contain the plan's own "
+                          f"center χ estimate ({cp.chi})")
     return errors
 
 

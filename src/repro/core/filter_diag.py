@@ -80,6 +80,7 @@ class FDConfig:
     spmv_reorder: str = "none"  # row order: none | rcm (bandwidth-reducing)
     spmv_kernel: bool = False   # Pallas kernels for the local contraction
     spmv_sstep: int = 1         # s-step filter: depth-s ghosts, ceil(n/s) exchanges
+    plan_mode: str = "auto"     # pattern passes: exact | sampled | auto (gate)
     dtype: str = "float64"
     seed: int = 7
 
@@ -179,7 +180,8 @@ class FilterDiag:
             self.rowmap = plan_rowmap(matrix, self.P_total,
                                       balance=cfg.spmv_balance,
                                       reorder=cfg.spmv_reorder,
-                                      sstep=cfg.spmv_sstep)
+                                      sstep=cfg.spmv_sstep,
+                                      plan_mode=cfg.plan_mode)
             if self.rowmap.identity:
                 self.rowmap = None  # planned map degenerated to equal rows
         # one padded extent for both layouts (the planned map's when set)
@@ -231,7 +233,8 @@ class FilterDiag:
                 d_pad=-(-D // P) * P,
                 reorder=tuple(dict.fromkeys(("none", cfg.spmv_reorder))),
                 kernel=tuple(dict.fromkeys((False, cfg.spmv_kernel))),
-                sstep=tuple(dict.fromkeys((1, cfg.spmv_sstep))))
+                sstep=tuple(dict.fromkeys((1, cfg.spmv_sstep))),
+                plan_mode=cfg.plan_mode)
             best = self.plan.best
             cfg.spmv_overlap = best.overlap
             cfg.spmv_comm = best.comm

@@ -58,15 +58,22 @@ import numpy as np
 
 from ..matrices.sparse import CSR, gather_row_entry_idx
 
-__all__ = ["RowMap", "SPMV_BALANCES", "SPMV_REORDERS", "equal_cuts",
-           "plan_rowmap", "rcm_permutation", "commvol_boundaries",
-           "partition_plan_default"]
+__all__ = ["RowMap", "SPMV_BALANCES", "SPMV_REORDERS", "PLAN_MODES",
+           "equal_cuts", "plan_rowmap", "rcm_permutation",
+           "commvol_boundaries", "partition_plan_default"]
 
 #: Row-balance modes of the partition planner (``FDConfig.spmv_balance``).
 SPMV_BALANCES = ("rows", "commvol")
 
 #: Row-reorder modes of the partition planner (``FDConfig.spmv_reorder``).
 SPMV_REORDERS = ("none", "rcm")
+
+#: Planning modes (``FDConfig.plan_mode`` / ``--plan-mode``): ``exact``
+#: walks the full pattern (gated by :func:`partition_plan_default`),
+#: ``sampled`` estimates from a seeded row subsample (``core/sketch.py``
+#: — affordable at any D), ``auto`` = exact below the gate, sampled
+#: above it.
+PLAN_MODES = ("exact", "sampled", "auto")
 
 #: Largest D for which the partition planner's full pattern pass
 #: (per-row nnz + cut counts, RCM adjacency) is considered affordable.
@@ -80,13 +87,21 @@ PARTITION_PLAN_MAX_D = 1_000_000
 PARTITION_PLAN_MAX_P = 64
 
 
-def partition_plan_default(matrix, P: int | None = None) -> bool:
+def partition_plan_default(matrix, P: int | None = None,
+                           plan_mode: str = "exact") -> bool:
     """Whether ``plan_rowmap`` is affordable for ``matrix`` (and shard
     count ``P``, when given) — the single policy behind the planner's
     balance/reorder axis gating. Unlike the χ pattern pass (windowed by
-    ``reach``), the partition planner needs per-row costs over *all*
-    rows, so instance size matters; the cut descent additionally scales
-    with the shard count."""
+    ``reach``), the exact partition planner needs per-row costs over
+    *all* rows, so instance size matters; the cut descent additionally
+    scales with the shard count. ``plan_mode="sampled"`` (and ``"auto"``,
+    which falls back to sampling above the gate) plans from a row
+    subsample (``core/sketch.py``) and is affordable at any size."""
+    if plan_mode not in PLAN_MODES:
+        raise ValueError(f"unknown plan_mode {plan_mode!r} "
+                         f"(expected one of {PLAN_MODES})")
+    if plan_mode in ("sampled", "auto"):
+        return True
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
     return D <= PARTITION_PLAN_MAX_D and (P is None
                                           or P <= PARTITION_PLAN_MAX_P)
@@ -618,7 +633,9 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
                 block_multiple: int = 1, alpha: float = 1.0,
                 beta: float = 4.0, sweeps: int = 3,
                 growth: float = 1.5, refine_passes: int = 3,
-                pattern=None, sstep: int = 1) -> RowMap:
+                pattern=None, sstep: int = 1, plan_mode: str = "exact",
+                sample_seed: int = 0,
+                sample_fraction: float | None = None) -> RowMap:
     """Plan the row decomposition of ``matrix`` at ``P`` shards.
 
     ``balance`` ∈ :data:`SPMV_BALANCES` picks the block cuts (equal rows
@@ -637,6 +654,14 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
     ``planner.comm_plan`` warn when a map is scored at a different
     depth, rather than silently under-counting).
 
+    ``plan_mode`` ∈ :data:`PLAN_MODES` selects the exact full-pattern
+    pass or the sampled one (``core/sketch.py``:
+    ``coarsened_commvol_boundaries`` driven by ``sample_seed`` /
+    ``sample_fraction``); ``auto`` resolves via
+    :func:`partition_plan_default`. The sampled path supports
+    ``balance`` only — ``reorder="rcm"`` needs the full adjacency and
+    raises.
+
     Deterministic: same matrix, same arguments → the same map.
     """
     if int(sstep) < 1:
@@ -647,7 +672,13 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
     if reorder not in SPMV_REORDERS:
         raise ValueError(f"unknown reorder {reorder!r} "
                          f"(expected one of {SPMV_REORDERS})")
+    if plan_mode not in PLAN_MODES:
+        raise ValueError(f"unknown plan_mode {plan_mode!r} "
+                         f"(expected one of {PLAN_MODES})")
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
+    if plan_mode == "auto":
+        plan_mode = ("exact" if partition_plan_default(matrix, P)
+                     else "sampled")
     if balance == "rows" and reorder == "none":
         rm = RowMap.rows(D, P, d_pad)
         if block_multiple > 1 and rm.R % block_multiple:
@@ -655,6 +686,24 @@ def plan_rowmap(matrix, P: int, *, balance: str = "rows",
             rm = RowMap.rows(D, P, R * P)
         rm.sstep = int(sstep)
         return rm
+    if plan_mode == "sampled":
+        if reorder != "none":
+            raise ValueError(
+                f"plan_mode='sampled' cannot plan reorder={reorder!r} — "
+                f"the RCM pass needs the full adjacency; use "
+                f"plan_mode='exact' below the gate or reorder='none'")
+        from .sketch import coarsened_commvol_boundaries  # lazy: no cycle
+
+        boundaries = coarsened_commvol_boundaries(
+            matrix, P, alpha=alpha, beta=beta, fraction=sample_fraction,
+            seed=sample_seed, sweeps=sweeps, growth=growth,
+            refine_passes=refine_passes)
+        R = max(int(np.diff(boundaries).max()) if P else 0, 1)
+        R = -(-R // block_multiple) * block_multiple
+        return RowMap(D=D, P=P, balance=balance, reorder=reorder,
+                      perm=np.arange(D, dtype=np.int64),
+                      boundaries=np.asarray(boundaries, dtype=np.int64),
+                      R=R, sstep=int(sstep))
     if pattern is None:
         pattern = _pattern_csr(matrix)
     perm = (rcm_permutation(matrix, pattern=pattern) if reorder == "rcm"

@@ -68,7 +68,7 @@ from ..matrices.sparse import CSR
 from . import perf_model as pm
 from .layouts import Layout, panel, pillar
 from .metrics import ChiMetrics, chi_from_nvc
-from .partition import (SPMV_BALANCES, SPMV_REORDERS, RowMap,
+from .partition import (PLAN_MODES, SPMV_BALANCES, SPMV_REORDERS, RowMap,
                         partition_plan_default, plan_rowmap)
 from .redistribute import redistribution_volume
 from .spmv import (SPMV_COMM_ENGINES, SPMV_SCHEDULES, Partition,
@@ -650,7 +650,9 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 n_nzr: float | None = None, d_pad: int | None = None,
                 exact_comm: bool | None = None,
                 n_vc_by_row: dict | None = None,
-                comm_plan_by_row: dict | None = None) -> Plan:
+                comm_plan_by_row: dict | None = None,
+                plan_mode: str = "exact", sample_seed: int = 0,
+                sample_fraction: float | None = None) -> Plan:
     """Enumerate and rank layout/engine configurations for ``matrix`` on
     ``n_devices`` devices with an ``n_search``-wide vector bundle.
 
@@ -711,6 +713,19 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     ``d_pad``), so callers that already paid the pattern pass — e.g. the
     dry-run — are not charged again; both apply to the equal-rows combo
     only.
+
+    ``plan_mode`` ∈ ``partition.PLAN_MODES`` selects the pattern-pass
+    strategy. ``"exact"`` (the default) is today's behavior: full
+    per-pair passes where affordable, and the balance/reorder axis is
+    **dropped with a ``UserWarning``** when the instance exceeds the
+    ``partition_plan_default`` gate. ``"sampled"`` routes every pattern
+    pass through ``core/sketch.py`` — seeded row-subsample χ/L_qp
+    estimates (``sample_seed``/``sample_fraction``) and the coarsened
+    commvol descent — so planning stays affordable at any D; sampled
+    plans carry estimated per-pair counts (``exact=False``), so the
+    compressed engines still rank, while s>1 candidates (which demand
+    the exact pattern) are skipped, as is ``reorder="rcm"``. ``"auto"``
+    resolves to exact below the gate and sampled above it.
     """
     P = int(n_devices)
     D = matrix.shape[0] if isinstance(matrix, CSR) else matrix.D
@@ -743,7 +758,12 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 raise ValueError(f"unknown reorder {ro!r} "
                                  f"(expected one of {SPMV_REORDERS})")
             partitions.append((bal, ro))
+    if plan_mode not in PLAN_MODES:
+        raise ValueError(f"unknown plan_mode {plan_mode!r} "
+                         f"(expected one of {PLAN_MODES})")
     plan_ok = partition_plan_default(matrix, P)
+    use_sampled = plan_mode == "sampled" or (plan_mode == "auto"
+                                             and not plan_ok)
 
     plans: dict[int, SpmvCommPlan] = dict(comm_plan_by_row or {})
     sstep_plans: dict[tuple[int, int], SpmvCommPlan] = {}  # (n_row, s>1)
@@ -751,19 +771,46 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
     rowmaps: dict[tuple[str, str], RowMap] = {}
     pattern = None  # one pattern pass shared by every planned combo
     cands: list[Candidate] = []
+    gate_warned = False
     for bal, ro in partitions:
         default_part = bal == "rows" and ro == "none"
         if not default_part:
-            if not plan_ok:
-                continue  # per-row pattern pass unaffordable at this D
-            if (bal, ro) not in rowmaps:
-                if pattern is None:
-                    from .partition import _pattern_csr
+            if not plan_ok and not use_sampled:
+                # per-row pattern pass unaffordable at this D/P — the
+                # axis is dropped, but never silently
+                if not gate_warned:
+                    import warnings
 
-                    pattern = _pattern_csr(matrix)
-                rowmaps[(bal, ro)] = plan_rowmap(matrix, P, balance=bal,
-                                                 reorder=ro,
-                                                 pattern=pattern)
+                    from .partition import (PARTITION_PLAN_MAX_D,
+                                            PARTITION_PLAN_MAX_P)
+                    warnings.warn(
+                        f"plan_layout: dropping the balance/reorder "
+                        f"partition axis — D={D}, P={P} exceeds the "
+                        f"exact partition-planner gate "
+                        f"(PARTITION_PLAN_MAX_D={PARTITION_PLAN_MAX_D}, "
+                        f"PARTITION_PLAN_MAX_P={PARTITION_PLAN_MAX_P}); "
+                        f"pass plan_mode='sampled' (CLI: --plan-mode "
+                        f"sampled) to plan it from a row subsample "
+                        f"instead", UserWarning, stacklevel=2)
+                    gate_warned = True
+                continue
+            if use_sampled and ro != "none":
+                continue  # RCM needs the full adjacency — exact-only
+            if (bal, ro) not in rowmaps:
+                if use_sampled:
+                    rowmaps[(bal, ro)] = plan_rowmap(
+                        matrix, P, balance=bal, reorder=ro,
+                        plan_mode="sampled", sample_seed=sample_seed,
+                        sample_fraction=sample_fraction)
+                else:
+                    if pattern is None:
+                        from .partition import _pattern_csr
+
+                        pattern = _pattern_csr(matrix)
+                    rowmaps[(bal, ro)] = plan_rowmap(matrix, P,
+                                                     balance=bal,
+                                                     reorder=ro,
+                                                     pattern=pattern)
             rowmap = rowmaps[(bal, ro)]
             if rowmap.identity:
                 continue  # the planned map degenerated to equal rows —
@@ -773,15 +820,31 @@ def plan_layout(matrix, n_devices: int, *, n_search: int,
                 raise ValueError(f"split {n_row}x{n_col} != P={P}")
             if default_part:
                 if n_row not in plans:
-                    plans[n_row] = comm_plan(
-                        matrix, n_row, d_pad=d_pad, exact=exact_comm,
-                        n_vc=(n_vc_by_row or {}).get(n_row))
+                    n_vc_pre = (n_vc_by_row or {}).get(n_row)
+                    if (use_sampled and n_row > 1 and n_vc_pre is None
+                            and exact_comm is not True):
+                        from .sketch import sampled_comm_plan
+
+                        plans[n_row] = sampled_comm_plan(
+                            matrix, n_row, d_pad=d_pad,
+                            fraction=sample_fraction, seed=sample_seed)
+                    else:
+                        plans[n_row] = comm_plan(
+                            matrix, n_row, d_pad=d_pad, exact=exact_comm,
+                            n_vc=n_vc_pre)
                 cp = plans[n_row]
             else:
                 key = (bal, ro, n_row)
                 if key not in mapped_plans:
-                    mapped_plans[key] = comm_plan(matrix, n_row,
-                                                  rowmap=rowmap)
+                    if use_sampled:
+                        from .sketch import sampled_comm_plan
+
+                        mapped_plans[key] = sampled_comm_plan(
+                            matrix, n_row, rowmap=rowmap,
+                            fraction=sample_fraction, seed=sample_seed)
+                    else:
+                        mapped_plans[key] = comm_plan(matrix, n_row,
+                                                      rowmap=rowmap)
                 cp = mapped_plans[key]
             chim = cp.chi
             chi1 = chim.chi1 if n_row > 1 else 0.0

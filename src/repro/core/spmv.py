@@ -577,8 +577,13 @@ def build_dist_ell(
         D = matrix.shape[0]
         get_rows = lambda a, b: _csr_rows(matrix, a, b)
     else:
+        from ..matrices.matfree import collect_row_entries
+
+        # windowed generator protocol: shard blocks of a streaming-scale
+        # family never materialize one whole-shard COO temporary
         D = matrix.D
-        get_rows = lambda a, b: matrix.row_entries(np.arange(a, b, dtype=np.int64))
+        get_rows = lambda a, b: collect_row_entries(
+            matrix, np.arange(a, b, dtype=np.int64))
     part = Partition(D, P_row, d_pad)
     R = part.R
     per_shard = []
@@ -677,7 +682,9 @@ def _build_dist_ell_mapped(matrix, P_row: int, rowmap: RowMap,
     if isinstance(matrix, CSR):
         get_rows = lambda rows_g: _csr_rows_at(matrix, rows_g)
     else:
-        get_rows = matrix.row_entries
+        from ..matrices.matfree import collect_row_entries
+
+        get_rows = lambda rows_g: collect_row_entries(matrix, rows_g)
     per_shard = []
     for p in range(P_row):
         rows_g, _ = rowmap.shard_rows(p, P_row)

@@ -174,7 +174,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
               plan: bool = False, spmv_comm: str = "a2a",
               spmv_schedule: str = "cyclic", spmv_balance: str = "rows",
               spmv_reorder: str = "none", spmv_kernel: bool = False,
-              spmv_sstep: int = 1,
+              spmv_sstep: int = 1, plan_mode: str = "auto",
               machine=None, verify: bool = False) -> dict:
     """Lower one FD macro-iteration (filter + redistributions + TSQR) for a
     paper config on the production mesh, using a reduced-bandwidth ELL
@@ -274,11 +274,17 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
     from ..core.partition import partition_plan_default, plan_rowmap
 
     rowmap = None
+    use_sampled = plan_mode == "sampled" or (
+        plan_mode == "auto" and not partition_plan_default(fam, N_row))
     if (spmv_balance, spmv_reorder) != ("rows", "none") and N_row > 1 \
-            and partition_plan_default(fam, N_row):
+            and partition_plan_default(fam, N_row, plan_mode) \
+            and not (use_sampled and spmv_reorder != "none"):
+        # sampled planning covers the commvol axis only (RCM needs the
+        # full adjacency) — unplannable requests relabel below as usual
         rowmap = plan_rowmap(fam, N_row, balance=spmv_balance,
                              reorder=spmv_reorder,
-                             block_multiple=P_total // N_row)
+                             block_multiple=P_total // N_row,
+                             plan_mode=plan_mode)
         if rowmap.identity:
             rowmap = None
     if rowmap is None:
@@ -295,7 +301,13 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
 
     cp_part = None
     if rowmap is not None:
-        cp_part = _comm_plan(fam, N_row, rowmap=rowmap)
+        if use_sampled and not exact_comm_default(fam):
+            # the exact mapped pattern pass is exactly what sampled mode
+            # avoids — estimate the planned map's volumes the same way
+            from ..core.sketch import sampled_comm_plan
+            cp_part = sampled_comm_plan(fam, N_row, rowmap=rowmap)
+        else:
+            cp_part = _comm_plan(fam, N_row, rowmap=rowmap)
         n_vc = cp_part.n_vc
     else:
         n_vc = fam.n_vc(np.minimum(np.arange(N_row + 1) * (D_pad // N_row), D)) if N_row > 1 else np.zeros(1)
@@ -350,7 +362,9 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                          "only (drop the '+ov' layout suffix)")
     if sstep > 1 and N_row <= 1:
         sstep = 1  # comm-free layout: every s is the same cell
-    if sstep > 1 and rowmap is None and not exact_comm_default(fam):
+    if sstep > 1 and not exact_comm_default(fam):
+        # depth-s ghosts need the exact pattern pass whether or not a
+        # partition was planned (a sampled rowmap does not change that)
         if verbose:
             print(f"[dryrun-eigen] {name}: depth-{sstep} ghost plan needs "
                   "the exact pattern pass — relabeling to s=1")
@@ -643,6 +657,7 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                            exact_comm=None if exact_ok else False,
                            d_pad=D_pad, n_nzr=_nnzr(fam),
                            machine=machine or _pm.TPU_V5E,
+                           plan_mode=plan_mode,
                            reorder=tuple(dict.fromkeys(
                                ("none", spmv_reorder))),
                            sstep=tuple(dict.fromkeys((1, sstep))),
@@ -652,9 +667,10 @@ def run_eigen(name: str, layout_name: str = "pillar", multi_pod: bool = False,
                            n_vc_by_row=None
                            if exact_ok or N_row <= 1 or rowmap is not None
                            else {N_row: n_vc})
-        if rowmap is not None:
+        if rowmap is not None and exact_ok:
             # before/after panel: the equal-rows partition's χ and pad
-            # volumes vs the planned map's, at the lowered N_row
+            # volumes vs the planned map's, at the lowered N_row (needs
+            # the exact pattern pass — skipped on the sampled-only path)
             cp_before = _comm_plan(fam, N_row,
                                    d_pad=-(-D // P_total) * P_total,
                                    exact=True)
@@ -936,6 +952,17 @@ def main(argv=None):
                          "--verify every exchange is attributed to the "
                          "chi(A^s) terms of sstep_collectives; plain "
                          "(non-overlap) cells only")
+    ap.add_argument("--plan-mode", default="auto",
+                    choices=["exact", "sampled", "auto"],
+                    help="pattern-pass strategy for the --eigen cell's "
+                         "planning (partition boundaries and the --plan "
+                         "ranking): 'exact' (full scans, the partition "
+                         "axis is dropped past the size gate), 'sampled' "
+                         "(core/sketch.py: seeded row subsample, "
+                         "Horvitz-Thompson chi/L estimates, coarsened "
+                         "commvol descent), or 'auto' (exact below the "
+                         "gate, sampled above; --plan-mode of "
+                         "repro.launch.solve)")
     ap.add_argument("--plan", action="store_true",
                     help="with --eigen: print the χ-driven planner ranking "
                          "(core/planner.py) and the predicted vs HLO-measured "
@@ -985,6 +1012,7 @@ def main(argv=None):
                                      spmv_reorder=args.spmv_reorder,
                                      spmv_kernel=args.spmv_kernel,
                                      spmv_sstep=args.spmv_sstep,
+                                     plan_mode=args.plan_mode,
                                      machine=machine, verify=args.verify))
         elif args.all:
             for arch, shape, cell in iter_cells():

@@ -86,7 +86,8 @@ def solve(family: str, params: dict, fd: FDConfig, n_row: int, n_col: int,
             machine=machine or pm.TPU_V5E,
             reorder=tuple(dict.fromkeys(("none", fd.spmv_reorder))),
             kernel=tuple(dict.fromkeys((False, fd.spmv_kernel))),
-            sstep=tuple(dict.fromkeys((1, fd.spmv_sstep))))
+            sstep=tuple(dict.fromkeys((1, fd.spmv_sstep))),
+            plan_mode=fd.plan_mode)
         if verbose and cache is not None:
             print(f"[plan-cache] {'hit' if hit else 'miss'} "
                   f"({plan_cache})")
@@ -270,6 +271,18 @@ def main(argv=None):
                          "axis, scored with the alpha-latency machine "
                          "term (s > 1 wins only when rounds, not bytes, "
                          "dominate)")
+    ap.add_argument("--plan-mode", default="auto",
+                    choices=["exact", "sampled", "auto"],
+                    help="pattern-pass strategy for planning (partition "
+                         "boundaries, chi counts, comm plans): 'exact' "
+                         "(full pattern scans; the partition axis is "
+                         "silently dropped past the size gate), 'sampled' "
+                         "(core/sketch.py plans from a seeded row "
+                         "subsample — Horvitz-Thompson chi/L estimates "
+                         "with a confidence band and a coarsened commvol "
+                         "descent; D >= 1e7 matrix-free instances plan in "
+                         "seconds), or 'auto' (exact below the gate, "
+                         "sampled above it)")
     ap.add_argument("--machine", default="tpu-v5e",
                     help="machine model for --layout auto planning: "
                          "'tpu-v5e', 'meggie', or a path to a JSON model "
@@ -314,7 +327,8 @@ def main(argv=None):
                   spmv_balance=args.spmv_balance,
                   spmv_reorder=args.spmv_reorder,
                   spmv_kernel=args.spmv_kernel,
-                  spmv_sstep=args.spmv_sstep)
+                  spmv_sstep=args.spmv_sstep,
+                  plan_mode=args.plan_mode)
     res = solve(args.family, parse_params(args.params), fd,
                 args.n_row, args.n_col, degraded_ok=args.degraded_ok,
                 machine=machine, plan_cache=args.plan_cache)

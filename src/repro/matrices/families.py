@@ -106,6 +106,17 @@ class MatrixFamily(abc.ABC):
         boundaries = np.asarray(boundaries, dtype=np.int64)
         return np.diff(boundaries)
 
+    def est_nnz(self, probe_rows: int = 4096) -> int:
+        """Estimated stored entries of the whole matrix — a deterministic
+        evenly-spaced row probe scaled to D (exact when the probe covers
+        every row). The streaming planner's benchmarks normalize planning
+        time by this without a pattern pass; families with closed-form
+        counts (RoadNet, HubNet) override it exactly."""
+        n = min(self.D, int(probe_rows))
+        rows = np.unique(np.linspace(0, self.D - 1, max(n, 1)).astype(np.int64))
+        r, _ = self.row_cols(rows)
+        return int(round(len(r) * self.D / max(len(rows), 1)))
+
     # ------------------------------------------------------------ values --
 
     def spectral_bounds_hint(self) -> tuple[float, float] | None:

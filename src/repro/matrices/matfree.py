@@ -5,12 +5,55 @@ by the flagship Pallas kernel (kernels/cheb_dia.py): lattice Hamiltonians
 (Exciton, TopIns) are unions of a few dozen shifted diagonals, so the
 SpMMV becomes gather-free shifted FMAs — the TPU-native reformulation of
 SELL-C-sigma (DESIGN.md §3).
+
+``iter_row_entries`` / ``collect_row_entries`` are the **windowed
+generator protocol** for streaming-scale instances (D ≥ 10⁷): a family's
+``row_entries`` is called on bounded windows of the requested rows, so no
+caller ever materializes one giant whole-shard COO temporary — this is
+how ``build_dist_ell`` builds each shard's ELL block for matrix-free
+RoadNet/HubNet without an explicit CSR anywhere (the pattern exists only
+as generator output, window by window). The concatenated result carries
+exactly the same (row, col, value) multiset as a single ``row_entries``
+call — entry *order* may differ across window sizes, which downstream
+consumers must not rely on (``build_dist_ell`` lexsorts per shard, so the
+built operator is bit-identical for every window size).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .families import MatrixFamily
+
+#: Default window (rows per generator call) of the streamed protocol —
+#: big enough to amortize the per-call vectorization, small enough that
+#: a ~10-entry/row family's per-window temporaries stay a few MB.
+DEFAULT_WINDOW = 262_144
+
+
+def iter_row_entries(fam: MatrixFamily, rows: np.ndarray,
+                     window: int = DEFAULT_WINDOW):
+    """Yield ``(row_idx, col_idx, values)`` chunks of ``rows``, at most
+    ``window`` rows per generator call."""
+    rows = np.asarray(rows, dtype=np.int64)
+    for lo in range(0, max(len(rows), 1), window):
+        yield fam.row_entries(rows[lo: lo + window])
+
+
+def collect_row_entries(fam: MatrixFamily, rows: np.ndarray,
+                        window: int = DEFAULT_WINDOW):
+    """``row_entries`` of ``rows`` via windowed generator calls.
+
+    Same (row, col, value) multiset as one whole-set call — order may
+    differ (each window emits its own diagonal/band/corridor segments),
+    and per-call temporaries are bounded by ``window`` rows instead of
+    ``len(rows)``.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    if len(rows) <= window:
+        return fam.row_entries(rows)
+    parts = list(iter_row_entries(fam, rows, window))
+    rs, cs, vs = zip(*parts)
+    return np.concatenate(rs), np.concatenate(cs), np.concatenate(vs)
 
 
 def dia_from_family(fam: MatrixFamily, pad_to: int = 8, rows: slice | None = None,
@@ -23,7 +66,7 @@ def dia_from_family(fam: MatrixFamily, pad_to: int = 8, rows: slice | None = Non
     """
     lo = rows.start if rows else 0
     hi = rows.stop if rows else fam.D
-    r, c, v = fam.row_entries(np.arange(lo, hi, dtype=np.int64))
+    r, c, v = collect_row_entries(fam, np.arange(lo, hi, dtype=np.int64))
     off = c - r
     offsets = np.unique(off)
     if len(offsets) > max_diags:

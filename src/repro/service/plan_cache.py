@@ -33,6 +33,7 @@ original ``comm_bytes_per_device`` exactly.
 """
 from __future__ import annotations
 
+import fcntl
 import hashlib
 import json
 import os
@@ -61,12 +62,39 @@ CACHE_VERSION = 1
 
 # ---------------------------------------------------------------- keys --
 
+#: D above which ``pattern_hash`` probes generator families instead of
+#: materializing the canonical CSR (matches the streaming planner's
+#: regime: a 10^7-row matrix-free instance must key the cache without a
+#: full pattern pass). CSR inputs always hash the full pattern.
+PATTERN_HASH_PROBE_D = 2_000_000
+_PATTERN_PROBE_ROWS = 4096
+
+
 def pattern_hash(matrix) -> str:
     """SHA-256 of the canonical sparsity pattern (sorted, deduplicated
     CSR) — invariant under ELL slot-order permutation of the same
-    matrix, distinct across families and sizes."""
-    indptr, cols = partition._pattern_csr(matrix)
+    matrix, distinct across families and sizes.
+
+    Generator families past :data:`PATTERN_HASH_PROBE_D` rows are hashed
+    from a deterministic evenly-spaced row probe of ``row_cols`` instead
+    (sorted per probe row, so the same slot-order invariance holds on
+    the probed subset): materializing the canonical CSR is exactly the
+    O(nnz) pass the sampled planner exists to avoid. The probe keys on D
+    plus the probed rows' exact column sets — distinct seeds/params of
+    the same family produce distinct column sets on 4096 spread rows."""
     h = hashlib.sha256()
+    D = int(matrix.D) if hasattr(matrix, "D") else int(matrix.shape[0])
+    if hasattr(matrix, "row_cols") and D > PATTERN_HASH_PROBE_D:
+        rows = np.unique(np.linspace(0, D - 1,
+                                     _PATTERN_PROBE_ROWS).astype(np.int64))
+        r, c = matrix.row_cols(rows)
+        order = np.lexsort((c, r))
+        h.update(b"pattern-probe/v1:")
+        h.update(np.int64(D).tobytes())
+        h.update(np.ascontiguousarray(r[order], dtype=np.int64).tobytes())
+        h.update(np.ascontiguousarray(c[order], dtype=np.int64).tobytes())
+        return h.hexdigest()
+    indptr, cols = partition._pattern_csr(matrix)
     h.update(b"pattern/v1:")
     h.update(np.int64(len(indptr) - 1).tobytes())
     h.update(np.ascontiguousarray(indptr, dtype=np.int64).tobytes())
@@ -244,31 +272,47 @@ class PlanCache:
         Existing entries are kept (merge-on-write); the merged store is
         fully re-validated before the write, and an existing-but-invalid
         store is refused rather than silently clobbered.
+
+        Concurrent writers are safe: the read-merge-validate-write cycle
+        runs under an exclusive ``flock`` on a ``.lock`` sidecar (held by
+        every ``put``, so two processes cannot interleave their reads and
+        drop each other's entries), the temp file is per-PID (two writers
+        never scribble on one buffer), and the final ``os.replace`` keeps
+        readers crash-consistent — a reader never observes a torn store,
+        locked or not.
         """
-        store: dict
-        if os.path.exists(self.path):
-            try:
-                with open(self.path) as f:
-                    store = json.load(f)
-            except ValueError as e:
-                raise ValueError(f"{self.path}: existing store is not valid "
-                                 f"JSON ({e}); refusing to merge") from e
-            errors = validate_store(store)
-            if errors:
-                raise ValueError(f"{self.path}: existing store is invalid, "
-                                 f"refusing to merge: {errors}")
-        else:
-            store = {"schema": SCHEMA, "entries": {}}
-        store["entries"][key] = {"plan": plan_to_json(plan)}
-        errors = validate_store(store)
-        if errors:
-            raise ValueError(f"refusing to write invalid store: {errors}")
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(store, f)
-        os.replace(tmp, self.path)
+        with open(self.path + ".lock", "w") as lock:
+            fcntl.flock(lock, fcntl.LOCK_EX)
+            try:
+                store: dict
+                if os.path.exists(self.path):
+                    try:
+                        with open(self.path) as f:
+                            store = json.load(f)
+                    except ValueError as e:
+                        raise ValueError(
+                            f"{self.path}: existing store is not valid "
+                            f"JSON ({e}); refusing to merge") from e
+                    errors = validate_store(store)
+                    if errors:
+                        raise ValueError(
+                            f"{self.path}: existing store is invalid, "
+                            f"refusing to merge: {errors}")
+                else:
+                    store = {"schema": SCHEMA, "entries": {}}
+                store["entries"][key] = {"plan": plan_to_json(plan)}
+                errors = validate_store(store)
+                if errors:
+                    raise ValueError(
+                        f"refusing to write invalid store: {errors}")
+                tmp = f"{self.path}.tmp.{os.getpid()}"
+                with open(tmp, "w") as f:
+                    json.dump(store, f)
+                os.replace(tmp, self.path)
+            finally:
+                fcntl.flock(lock, fcntl.LOCK_UN)
 
 
 def cached_plan_layout(matrix, n_devices: int, *, n_search: int,

@@ -219,6 +219,105 @@ def test_merge_on_write_keeps_existing_entries(tmp_path):
     assert len(store["entries"]) == 2
 
 
+def test_concurrent_writers_lose_no_records(tmp_path):
+    """Several *processes* merging into one store concurrently: every
+    record survives (the put path read-merge-writes under an exclusive
+    lock) and no reader ever observes a torn file (writes land via
+    atomic tmp+rename, so a concurrent load parses a complete store or
+    none)."""
+    import subprocess
+    import sys
+
+    from tests.conftest import SRC
+
+    path = tmp_path / "plans.json"
+    cache = PlanCache(str(path))
+    mat = _spin_mat()
+    plan, _ = cached_plan_layout(mat, 4, n_search=8, cache=cache)
+    plan_json = json.dumps(plan_to_json(plan))
+    (tmp_path / "plan.json").write_text(plan_json)
+    n_writers, n_keys = 6, 5
+    script = (
+        "import json, sys\n"
+        "from repro.service import PlanCache, plan_from_json\n"
+        "wid = int(sys.argv[1])\n"
+        f"plan = plan_from_json(json.load(open({str(tmp_path / 'plan.json')!r})))\n"
+        f"cache = PlanCache({str(path)!r})\n"
+        f"for j in range({n_keys}):\n"
+        "    cache.put(f'writer{wid}-key{j}', plan)\n"
+    )
+    procs = [subprocess.Popen([sys.executable, "-c", script, str(i)],
+                              env=dict(os.environ, PYTHONPATH=SRC),
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True)
+             for i in range(n_writers)]
+    # poll the store while the writers race: every observed state must
+    # be complete, parseable JSON (the atomic-rename contract)
+    while any(p.poll() is None for p in procs):
+        if path.exists():
+            try:
+                store = json.loads(path.read_text())
+            except ValueError as e:  # pragma: no cover - the defect
+                for p in procs:
+                    p.kill()
+                raise AssertionError(f"torn store observed mid-race: {e}")
+            assert "entries" in store
+    for p in procs:
+        out, err = p.communicate()
+        assert p.returncode == 0, f"writer failed:\n{out}\n{err}"
+    store = json.loads(path.read_text())
+    keys = {f"writer{i}-key{j}"
+            for i in range(n_writers) for j in range(n_keys)}
+    missing = keys - set(store["entries"])
+    assert not missing, f"concurrent merge lost {len(missing)}: {missing}"
+    # and every record is still a loadable, well-formed plan
+    fresh = PlanCache(str(path))
+    for k in sorted(keys):
+        got = fresh.get(k)
+        assert got is not None and got.best == plan.best, k
+
+
+def test_sampled_plan_keys_distinct_from_exact(tmp_path):
+    """plan_mode is part of the cache key: a sampled plan of a pattern
+    never hits the exact plan of the same pattern (and vice versa),
+    while each mode hits itself."""
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    mat = _spin_mat()
+    _, hit_e = cached_plan_layout(mat, 4, n_search=8, cache=cache,
+                                  plan_mode="exact")
+    _, hit_s = cached_plan_layout(mat, 4, n_search=8, cache=cache,
+                                  plan_mode="sampled")
+    assert (hit_e, hit_s) == (False, False), \
+        "sampled plan hit the exact entry of the same pattern"
+    _, hit_e2 = cached_plan_layout(mat, 4, n_search=8, cache=cache,
+                                   plan_mode="exact")
+    _, hit_s2 = cached_plan_layout(mat, 4, n_search=8, cache=cache,
+                                   plan_mode="sampled")
+    assert (hit_e2, hit_s2) == (True, True)
+    assert cache.plan_calls == 2
+    assert cache_key("ph", 4, pm.TPU_V5E, n_search=8, plan_mode="exact") \
+        != cache_key("ph", 4, pm.TPU_V5E, n_search=8, plan_mode="sampled")
+
+
+def test_probe_pattern_hash_above_threshold():
+    """Families past PATTERN_HASH_PROBE_D hash from a deterministic row
+    probe (milliseconds at D = 10⁷): stable across calls, distinct
+    across sizes and families, and orthogonal to the full-pattern hash
+    space used below the threshold."""
+    from repro.matrices import HubNet, RoadNet
+
+    big = RoadNet(n=3_000_000, w=1, m=400, k=2)
+    assert big.D > plan_cache_mod.PATTERN_HASH_PROBE_D
+    h1, h2 = pattern_hash(big), pattern_hash(big)
+    assert h1 == h2
+    assert h1 != pattern_hash(RoadNet(n=3_000_001, w=1, m=400, k=2))
+    assert h1 != pattern_hash(HubNet(n=3_000_000, w=1, h=4, m=400, k=2))
+    # below the threshold the full pattern pass is used — the small
+    # family's hash is unaffected by the probe fast path
+    small = RoadNet(n=4000, w=2, m=256, k=4)
+    assert pattern_hash(small) == pattern_hash(small.build_csr())
+
+
 # --------------------------------------------- fault-injection resume --
 
 

@@ -1,0 +1,392 @@
+"""Statistical test harness of the streaming planner (``core/sketch.py``).
+
+The sampled estimator's contract is statistical, so the tests are too:
+
+  * **convergence** — sampled χ / per-pair ``L_qp`` converge to the
+    exact pattern pass as the sample fraction → 1, and at fraction 1
+    they are *equal* (the estimator degrades gracefully into the exact
+    counter: π = 1, HT weight 1);
+  * **coverage** — the advertised :data:`repro.core.sketch.CONF_LEVEL`
+    confidence band contains the exact χ at (at least) its advertised
+    rate over seeds;
+  * **determinism** — same ``(seed, fraction)`` → bit-identical
+    estimate, the property the plan cache keys rely on;
+  * **plan quality** — the coarsened-descent RowMap's engine-exact wire
+    bytes stay within 10% of the exact planner's on every D ≤ 1e6 seed
+    family, and the twelve-engine grid stays bit-identical on sampled
+    RowMaps (8-device subprocess);
+  * **gating** — ``plan_layout`` above the partition gate warns (naming
+    ``--plan-mode sampled``), below it and on the sampled path it stays
+    silent; ``plan_mode='auto'`` resolves exact below / sampled above.
+
+The slow acceptance test plans AND solves a 10⁷-row matrix-free RoadNet
+on the 8-device host mesh through the solve CLI (skipped when the host
+lacks the memory headroom).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import chi_metrics
+from repro.core.partition import partition_plan_default, plan_rowmap
+from repro.core.planner import comm_plan, plan_layout
+from repro.core.sketch import (CONF_LEVEL, ChiBand, coarsened_commvol_boundaries,
+                               default_fraction, estimate_comm,
+                               sampled_comm_plan)
+from repro.matrices import HubNet, RoadNet, SpinChainXXZ
+from tests._hypothesis_compat import given, settings, st
+from tests.conftest import run_distributed
+
+ROADNET_SMALL = dict(n=4000, w=2, m=256, k=4)
+HUBNET_SMALL = dict(n=4000, w=2, h=4, m=192, k=4)
+
+#: the D ≤ 1e6 seed families every quality assertion sweeps
+FAMILIES = [
+    ("spinchain", lambda: SpinChainXXZ(12, 6)),
+    ("roadnet", lambda: RoadNet(**ROADNET_SMALL)),
+    ("hubnet", lambda: HubNet(**HUBNET_SMALL)),
+]
+
+ENGINES = (("a2a", "cyclic"), ("compressed", "cyclic"),
+           ("compressed", "matching"))
+
+
+def _rel_err(est, cp_exact) -> float:
+    """Worst relative error of the estimate across χ metrics and the
+    engine-facing aggregates (L, total n_vc)."""
+    errs = [abs(getattr(est.chi, m) - getattr(cp_exact.chi, m))
+            / max(getattr(cp_exact.chi, m), 1e-12)
+            for m in ("chi1", "chi2", "chi3")]
+    errs.append(abs(est.L - cp_exact.L) / max(cp_exact.L, 1))
+    errs.append(abs(int(est.n_vc.sum()) - int(cp_exact.n_vc.sum()))
+                / max(int(cp_exact.n_vc.sum()), 1))
+    return max(errs)
+
+
+# --------------------------------------------------------------------------
+# convergence
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_full_fraction_is_exact(name, make):
+    """At fraction 1 the sampled pass IS the exact pass: pair_counts,
+    n_vc, L, and χ all equal ``comm_plan(exact=True)`` bit-for-bit."""
+    matrix = make()
+    est = estimate_comm(matrix, 8, fraction=1.0, seed=0)
+    cp_e = comm_plan(matrix, 8, exact=True)
+    assert np.array_equal(est.pair_counts, cp_e.pair_counts), name
+    assert np.array_equal(est.n_vc, cp_e.n_vc), name
+    assert est.L == cp_e.L
+    for m in ("chi1", "chi2", "chi3"):
+        assert getattr(est.chi, m) == pytest.approx(getattr(cp_e.chi, m))
+    # and the sampled plan's engine-exact wire numbers match too
+    cp_s = est.comm_plan()
+    for engine, sched in ENGINES:
+        assert cp_s.moved_entries_per_device(engine, sched) \
+            == cp_e.moved_entries_per_device(engine, sched), (name, engine)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=6, deadline=None)
+def test_sampled_chi_converges_as_fraction_to_one(seed):
+    """Property over seeds: the worst χ/L/n_vc relative error shrinks
+    along the fraction ladder 0.25 → 0.5 → 1.0 (within a fluctuation
+    allowance — separate subsamples), is bounded at half fraction, and
+    vanishes at fraction 1."""
+    matrix = RoadNet(**ROADNET_SMALL)
+    cp_e = comm_plan(matrix, 8, exact=True)
+    errs = [_rel_err(estimate_comm(matrix, 8, fraction=f, seed=seed), cp_e)
+            for f in (0.25, 0.5, 1.0)]
+    assert errs[2] == 0.0
+    assert errs[0] <= 0.5, errs
+    assert errs[1] <= 0.25, errs
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_half_fraction_within_planner_tolerance(name, make):
+    """At fraction 0.5 every engine's per-device moved entries stay
+    within 20% of exact on all three families — the same contract
+    ``scripts/check_comm.py`` gates on."""
+    matrix = make()
+    cp_s = sampled_comm_plan(matrix, 8, fraction=0.5, seed=0)
+    cp_e = comm_plan(matrix, 8, exact=True)
+    assert not cp_s.exact and cp_e.exact
+    for engine, sched in ENGINES:
+        m_s = cp_s.moved_entries_per_device(engine, sched)
+        m_e = cp_e.moved_entries_per_device(engine, sched)
+        assert abs(m_s - m_e) <= 0.2 * max(m_e, 1), (name, engine, m_s, m_e)
+
+
+# --------------------------------------------------------------------------
+# confidence bands
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_band_coverage_at_advertised_rate(name, make):
+    """Empirical coverage over seeds ≥ the advertised CONF_LEVEL: the
+    band of a fraction-0.35 estimate contains the exact χ (all three
+    metrics at once) in at least CONF_LEVEL of 24 seeded draws."""
+    matrix = make()
+    exact_chi = chi_metrics(matrix, 8)
+    seeds = range(24)
+    hits = 0
+    for seed in seeds:
+        est = estimate_comm(matrix, 8, fraction=0.35, seed=seed)
+        assert est.band.valid()
+        assert est.band.level == CONF_LEVEL
+        # a band that excluded its own center would be a broken error
+        # model regardless of the truth
+        assert est.band.contains(est.chi)
+        hits += est.band.contains(exact_chi)
+    assert hits / len(seeds) >= CONF_LEVEL, (name, hits)
+
+
+def test_band_validity_contract():
+    """ChiBand.valid() rejects malformed levels and inverted/negative
+    intervals; contains() is per-metric conjunction."""
+    good = ChiBand(0.8, (0.0, 1.0), (0.5, 2.0), (1.0, 4.0))
+    assert good.valid()
+    assert not ChiBand(1.0, (0.0, 1.0), (0.5, 2.0), (1.0, 4.0)).valid()
+    assert not ChiBand(0.8, (1.0, 0.5), (0.5, 2.0), (1.0, 4.0)).valid()
+    assert not ChiBand(0.8, (-0.1, 1.0), (0.5, 2.0), (1.0, 4.0)).valid()
+    chi = chi_metrics(RoadNet(**ROADNET_SMALL), 8)
+    wide = ChiBand(0.8, (0.0, 1e9), (0.0, 1e9), (0.0, 1e9))
+    assert wide.contains(chi)
+    miss_one = ChiBand(0.8, (0.0, 1e9), (0.0, 1e9),
+                       (chi.chi3 + 1.0, chi.chi3 + 2.0))
+    assert not miss_one.contains(chi)
+
+
+# --------------------------------------------------------------------------
+# determinism
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+def test_estimates_deterministic_per_seed(name, make):
+    """Same (seed, fraction) → bit-identical estimate (pair_counts,
+    band, sampled-row count); a different seed re-draws the sample."""
+    matrix = make()
+    a = estimate_comm(matrix, 8, fraction=0.4, seed=3)
+    b = estimate_comm(matrix, 8, fraction=0.4, seed=3)
+    assert np.array_equal(a.pair_counts, b.pair_counts)
+    assert np.array_equal(a.n_vc, b.n_vc)
+    assert a.band == b.band and a.sampled_rows == b.sampled_rows
+    c = estimate_comm(matrix, 8, fraction=0.4, seed=4)
+    assert c.sampled_rows > 0
+    assert not np.array_equal(a.pair_counts, c.pair_counts) \
+        or a.band != c.band, "different seeds drew an identical sample"
+    # the coarsened descent is deterministic too
+    b1 = coarsened_commvol_boundaries(matrix, 8, fraction=0.4, seed=3)
+    b2 = coarsened_commvol_boundaries(matrix, 8, fraction=0.4, seed=3)
+    assert np.array_equal(b1, b2)
+
+
+def test_default_fraction_targets_sample_not_nnz():
+    """default_fraction covers small instances fully and shrinks toward
+    the fixed sample target at generator scale — the sublinearity lever."""
+    assert default_fraction(1000, 8) == 1.0
+    assert default_fraction(65_536, 8) == 1.0
+    f7 = default_fraction(10_000_000, 8)
+    assert 0 < f7 < 0.01
+    assert f7 * 10_000_000 == pytest.approx(65_536, rel=0.01)
+
+
+# --------------------------------------------------------------------------
+# coarsened descent plan quality
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,make", FAMILIES)
+@pytest.mark.parametrize("P", [4, 8])
+def test_sampled_rowmap_wire_within_10pct_of_exact(name, make, P):
+    """On every D ≤ 1e6 seed family, the sampled-path RowMap's
+    **engine-exact** wire bytes (full-pattern ``comm_plan`` evaluated on
+    the sampled map) are within 10% of the exact planner's map, for all
+    three engines — and never worse than equal rows on the composite
+    objective the descent minimizes."""
+    matrix = make()
+    rm_s = plan_rowmap(matrix, P, balance="commvol", plan_mode="sampled")
+    rm_e = plan_rowmap(matrix, P, balance="commvol")
+    cp_s = comm_plan(matrix, P, rowmap=rm_s) if not rm_s.identity \
+        else comm_plan(matrix, P)
+    cp_e = comm_plan(matrix, P, rowmap=rm_e) if not rm_e.identity \
+        else comm_plan(matrix, P)
+    cp_rows = comm_plan(matrix, P)
+
+    def wire(cp):
+        return sum(cp.moved_entries_per_device(e, s) for e, s in ENGINES)
+
+    for engine, sched in ENGINES:
+        m_s = cp_s.moved_entries_per_device(engine, sched)
+        m_e = cp_e.moved_entries_per_device(engine, sched)
+        assert m_s <= 1.10 * max(m_e, 1), (name, P, engine, m_s, m_e)
+    assert wire(cp_s) <= wire(cp_rows), (name, P)
+
+
+def test_coarsened_boundaries_are_valid_cuts():
+    """Boundaries are monotone, span [0, D], have P+1 entries, and the
+    trivial regimes (P = 1, D ≤ P) collapse to equal cuts."""
+    matrix = RoadNet(**ROADNET_SMALL)
+    b = coarsened_commvol_boundaries(matrix, 8, fraction=0.5, seed=0)
+    assert b.shape == (9,) and b[0] == 0 and b[-1] == matrix.D
+    assert (np.diff(b) > 0).all()
+    assert np.array_equal(coarsened_commvol_boundaries(matrix, 1),
+                          np.array([0, matrix.D]))
+
+
+# --------------------------------------------------------------------------
+# gating: the warning and the plan_mode axis
+# --------------------------------------------------------------------------
+
+
+def _big_family():
+    # past PARTITION_PLAN_MAX_D = 1e6 but cheap to sample (w=1 band)
+    return RoadNet(n=1_200_000, w=1, m=400, k=2)
+
+
+def test_plan_layout_warns_above_gate_and_names_the_escape_hatch():
+    """Exact planning above the partition gate drops the balance axis
+    with a UserWarning naming the gate constants and --plan-mode
+    sampled. The sampled-χ comm pass is pre-seeded via n_vc_by_row so
+    the test never pays a full pattern pass."""
+    fam = _big_family()
+    assert not partition_plan_default(fam, 2)
+    n_vc = {2: np.array([400, 400], dtype=np.int64)}
+    with pytest.warns(UserWarning, match="--plan-mode sampled"):
+        plan_layout(fam, 2, n_search=4, splits=[(2, 1)],
+                    n_vc_by_row=n_vc, plan_mode="exact")
+    with pytest.warns(UserWarning, match="PARTITION_PLAN_MAX_D"):
+        plan_layout(fam, 2, n_search=4, splits=[(2, 1)],
+                    n_vc_by_row=n_vc, plan_mode="exact")
+
+
+def test_plan_layout_silent_below_gate_and_on_sampled_path():
+    """No warning below the gate (exact) nor above it when the caller
+    took the escape hatch (plan_mode='sampled')."""
+    small = RoadNet(**ROADNET_SMALL)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        plan_layout(small, 2, n_search=4, splits=[(2, 1)])
+        plan_layout(_big_family(), 2, n_search=4, splits=[(2, 1)],
+                    plan_mode="sampled")
+
+
+def test_plan_mode_auto_resolves_by_gate():
+    """partition_plan_default with a plan_mode: exact keeps the gate,
+    sampled/auto always plan."""
+    big, small = _big_family(), RoadNet(**ROADNET_SMALL)
+    assert partition_plan_default(small, 8, "exact")
+    assert not partition_plan_default(big, 8, "exact")
+    for mode in ("sampled", "auto"):
+        assert partition_plan_default(big, 8, mode)
+        assert partition_plan_default(small, 8, mode)
+    with pytest.raises(ValueError, match="rcm"):
+        plan_rowmap(small, 4, balance="commvol", reorder="rcm",
+                    plan_mode="sampled")
+
+
+def test_auto_mode_below_gate_matches_exact_bit_for_bit():
+    """On the seed families plan_mode='auto' (and even 'sampled', whose
+    default fraction covers these D fully) plans the identical RowMap to
+    'exact' — the byte-compatibility contract of the CLI default."""
+    for name, make in FAMILIES:
+        matrix = make()
+        assert default_fraction(matrix.D, 8) == 1.0
+        rm_e = plan_rowmap(matrix, 8, balance="commvol", plan_mode="exact")
+        rm_a = plan_rowmap(matrix, 8, balance="commvol", plan_mode="auto")
+        assert np.array_equal(rm_e.boundaries, rm_a.boundaries), name
+
+
+# --------------------------------------------------------------------------
+# twelve-engine bit-identity on a sampled RowMap
+# --------------------------------------------------------------------------
+
+
+def test_twelve_engines_bit_identical_on_sampled_rowmap():
+    """The full engine grid {a2a, compressed-cyclic, compressed-matching}
+    × {plain, overlap} × {kernel off, on} stays bit-for-bit identical on
+    a RowMap planned by the *sampled* path at forced half fraction (so
+    the map genuinely comes from a subsample), and extract() recovers
+    the CSR matvec — the acceptance criterion's grid check."""
+    rn = RoadNet(**ROADNET_SMALL)
+    rm = plan_rowmap(rn, 8, balance="commvol", plan_mode="sampled",
+                     sample_fraction=0.5)
+    out = run_distributed(f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.matrices import RoadNet
+from repro.core import make_solver_mesh, panel, build_dist_ell, make_spmv
+from repro.core.partition import plan_rowmap
+rn = RoadNet(**{ROADNET_SMALL!r})
+csr = rn.build_csr()
+rm = plan_rowmap(rn, 8, balance="commvol", plan_mode="sampled",
+                 sample_fraction=0.5)
+ell = build_dist_ell(csr, 4, rowmap=rm, split_halo=True)
+mesh = make_solver_mesh(4, 2)
+lay = panel(mesh)
+rng = np.random.default_rng(0)
+X0 = rng.standard_normal((rn.D, 8))
+Xp = rm.embed(X0)
+ENGINES = [(c, s, o, k) for c, s in (("a2a", "cyclic"),
+                                     ("compressed", "cyclic"),
+                                     ("compressed", "matching"))
+           for o in (False, True) for k in (False, True)]
+with mesh:
+    sh = lay.vec_sharding(mesh)
+    Xs = jax.device_put(jnp.asarray(Xp), sh)
+    Y = {{}}
+    for c, s, o, k in ENGINES:
+        f = jax.jit(make_spmv(mesh, lay, ell, comm=c, schedule=s,
+                              overlap=o, use_kernel=k))
+        Y[(c, s, o, k)] = np.asarray(f(Xs))
+base = Y[("a2a", "cyclic", False, False)]
+assert np.abs(rm.extract(base) - csr.matvec(X0)).max() < 1e-11
+for key, y in Y.items():
+    assert np.array_equal(y, base), key
+print("SAMPLED ROWMAP TWELVE ENGINES OK")
+""", timeout=1500)
+    assert "SAMPLED ROWMAP TWELVE ENGINES OK" in out
+
+
+# --------------------------------------------------------------------------
+# the 10^7-row acceptance run
+# --------------------------------------------------------------------------
+
+
+def _mem_available_gb() -> float:
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) / 1e6
+    except OSError:
+        pass
+    return 0.0
+
+
+@pytest.mark.slow
+def test_solve_cli_plans_and_solves_1e7_matfree():
+    """A D = 10⁷ matrix-free RoadNet plans (--plan-mode sampled) and
+    solves one macro-iteration on the 8-device host mesh through the
+    real CLI — no CSR is ever materialized (the family streams windowed
+    row_entries into the shard builds)."""
+    if _mem_available_gb() < 6.0:
+        pytest.skip("needs ~6 GB available memory for the 1e7 panels")
+    import os
+    import subprocess
+    import sys
+
+    from tests.conftest import SRC
+
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.solve", "--family", "RoadNet",
+         "--params", "n=10000000,w=1,m=1200,k=2", "--layout", "auto",
+         "--plan-mode", "sampled", "--n-target", "2", "--n-search", "8",
+         "--max-iters", "1"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
